@@ -1,0 +1,30 @@
+"""Shared benchmark helpers."""
+import time
+
+import numpy as np
+
+from repro.graph.generators import paper_dataset, rmat
+from repro.graph.preprocess import degree_and_densify
+
+
+def timeit(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def graph_standin(name):
+    src, dst = paper_dataset(name)
+    return degree_and_densify(src, dst, drop_self_loops=True)
+
+
+def small_rmat(scale=12, ef=16, seed=0):
+    src, dst = rmat(scale, edge_factor=ef, seed=seed)
+    return degree_and_densify(src, dst, drop_self_loops=True)
+
+
+def row(name, seconds, derived=""):
+    return f"{name},{seconds*1e6:.1f},{derived}"

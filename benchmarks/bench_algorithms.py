@@ -1,0 +1,29 @@
+"""Paper Fig 12 / Exp 7: BFS, WCC, SCC on the dataset stand-ins."""
+import time
+
+from repro.core import bfs, scc, wcc
+
+from benchmarks._util import graph_standin, row
+
+
+def run():
+    rows = []
+    for name in ["live-journal"]:
+        el = graph_standin(name)
+        for algo, fn in [("bfs", lambda: bfs(el, root=0, P=8)),
+                         ("wcc", lambda: wcc(el, P=8))]:
+            t0 = time.perf_counter()
+            fn()
+            rows.append((f"{algo}_{name}", time.perf_counter() - t0, f"n={el.n};m={el.m}"))
+        t0 = time.perf_counter()
+        scc(el, P=8)
+        rows.append((f"scc_{name}", time.perf_counter() - t0, f"n={el.n};m={el.m}"))
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Beyond-paper: smoke-config LM step timings per arch family (CPU)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM, SyntheticLMConfig
+from repro.optim import AdamW
+from repro.train.state import make_train_state
+from repro.train.step import make_train_step
+
+from benchmarks._util import row, timeit
+
+
+def run():
+    rows = []
+    for arch in ["gemma-2b", "deepseek-moe-16b", "falcon-mamba-7b", "recurrentgemma-9b"]:
+        cfg = get_config(arch, smoke=True)
+        opt = AdamW(learning_rate=1e-3)
+        step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+        state = make_train_state(cfg, opt, jax.random.PRNGKey(0))
+        data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, 64, 4))
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        state, _ = step(state, batch)  # compile
+
+        def one():
+            nonlocal state
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+
+        t = timeit(one, warmup=1, iters=3)
+        tokens = 4 * 64
+        rows.append((f"train_step_{arch}_smoke", t, f"tok/s={tokens/t:.0f}"))
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Tables V/VI + Fig 6: PageRank per-iteration on the twitter
+stand-in, engine strategies vs the TurboGraph-like baseline, and the
+measured MPU/TurboGraph-like I/O-ratio curve (Fig 6)."""
+from repro.core import NXGraphEngine, PageRank, build_dsss
+from repro.core.baselines import TurboGraphLikeEngine
+
+from benchmarks._util import graph_standin, row, timeit
+
+
+def run():
+    el = graph_standin("twitter")  # scaled-down, skew-matched stand-in
+    g = build_dsss(el, 12)
+    prog = PageRank()
+    rows = []
+    for label, make in [
+        ("nxgraph_spu", lambda: NXGraphEngine(g, prog, strategy="spu")),
+        ("nxgraph_fused", lambda: NXGraphEngine(g, prog, strategy="fused")),
+        ("turbograph_like", lambda: TurboGraphLikeEngine(g, prog)),
+    ]:
+        eng = make()
+        t = timeit(lambda: eng.run(1, tol=0.0), warmup=1, iters=2)
+        rows.append((f"pagerank_1iter_{label}", t, f"m={el.m}"))
+    # Fig 6: measured I/O ratio sweep
+    full = 2 * g.n_pad * prog.attr_bytes
+    for frac in [0.1, 0.3, 0.5, 0.7, 0.9]:
+        budget = int(full * frac)
+        mpu = NXGraphEngine(g, prog, strategy="mpu", memory_budget=budget).run(
+            1, tol=0.0
+        )
+        tg = TurboGraphLikeEngine(g, prog, memory_budget=budget).run(1, tol=0.0)
+        ratio = mpu.meters.bytes_total / max(tg.meters.bytes_total, 1)
+        rows.append(
+            (f"fig6_io_ratio_budget{frac:.1f}", 0.0, f"mpu/tg={ratio:.3f}")
+        )
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

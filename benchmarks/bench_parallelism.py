@@ -1,0 +1,55 @@
+"""Paper Fig 10 (thread sweep) — TPU analogue: device-grid sweep.
+
+The container has ONE physical core, so wall-time speedups cannot
+materialize; what the sweep shows is the work/collective split per grid
+(the structural scaling a real pod realizes). Subprocesses are used so
+each run can force its own host-device count.
+"""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks._util import row
+
+_CHILD = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import jax, numpy as np
+from repro.graph.generators import rmat
+from repro.graph.preprocess import degree_and_densify
+from repro.core.distributed import distributed_pagerank
+R, C = int(sys.argv[2]), int(sys.argv[3])
+src, dst = rmat(13, edge_factor=8, seed=1)
+el = degree_and_densify(src, dst, drop_self_loops=True)
+mesh = jax.make_mesh((R, C), ("data", "model"))
+t0 = time.time(); ranks, it = distributed_pagerank(el, mesh, iters=3); dt = (time.time()-t0)/3
+print(json.dumps({"sec_per_iter": dt, "m": int(el.m)}))
+"""
+
+
+def run():
+    rows = []
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(here, "src"))
+    for n_dev, r, c in [(1, 1, 1), (2, 2, 1), (4, 2, 2), (8, 4, 2)]:
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD, str(n_dev), str(r), str(c)],
+            capture_output=True,
+            text=True,
+            env=env,
+            timeout=600,
+        )
+        line = out.stdout.strip().splitlines()[-1]
+        d = json.loads(line)
+        mteps = d["m"] / d["sec_per_iter"] / 1e6
+        rows.append((f"grid_{r}x{c}", d["sec_per_iter"], f"MTEPS={mteps:.1f}"))
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

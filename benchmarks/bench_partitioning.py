@@ -1,0 +1,27 @@
+"""Paper Fig 7: interval-count (P) sweep for a global query (PageRank)
+and a targeted query (BFS — activity skipping sensitivity)."""
+from repro.core import NXGraphEngine, PageRank, BFS, build_dsss
+
+from benchmarks._util import row, small_rmat, timeit
+
+
+def run():
+    el = small_rmat(13, 8)
+    rows = []
+    for P in [2, 4, 8, 16, 32]:
+        g = build_dsss(el, P)
+        eng = NXGraphEngine(g, PageRank(), strategy="spu")
+        t = timeit(lambda: eng.run(3, tol=0.0), warmup=1, iters=2)
+        rows.append((f"pagerank_P{P}", t, f"m={el.m}"))
+        engb = NXGraphEngine(g, BFS(), strategy="spu")
+        tb = timeit(lambda: engb.run(10**6, root=0), warmup=1, iters=2)
+        rows.append((f"bfs_P{P}", tb, f"m={el.m}"))
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

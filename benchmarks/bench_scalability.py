@@ -1,0 +1,29 @@
+"""Paper Fig 11: MTEPS vs graph scale (delaunay-like mesh family)."""
+from repro.core import NXGraphEngine, PageRank, build_dsss
+from repro.graph.generators import random_geometric
+from repro.graph.preprocess import degree_and_densify
+
+from benchmarks._util import row, timeit
+
+
+def run():
+    rows = []
+    for scale in [13, 14, 15, 16]:
+        src, dst = random_geometric(1 << scale, seed=scale)
+        el = degree_and_densify(src, dst, drop_self_loops=True)
+        g = build_dsss(el, 8)
+        eng = NXGraphEngine(g, PageRank(), strategy="fused")
+        res = eng.run(5, tol=0.0)
+        t = timeit(lambda: eng.run(5, tol=0.0), warmup=0, iters=2) / 5
+        rows.append(
+            (f"delaunay_n{scale}", t, f"m={el.m};MTEPS={el.m/t/1e6:.1f}")
+        )
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

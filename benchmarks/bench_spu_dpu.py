@@ -1,0 +1,31 @@
+"""Paper Fig 8: SPU vs DPU wall time + slow-tier bytes (PageRank, BFS)."""
+from repro.core import NXGraphEngine, PageRank, BFS, build_dsss
+
+from benchmarks._util import row, small_rmat, timeit
+
+
+def run():
+    rows = []
+    for scale, label in [(12, "small"), (14, "medium")]:
+        el = small_rmat(scale, 12, seed=scale)
+        g = build_dsss(el, 8)
+        for strat in ["spu", "dpu"]:
+            eng = NXGraphEngine(g, PageRank(), strategy=strat)
+            res = eng.run(3, tol=0.0)
+            t = timeit(lambda: eng.run(3, tol=0.0), warmup=0, iters=2)
+            rows.append(
+                (
+                    f"pagerank_{label}_{strat}",
+                    t,
+                    f"bytes/iter={res.meters.per_iteration().bytes_total:.0f}",
+                )
+            )
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Table IV: dst-sorted fine-grained vs src-sorted coarse-grained.
+
+The paper's 3.5x wall-clock speedup comes from eliminating write conflicts
+between CPU worker threads — unreproducible on this 1-core container (both
+layouts lower to the same sequential scatter). What IS measurable here is
+the structural property the TPU adaptation depends on (DESIGN.md §2):
+
+  * slot-window spread: max distinct hub slots per E_BLK edge block.
+    dst-sorted guarantees spread <= E_BLK, which is exactly what lets
+    kernels/dsss_spmv.py use a dense one-hot MXU reduction window.
+    src-sorted blocks spread across the whole interval -> no bounded
+    window -> no MXU path (the TPU analogue of "write conflicts").
+  * dst-run-length: mean contiguous run of equal destinations (the
+    paper's cache-locality argument for the secondary source sort).
+"""
+import numpy as np
+
+from repro.core import NXGraphEngine, PageRank, build_dsss
+from repro.core.baselines import build_graphchi_like
+from repro.kernels.dsss_spmv import E_BLK
+
+from benchmarks._util import row, small_rmat, timeit
+
+
+def _spread_stats(g):
+    """Max hub-slot spread per E_BLK block, across all sub-shards."""
+    spreads = []
+    runs = []
+    for i in range(g.P):
+        for j in range(g.P):
+            ss = g.subshard(i, j)
+            if ss.num_edges == 0:
+                continue
+            inv = ss.hub_inv
+            for lo in range(0, len(inv), E_BLK):
+                blk = inv[lo : lo + E_BLK]
+                spreads.append(int(blk.max() - blk.min()) + 1)
+            d = ss.dst_local
+            runs.append(len(d) / max(1, int((np.diff(d) != 0).sum()) + 1))
+    return max(spreads), float(np.mean(runs))
+
+
+def run():
+    el = small_rmat(13, 16)
+    rows = []
+    results = {}
+    for label, g in [
+        ("dst_sorted_fine", build_dsss(el, 8)),
+        ("src_sorted_coarse", build_graphchi_like(el, 8)),
+    ]:
+        eng = NXGraphEngine(g, PageRank(), strategy="spu")
+        t = timeit(lambda: eng.run(3, tol=0.0), warmup=1, iters=3)
+        spread, run_len = _spread_stats(g)
+        mxu_ok = spread <= E_BLK
+        results[label] = t
+        rows.append(
+            (
+                label,
+                t,
+                f"max_slot_spread={spread};mxu_window_ok={mxu_ok};"
+                f"mean_dst_run={run_len:.2f}",
+            )
+        )
+    speedup = results["src_sorted_coarse"] / results["dst_sorted_fine"]
+    rows.append(
+        (
+            "table4_speedup_dst_over_src",
+            0.0,
+            f"{speedup:.2f}x(cpu-1core;paper-3.5x-is-thread-conflict-bound)",
+        )
+    )
+    return [row(*r) for r in rows]
+
+
+def main():
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

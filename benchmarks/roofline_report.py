@@ -1,0 +1,50 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+import glob
+import json
+import os
+
+
+def load_all(out_dir: str = "results/dryrun"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows, mesh="single"):
+    rows = [r for r in rows if r["mesh"] == mesh]
+    hdr = (
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | useful FLOPs | roofline frac | peak GB/chip | fits |"
+    )
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        peak = r.get("memory", {}).get("peak_estimate", r.get("bytes_per_chip_peak", 0)) or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {peak/1e9:.1f} | "
+            f"{'Y' if peak < 16e9 else 'OVER'} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    for mesh in ("single", "multi"):
+        print(f"\n### mesh: {mesh}\n")
+        print(fmt_table(rows, mesh))
+    # hillclimb candidates
+    single = [r for r in rows if r["mesh"] == "single" and not r["arch"].startswith("graph:")]
+    if single:
+        worst = min(single, key=lambda r: r["roofline_fraction"])
+        coll = max(single, key=lambda r: r["collective_s"])
+        print("\nworst roofline fraction:", worst["arch"], worst["shape"], f"{worst['roofline_fraction']:.3f}")
+        print("most collective-bound:  ", coll["arch"], coll["shape"], f"{coll['collective_s']*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end driver (the paper's flagship task): PageRank on the
+twitter-scale stand-in with adaptive strategy selection and MTEPS.
+
+    PYTHONPATH=src python examples/pagerank_e2e.py [--iters 10]
+"""
+import argparse
+import time
+
+from repro.core import NXGraphEngine, PageRank, build_dsss
+from repro.graph.generators import paper_dataset
+from repro.graph.preprocess import degree_and_densify
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--P", type=int, default=12)
+    ap.add_argument("--budget-frac", type=float, default=None,
+                    help="memory budget as a fraction of full working set")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    src, dst = paper_dataset("twitter")
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    g = build_dsss(el, args.P)
+    print(f"preprocess: n={g.n} m={g.m} P={g.P} ({time.time()-t0:.1f}s)")
+
+    budget = None
+    if args.budget_frac is not None:
+        budget = int((2 * g.n_pad * 8 + g.m * 8) * args.budget_frac)
+    eng = NXGraphEngine(g, PageRank(), strategy="auto", memory_budget=budget)
+    print(f"strategy: {eng.choice.strategy} (Q={eng.choice.Q})")
+    res = eng.run(max_iters=args.iters, tol=0.0)
+    m = res.meters
+    print(
+        f"{res.iterations} iterations in {m.wall_seconds:.2f}s "
+        f"({m.wall_seconds/res.iterations:.3f}s/iter, {m.mteps():.1f} MTEPS)"
+    )
+    print(f"slow-tier: read {m.bytes_read/1e6:.1f}MB write {m.bytes_written/1e6:.1f}MB")
+    print("paper reference: 2.05s/iter on real Twitter (1.47B edges), 1 PC")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: build a graph, run PageRank under every update strategy.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import NXGraphEngine, PageRank, build_dsss
+from repro.graph.generators import rmat
+from repro.graph.preprocess import degree_and_densify
+
+
+def main():
+    # 1. raw edges -> degreeing (dense ids) -> DSSS sharding
+    src, dst = rmat(12, edge_factor=8, seed=0)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    graph = build_dsss(el, P=8)
+    print(f"graph: n={graph.n} m={graph.m} P={graph.P} "
+          f"hub-factor d={graph.mean_hub_in_degree():.1f}")
+
+    # 2. run PageRank under each strategy — identical results, different
+    #    slow-tier traffic (paper Table II)
+    for strategy in ["spu", "dpu", "mpu", "fused"]:
+        eng = NXGraphEngine(
+            graph,
+            PageRank(),
+            strategy=strategy,
+            memory_budget=graph.n_pad * 8,  # force MPU to mix
+        )
+        res = eng.run(max_iters=20, tol=1e-9)
+        per = res.meters.per_iteration()
+        top = np.argsort(res.output)[-3:][::-1]
+        print(
+            f"{strategy:6s} iters={res.iterations:2d} "
+            f"read/iter={per.bytes_read:9.0f}B write/iter={per.bytes_written:8.0f}B "
+            f"top vertices={top.tolist()}"
+        )
+
+
+if __name__ == "__main__":
+    main()

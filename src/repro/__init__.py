@@ -1,0 +1,1 @@
+"""repro: NXgraph-on-TPU — graph engine + LM framework (see DESIGN.md)."""

@@ -1,0 +1,4 @@
+"""Checkpointing: async npz snapshots with keep-N and elastic restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

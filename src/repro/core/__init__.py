@@ -1,0 +1,59 @@
+"""NXgraph core: the paper's contribution as a composable JAX module.
+
+- :mod:`repro.core.dsss` — Destination-Sorted Sub-Shard structure (§II-A/III-A)
+- :mod:`repro.core.engine` — SPU/DPU/MPU update engine + fused fast path (§III-B)
+- :mod:`repro.core.vertex_programs` — Initialize/Update/Output programs (§II-B)
+- :mod:`repro.core.iomodel` — Table II I/O closed forms + adaptive selection
+- :mod:`repro.core.algorithms` — PageRank/BFS/WCC/SSSP/SCC drivers (§IV)
+- :mod:`repro.core.baselines` — TurboGraph-like + GraphChi-like baselines (§III-C)
+- :mod:`repro.core.distributed` — shard_map 2-D partitioned multi-pod engine
+"""
+from repro.core.dsss import DSSSGraph, SubShard, build_dsss
+from repro.core.engine import Meters, NXGraphEngine, Result
+from repro.core.iomodel import (
+    IOParams,
+    StrategyChoice,
+    dpu_io,
+    mpu_io,
+    mpu_q,
+    select_strategy,
+    spu_io,
+    turbograph_like_io,
+)
+from repro.core.vertex_programs import (
+    BFS,
+    INF_DEPTH,
+    PageRank,
+    SSSP,
+    VertexProgram,
+    WCC,
+)
+from repro.core.algorithms import bfs, pagerank, scc, sssp, wcc
+
+__all__ = [
+    "DSSSGraph",
+    "SubShard",
+    "build_dsss",
+    "Meters",
+    "NXGraphEngine",
+    "Result",
+    "IOParams",
+    "StrategyChoice",
+    "spu_io",
+    "dpu_io",
+    "mpu_io",
+    "mpu_q",
+    "select_strategy",
+    "turbograph_like_io",
+    "VertexProgram",
+    "PageRank",
+    "BFS",
+    "WCC",
+    "SSSP",
+    "INF_DEPTH",
+    "pagerank",
+    "bfs",
+    "wcc",
+    "sssp",
+    "scc",
+]

@@ -1,0 +1,118 @@
+"""Baseline update strategies the paper compares against (§III-C, §IV-B1).
+
+1. **TurboGraph-like** (also GridGraph's scheme): no hubs; for every
+   destination interval, *all* source intervals are re-loaded from the slow
+   tier. With the I/O-optimal partitioning ``P ≈ 2n·Ba/B_M`` the per-
+   iteration traffic is ``read = m·Be + n·P·Ba``, ``write = n·Ba`` —
+   linear in P, which is the scaling weakness paper Fig. 6 exposes.
+
+2. **GraphChi-like (src-sorted, coarse-grained)**: the same engine but the
+   sub-shards keep GraphChi's source-major edge order, so the per-block
+   reduction cannot use sorted-segment semantics and falls back to random
+   scatter — the paper's Table IV ablation. Build the graph with
+   ``build_dsss(el, P, src_sorted=True)`` and pass it to the normal
+   :class:`~repro.core.engine.NXGraphEngine`; the scatter-order penalty is
+   what bench_subshard_order.py measures.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dsss import DSSSGraph, build_dsss
+from repro.core.engine import Meters, NXGraphEngine, Result
+from repro.core.iomodel import IOParams
+from repro.graph.preprocess import EdgeList
+
+__all__ = ["TurboGraphLikeEngine", "turbograph_like_partitions", "build_graphchi_like"]
+
+
+def turbograph_like_partitions(n: int, Ba: int, B_M: int) -> int:
+    """The strategy's I/O-optimal P: smallest P with 2·(n/P)·Ba ≤ B_M."""
+    return max(1, int(np.ceil(2 * n * Ba / max(B_M, 1))))
+
+
+def build_graphchi_like(el: EdgeList, P: int) -> DSSSGraph:
+    """Source-sorted sub-shards (GraphChi PSW layout) for the Table IV ablation."""
+    return build_dsss(el, P, src_sorted=True)
+
+
+class TurboGraphLikeEngine(NXGraphEngine):
+    """TurboGraph/GridGraph-style block-load schedule (paper §III-C).
+
+    Iterates destination intervals; for each, streams every source interval
+    plus the connecting sub-shard. Produces identical results to SPU (same
+    semiring), but meters the strategy's characteristic ``n·P·Ba``
+    interval re-read traffic. Used by bench_pagerank_systems.py to
+    reproduce the paper's Fig. 6 I/O-ratio curve with *measured* bytes.
+    """
+
+    def __init__(self, graph: DSSSGraph, program, *, memory_budget: int | None = None, Be: int = 8, Bv: int = 4):
+        super().__init__(
+            graph, program, strategy="spu", memory_budget=None, Be=Be, Bv=Bv
+        )
+        # Overwrite the auto-selected plan: this engine has exactly one
+        # schedule, and nothing is resident between blocks.
+        from repro.core.iomodel import StrategyChoice
+
+        self.choice = StrategyChoice("turbograph-like", 0, 0.0, 0.0)
+        self.memory_budget = memory_budget
+        self.resident = set()
+
+    def _dispatch(self, strat, attrs, active, aux, valid, tol, meters):
+        return self._iteration_turbograph(attrs, active, aux, valid, tol, meters)
+
+    def _iteration_turbograph(self, attrs, active, aux, valid, tol, meters: Meters):
+        import jax.numpy as jnp
+
+        from repro.core.engine import (
+            _apply_interval,
+            _block_gather_reduce,
+        )
+        from repro.core.vertex_programs import reduce_identity
+
+        g, prog = self.g, self.program
+        isz = g.interval_size
+        globals_ = prog.pre_iteration(attrs.reshape(-1), aux)
+        ident = reduce_identity(prog.reduce, prog.dtype)
+        rows = self._rows_to_process(active)
+        iv_bytes = isz * self.params.Ba
+        new_rows = []
+        active_next = np.zeros(g.P, dtype=bool)
+        for j in range(g.P):
+            acc = jnp.full(isz, ident, prog.dtype)
+            touched = False
+            meters.bytes_read_intervals += iv_bytes  # load destination block
+            for i in rows:
+                blk = self.blocks.get((i, j))
+                if blk is None:
+                    continue
+                # Re-load the source interval for every (i, j) pair — the
+                # n·P·Ba term that the paper's Fig. 6 analysis penalizes.
+                meters.bytes_read_intervals += iv_bytes
+                meters.bytes_read_edges += blk["e"] * self.Be
+                meters.blocks_processed += 1
+                meters.edges_processed += blk["e"]
+                acc = _block_gather_reduce(
+                    prog,
+                    attrs[i],
+                    self._interval_aux(aux, i),
+                    self._interval_aux(aux, j) if prog.needs_dst_aux else {},
+                    blk["src_local"],
+                    blk["dst_local"],
+                    blk["weights"],
+                    blk["e_valid"],
+                    acc,
+                    num_segments=isz,
+                    has_weights=self.has_weights,
+                )
+                touched = True
+            if not touched and prog.monotone:
+                new_rows.append(attrs[j])
+                continue
+            new_j, changed = _apply_interval(
+                prog, attrs[j], acc, self._interval_aux(aux, j), globals_, valid[j], tol
+            )
+            new_rows.append(new_j)
+            active_next[j] = bool(changed)
+            meters.bytes_written_intervals += iv_bytes
+        return jnp.stack(new_rows), active_next

@@ -1,0 +1,321 @@
+"""Vertex programs — the paper's Initialize / Update / Output model (§II-B).
+
+A :class:`VertexProgram` factors the per-sub-shard ``Update`` into the
+semiring decomposition every strategy (SPU/DPU/MPU) shares:
+
+  ``contribution = gather(src_attr, edge_weight, src_aux)``  (per edge)
+  ``reduced      = ⊕ contributions grouped by destination``  (sum/min/max)
+  ``new_attr     = apply(old_attr, reduced, aux, globals)``  (per vertex)
+
+``reduce`` being an associative/commutative monoid is what makes hubs (DPU)
+correct: a hub stores the partial ⊕ of one sub-shard, and FromHub ⊕-folds
+hubs — exactly the paper's incremental-attribute argument.
+
+``monotone=True`` marks programs where re-applying an old contribution is a
+no-op (min/max with ``apply ⊇ old``); only those may skip inactive source
+intervals (paper's activity tracking). PageRank is not monotone: it stops
+only when *every* interval is inactive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "VertexProgram",
+    "PageRank",
+    "BFS",
+    "WCC",
+    "SSSP",
+    "MaxLabelForward",
+    "ReachBackward",
+    "INF_DEPTH",
+]
+
+INF_DEPTH = np.int32(2**30)
+
+
+def reduce_identity(reduce: str, dtype) -> Any:
+    if reduce == "sum":
+        return jnp.zeros((), dtype)
+    if reduce == "min":
+        return (
+            jnp.array(INF_DEPTH, dtype)
+            if jnp.issubdtype(dtype, jnp.integer)
+            else jnp.array(jnp.inf, dtype)
+        )
+    if reduce == "max":
+        return (
+            jnp.array(-INF_DEPTH, dtype)
+            if jnp.issubdtype(dtype, jnp.integer)
+            else jnp.array(-jnp.inf, dtype)
+        )
+    raise ValueError(f"unknown reduce {reduce!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """Base class. Subclasses override gather/apply/changed as pure fns."""
+
+    name: str = "base"
+    reduce: str = "sum"  # "sum" | "min" | "max"
+    dtype: Any = jnp.float32
+    monotone: bool = False
+    attr_bytes: int = 4  # Ba in the paper's I/O model
+    needs_dst_aux: bool = False  # gather also sees destination-side aux
+
+    # -- lifecycle ----------------------------------------------------------
+    def init_attrs(self, g, **kw) -> jnp.ndarray:  # (n_pad,)
+        raise NotImplementedError
+
+    def init_active(self, g, **kw) -> np.ndarray:  # (P,) bool
+        return np.ones(g.P, dtype=bool)
+
+    def make_aux(self, g, **kw) -> dict[str, jnp.ndarray]:
+        """Per-vertex auxiliary arrays, gathered alongside attributes."""
+        return {}
+
+    def pre_iteration(self, attrs: jnp.ndarray, aux) -> dict[str, jnp.ndarray]:
+        """Iteration-level scalars (e.g. PageRank dangling mass)."""
+        return {}
+
+    # -- semiring pieces (pure, jit-traceable) -------------------------------
+    def gather(self, src_vals, weights, src_aux, dst_aux=None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def apply(self, old, reduced, aux, globals_) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def changed(self, old, new, tol) -> jnp.ndarray:
+        return jnp.abs(new - old) > tol
+
+    def output(self, attrs: jnp.ndarray, g):
+        return np.asarray(attrs[: g.n])
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRank(VertexProgram):
+    """Synchronous PageRank with dangling-mass redistribution.
+
+    Matches ``networkx.pagerank``'s iteration:
+      ``p' = damping · (Aᵀ (p/outdeg) + dangling/n) + (1−damping)/n``.
+    """
+
+    name: str = "pagerank"
+    reduce: str = "sum"
+    dtype: Any = jnp.float32
+    monotone: bool = False
+    attr_bytes: int = 8  # paper assumes 8-byte attributes for PageRank
+    damping: float = 0.85
+
+    def init_attrs(self, g, **kw):
+        a = jnp.zeros(g.n_pad, self.dtype)
+        return a.at[: g.n].set(jnp.asarray(1.0 / g.n, self.dtype))
+
+    def make_aux(self, g, **kw):
+        deg = np.asarray(g.out_degree, np.float32)
+        inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0).astype(np.float32)
+        dangling = ((deg == 0) & (np.arange(g.n_pad) < g.n)).astype(np.float32)
+        return {
+            "inv_out_degree": jnp.asarray(inv),
+            "dangling": jnp.asarray(dangling),
+            "inv_n": jnp.asarray(1.0 / g.n, jnp.float32),
+        }
+
+    def pre_iteration(self, attrs, aux):
+        mass = jnp.sum(attrs * aux["dangling"].reshape(attrs.shape))
+        return {"dangling_mass": mass}
+
+    def gather(self, src_vals, weights, src_aux, dst_aux=None):
+        contrib = src_vals * src_aux["inv_out_degree"]
+        if weights is not None:
+            contrib = contrib * weights
+        return contrib
+
+    def apply(self, old, reduced, aux, globals_):
+        base = (1.0 - self.damping) * aux["inv_n"]
+        return base + self.damping * (
+            reduced + globals_["dangling_mass"] * aux["inv_n"]
+        )
+
+    def output(self, attrs, g):
+        return np.asarray(attrs[: g.n], np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class BFS(VertexProgram):
+    """Paper Algorithms 2–4: min-depth propagation from a root."""
+
+    name: str = "bfs"
+    reduce: str = "min"
+    dtype: Any = jnp.int32
+    monotone: bool = True
+    attr_bytes: int = 4
+
+    def init_attrs(self, g, root: int = 0, **kw):
+        a = jnp.full(g.n_pad, INF_DEPTH, self.dtype)
+        return a.at[root].set(0)
+
+    def init_active(self, g, root: int = 0, **kw):
+        act = np.zeros(g.P, dtype=bool)
+        act[root // g.interval_size] = True
+        return act
+
+    def gather(self, src_vals, weights, src_aux, dst_aux=None):
+        # depth+1, saturating so INF stays INF.
+        return jnp.where(src_vals >= INF_DEPTH, INF_DEPTH, src_vals + 1)
+
+    def apply(self, old, reduced, aux, globals_):
+        return jnp.minimum(old, reduced)
+
+    def changed(self, old, new, tol):
+        return new != old
+
+    def output(self, attrs, g):
+        """Paper Algorithm 4: max finite depth (spanning-tree depth)."""
+        a = np.asarray(attrs[: g.n])
+        finite = a[a < INF_DEPTH]
+        return int(finite.max()) if finite.size else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WCC(VertexProgram):
+    """Weakly connected components: min-label propagation.
+
+    Run on the *symmetrized* graph (``EdgeList.symmetrized()``).
+    """
+
+    name: str = "wcc"
+    reduce: str = "min"
+    dtype: Any = jnp.int32
+    monotone: bool = True
+    attr_bytes: int = 4
+
+    def init_attrs(self, g, **kw):
+        a = jnp.full(g.n_pad, INF_DEPTH, self.dtype)
+        return a.at[: g.n].set(jnp.arange(g.n, dtype=self.dtype))
+
+    def gather(self, src_vals, weights, src_aux, dst_aux=None):
+        return src_vals
+
+    def apply(self, old, reduced, aux, globals_):
+        return jnp.minimum(old, reduced)
+
+    def changed(self, old, new, tol):
+        return new != old
+
+
+@dataclasses.dataclass(frozen=True)
+class SSSP(VertexProgram):
+    """Single-source shortest path (weighted Bellman-Ford flavour)."""
+
+    name: str = "sssp"
+    reduce: str = "min"
+    dtype: Any = jnp.float32
+    monotone: bool = True
+    attr_bytes: int = 4
+
+    def init_attrs(self, g, root: int = 0, **kw):
+        a = jnp.full(g.n_pad, jnp.inf, self.dtype)
+        return a.at[root].set(0.0)
+
+    def init_active(self, g, root: int = 0, **kw):
+        act = np.zeros(g.P, dtype=bool)
+        act[root // g.interval_size] = True
+        return act
+
+    def gather(self, src_vals, weights, src_aux, dst_aux=None):
+        w = weights if weights is not None else 1.0
+        return src_vals + w
+
+    def apply(self, old, reduced, aux, globals_):
+        return jnp.minimum(old, reduced)
+
+    def changed(self, old, new, tol):
+        return new < old
+
+
+# ---------------------------------------------------------------------------
+# SCC building blocks (forward-backward colouring; driver in algorithms.py).
+# Masked variants: vertices with mask == 0 are spectators — they neither
+# contribute nor update, which lets the SCC driver peel extracted components.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MaxLabelForward(VertexProgram):
+    """Forward max-label propagation over the masked subgraph."""
+
+    name: str = "scc_fwd"
+    reduce: str = "max"
+    dtype: Any = jnp.int32
+    monotone: bool = True
+    attr_bytes: int = 4
+
+    def init_attrs(self, g, labels=None, **kw):
+        if labels is not None:
+            return jnp.asarray(labels, self.dtype)
+        a = jnp.full(g.n_pad, -INF_DEPTH, self.dtype)
+        return a.at[: g.n].set(jnp.arange(g.n, dtype=self.dtype))
+
+    def make_aux(self, g, mask=None, **kw):
+        if mask is None:
+            mask = np.ones(g.n_pad, np.int32)
+        return {"mask": jnp.asarray(mask, jnp.int32)}
+
+    def gather(self, src_vals, weights, src_aux, dst_aux=None):
+        return jnp.where(src_aux["mask"] > 0, src_vals, -INF_DEPTH)
+
+    def apply(self, old, reduced, aux, globals_):
+        new = jnp.maximum(old, reduced)
+        return jnp.where(aux["mask"] > 0, new, old)
+
+    def changed(self, old, new, tol):
+        return new != old
+
+
+@dataclasses.dataclass(frozen=True)
+class ReachBackward(VertexProgram):
+    """Backward reachability within a colour class (run on transpose graph).
+
+    attr is 1 for vertices known to reach their colour root, else 0; a vertex
+    inherits reachability from an out-neighbour of the *same colour*.
+    """
+
+    name: str = "scc_bwd"
+    reduce: str = "max"
+    dtype: Any = jnp.int32
+    monotone: bool = True
+    attr_bytes: int = 4
+    needs_dst_aux: bool = True
+
+    def init_attrs(self, g, reach=None, **kw):
+        assert reach is not None, "seed reach with colour roots"
+        return jnp.asarray(reach, self.dtype)
+
+    def make_aux(self, g, mask=None, colors=None, **kw):
+        assert colors is not None
+        if mask is None:
+            mask = np.ones(g.n_pad, np.int32)
+        return {
+            "mask": jnp.asarray(mask, jnp.int32),
+            "color": jnp.asarray(colors, jnp.int32),
+        }
+
+    def gather(self, src_vals, weights, src_aux, dst_aux=None):
+        # On the transpose graph, "src" is the original edge's destination:
+        # a contribution is valid only when both endpoints share a colour
+        # (SCCs never straddle colour classes) and the source can reach
+        # its colour root.
+        live = (src_aux["mask"] > 0) & (src_vals > 0)
+        same_color = src_aux["color"] == dst_aux["color"]
+        return jnp.where(live & same_color, 1, 0).astype(self.dtype)
+
+    def apply(self, old, reduced, aux, globals_):
+        hit = (reduced > 0) & (aux["mask"] > 0)
+        return jnp.where(hit, jnp.ones_like(old), old)
+
+    def changed(self, old, new, tol):
+        return new != old

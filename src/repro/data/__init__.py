@@ -1,0 +1,4 @@
+"""Data pipelines (synthetic, deterministic, host-sharded)."""
+from repro.data.pipeline import SyntheticLM, SyntheticLMConfig, batches
+
+__all__ = ["SyntheticLM", "SyntheticLMConfig", "batches"]

@@ -1,0 +1,32 @@
+"""Graph substrate: generators, preprocessing (degreeing), and I/O.
+
+This package provides everything *below* the NXgraph core: raw edge lists,
+synthetic graph generators matched to the paper's benchmark families, the
+"degreeing" pass (sparse index -> dense id densification, paper §III-A), and
+binary on-disk formats.
+"""
+from repro.graph.generators import (
+    rmat,
+    erdos_renyi,
+    random_geometric,
+    ring,
+    star,
+    complete,
+    paper_dataset,
+)
+from repro.graph.preprocess import degree_and_densify, EdgeList
+from repro.graph.io import save_edges, load_edges
+
+__all__ = [
+    "rmat",
+    "erdos_renyi",
+    "random_geometric",
+    "ring",
+    "star",
+    "complete",
+    "paper_dataset",
+    "degree_and_densify",
+    "EdgeList",
+    "save_edges",
+    "load_edges",
+]

@@ -1,0 +1,159 @@
+"""Synthetic graph generators.
+
+The container is offline, so the paper's real-world datasets (LiveJournal,
+Twitter, Yahoo-web) are stood in for by RMAT graphs with matched degree skew,
+and the delaunay_nXX synthetic family by 2-D random-geometric graphs (both
+are planar-ish meshes with low, near-uniform degree, which is the property
+the paper's scalability experiment exercises).
+
+All generators are deterministic given ``seed`` and return ``(src, dst)``
+int64 numpy arrays of *raw indices* (possibly sparse / with duplicates),
+i.e. exactly what the degreeing pass (paper §III-A) expects as input.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "rmat",
+    "erdos_renyi",
+    "random_geometric",
+    "ring",
+    "star",
+    "complete",
+    "paper_dataset",
+]
+
+
+def rmat(
+    scale: int,
+    edge_factor: int = 16,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """R-MAT power-law generator (Chakrabarti et al.), Graph500 defaults.
+
+    ``2**scale`` vertices, ``edge_factor * 2**scale`` directed edges.
+    The (a, b, c, d) quadrant probabilities reproduce the heavy skew of
+    social graphs such as Twitter; with a == b == c == d it degenerates to
+    Erdos-Renyi.
+    """
+    n_bits = scale
+    m = edge_factor << scale
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    d = 1.0 - a - b - c
+    if d < -1e-9:
+        raise ValueError("RMAT probabilities must sum to <= 1")
+    # Draw each address bit independently: quadrant choice per bit level.
+    for bit in range(n_bits):
+        r = rng.random(m)
+        # quadrant thresholds: [a, a+b, a+b+c, 1]
+        src_bit = (r >= a + b).astype(np.int64)  # bottom half rows -> c or d
+        in_bottom = r >= a + b
+        in_right_top = (r >= a) & (r < a + b)
+        in_right_bottom = r >= a + b + c
+        dst_bit = (in_right_top | in_right_bottom).astype(np.int64)
+        src |= src_bit << bit
+        dst |= dst_bit << bit
+        del in_bottom
+    return src, dst
+
+
+def erdos_renyi(n: int, m: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """G(n, m) uniform random directed graph (with possible duplicates)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m, dtype=np.int64)
+    dst = rng.integers(0, n, size=m, dtype=np.int64)
+    return src, dst
+
+
+def random_geometric(
+    n: int, k: int = 6, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Approximate delaunay_nXX: connect each point to its ~k nearest
+    neighbours on a 2-D grid-bucketed unit square.
+
+    True Delaunay triangulation needs scipy (not installed); k-NN on a
+    bucketed grid yields the same structural class the paper uses the
+    delaunay graphs for — planar-ish, bounded near-uniform degree meshes.
+    Returns a symmetric (both directions) edge list.
+    """
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    g = max(1, int(np.sqrt(n / 4)))
+    cell = np.minimum((pts * g).astype(np.int64), g - 1)
+    cell_id = cell[:, 0] * g + cell[:, 1]
+    order = np.argsort(cell_id, kind="stable")
+    sorted_ids = cell_id[order]
+    srcs: list[np.ndarray] = []
+    dsts: list[np.ndarray] = []
+    # Within each bucket connect consecutive points (by index order) in a
+    # small sliding window — O(n k) and spatially local.
+    starts = np.searchsorted(sorted_ids, np.arange(g * g), side="left")
+    ends = np.searchsorted(sorted_ids, np.arange(g * g), side="right")
+    for b in range(g * g):
+        idx = order[starts[b] : ends[b]]
+        if len(idx) < 2:
+            continue
+        for off in range(1, min(k // 2 + 1, len(idx))):
+            s = idx[:-off]
+            t = idx[off:]
+            srcs.append(s)
+            dsts.append(t)
+    # Stitch neighbouring buckets with a coarse chain so the mesh is connected.
+    bucket_rep = order[starts[starts < ends]] if np.any(starts < ends) else order[:1]
+    if len(bucket_rep) > 1:
+        srcs.append(bucket_rep[:-1])
+        dsts.append(bucket_rep[1:])
+    src = np.concatenate(srcs) if srcs else np.zeros(0, dtype=np.int64)
+    dst = np.concatenate(dsts) if dsts else np.zeros(0, dtype=np.int64)
+    return np.concatenate([src, dst]), np.concatenate([dst, src])
+
+
+def ring(n: int) -> tuple[np.ndarray, np.ndarray]:
+    v = np.arange(n, dtype=np.int64)
+    return v, (v + 1) % n
+
+
+def star(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Hub vertex 0 -> all others (worst case for destination skew)."""
+    leaves = np.arange(1, n, dtype=np.int64)
+    return np.full(n - 1, 0, dtype=np.int64), leaves
+
+
+def complete(n: int) -> tuple[np.ndarray, np.ndarray]:
+    s, t = np.meshgrid(np.arange(n, dtype=np.int64), np.arange(n, dtype=np.int64))
+    mask = s != t
+    return s[mask].ravel(), t[mask].ravel()
+
+
+# ---------------------------------------------------------------------------
+# Paper-dataset stand-ins (offline container: scaled-down, skew-matched).
+# ---------------------------------------------------------------------------
+_PAPER_DATASETS = {
+    # name: (generator, kwargs, paper n, paper m) — scaled for CPU runtime.
+    "live-journal": ("rmat", dict(scale=15, edge_factor=14, seed=1), 4.85e6, 69.0e6),
+    "twitter": ("rmat", dict(scale=16, edge_factor=22, seed=2), 41.7e6, 1.47e9),
+    "yahoo-web": ("rmat", dict(scale=17, edge_factor=9, seed=3), 720e6, 6.64e9),
+    "delaunay_n15": ("geo", dict(n=1 << 15, seed=20), 1.05e6, 6.29e6),
+    "delaunay_n16": ("geo", dict(n=1 << 16, seed=21), 2.10e6, 12.6e6),
+    "delaunay_n17": ("geo", dict(n=1 << 17, seed=22), 4.19e6, 25.2e6),
+    "delaunay_n18": ("geo", dict(n=1 << 18, seed=23), 8.39e6, 50.3e6),
+    "delaunay_n19": ("geo", dict(n=1 << 19, seed=24), 16.8e6, 101e6),
+}
+
+
+def paper_dataset(name: str) -> tuple[np.ndarray, np.ndarray]:
+    """Scaled-down, skew-matched stand-in for a paper benchmark graph."""
+    kind, kwargs, _, _ = _PAPER_DATASETS[name]
+    if kind == "rmat":
+        return rmat(**kwargs)
+    return random_geometric(**kwargs)
+
+
+def paper_dataset_names() -> list[str]:
+    return list(_PAPER_DATASETS)

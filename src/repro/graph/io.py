@@ -1,0 +1,73 @@
+"""Binary + text graph I/O.
+
+The paper stores the pre-shard and sub-shards as binary files; we keep the
+same separation (raw edge list <-> preprocessed artifacts) but use npz
+containers so a single file holds all sub-shard slices (avoids the paper's
+OS open-file-handle limitation, §IV-D).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.graph.preprocess import EdgeList
+
+__all__ = ["save_edges", "load_edges", "load_text_edges", "save_edgelist", "load_edgelist"]
+
+
+def save_edges(path: str, src: np.ndarray, dst: np.ndarray, weights=None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"src": src, "dst": dst}
+    if weights is not None:
+        payload["weights"] = weights
+    np.savez_compressed(path, **payload)
+
+
+def load_edges(path: str) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    with np.load(path) as z:
+        return z["src"], z["dst"], (z["weights"] if "weights" in z else None)
+
+
+def load_text_edges(path: str, comment: str = "#") -> tuple[np.ndarray, np.ndarray]:
+    """SNAP-style whitespace edge list (``src dst`` per line)."""
+    srcs: list[int] = []
+    dsts: list[int] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(comment):
+                continue
+            a, b = line.split()[:2]
+            srcs.append(int(a))
+            dsts.append(int(b))
+    return np.asarray(srcs, dtype=np.int64), np.asarray(dsts, dtype=np.int64)
+
+
+def save_edgelist(path: str, el: EdgeList) -> None:
+    """Persist a preprocessed (degreed) edge list."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = dict(
+        src=el.src,
+        dst=el.dst,
+        n=np.int64(el.n),
+        out_degree=el.out_degree,
+        in_degree=el.in_degree,
+        id_to_index=el.id_to_index,
+    )
+    if el.weights is not None:
+        payload["weights"] = el.weights
+    np.savez_compressed(path, **payload)
+
+
+def load_edgelist(path: str) -> EdgeList:
+    with np.load(path) as z:
+        return EdgeList(
+            src=z["src"],
+            dst=z["dst"],
+            n=int(z["n"]),
+            out_degree=z["out_degree"],
+            in_degree=z["in_degree"],
+            id_to_index=z["id_to_index"],
+            weights=(z["weights"] if "weights" in z else None),
+        )

@@ -1,0 +1,133 @@
+"""Degreeing: the first preprocessing step of NXgraph (paper §III-A).
+
+Maps raw, possibly sparse vertex *indices* to dense, contiguous *ids*
+(so interval storage needs only an offset + attribute array — constant-time
+access), removes duplicate edges and optionally self loops, and computes
+in/out degrees. Produces the mapping and reverse mapping the paper's
+"degreer" emits, plus the pre-shard (id-space edge list) consumed by the
+sharder in :mod:`repro.core.dsss`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["EdgeList", "degree_and_densify"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """Pre-shard: dense-id edge list plus degree metadata.
+
+    Attributes:
+      src, dst:   int32 dense vertex ids, deduplicated.
+      n:          number of (non-isolated) vertices. Ids are ``[0, n)``.
+      out_degree: int32 ``(n,)`` out-degree per id.
+      in_degree:  int32 ``(n,)`` in-degree per id.
+      id_to_index: int64 ``(n,)`` reverse mapping (dense id -> raw index).
+      weights:    optional float32 per-edge weights (aligned with src/dst).
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    n: int
+    out_degree: np.ndarray
+    in_degree: np.ndarray
+    id_to_index: np.ndarray
+    weights: np.ndarray | None = None
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    def index_to_id(self, indices: np.ndarray) -> np.ndarray:
+        """Raw index -> dense id (vectorised binary search on the mapping)."""
+        pos = np.searchsorted(self.id_to_index, indices)
+        pos = np.clip(pos, 0, len(self.id_to_index) - 1)
+        ok = self.id_to_index[pos] == indices
+        if not np.all(ok):
+            raise KeyError("index not present in graph (isolated or unknown)")
+        return pos.astype(np.int32)
+
+    def reversed(self) -> "EdgeList":
+        """Transpose graph (used by SCC's backward phase)."""
+        return EdgeList(
+            src=self.dst,
+            dst=self.src,
+            n=self.n,
+            out_degree=self.in_degree,
+            in_degree=self.out_degree,
+            id_to_index=self.id_to_index,
+            weights=self.weights,
+        )
+
+    def symmetrized(self) -> "EdgeList":
+        """Undirected view: both edge directions (used by WCC)."""
+        src = np.concatenate([self.src, self.dst])
+        dst = np.concatenate([self.dst, self.src])
+        w = None if self.weights is None else np.concatenate([self.weights] * 2)
+        # Re-dedup after symmetrization.
+        key = src.astype(np.int64) * self.n + dst
+        _, keep = np.unique(key, return_index=True)
+        deg_out = np.bincount(src[keep], minlength=self.n).astype(np.int32)
+        deg_in = np.bincount(dst[keep], minlength=self.n).astype(np.int32)
+        return EdgeList(
+            src=src[keep].astype(np.int32),
+            dst=dst[keep].astype(np.int32),
+            n=self.n,
+            out_degree=deg_out,
+            in_degree=deg_in,
+            id_to_index=self.id_to_index,
+            weights=None if w is None else w[keep],
+        )
+
+
+def degree_and_densify(
+    src: np.ndarray,
+    dst: np.ndarray,
+    weights: np.ndarray | None = None,
+    *,
+    drop_self_loops: bool = False,
+    dedup: bool = True,
+) -> EdgeList:
+    """The degreeing pass: raw sparse indices -> dense contiguous ids.
+
+    Vertices with no incident edge are eliminated (the paper's vertex counts
+    exclude isolated vertices — Table III footnote).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape:
+        raise ValueError(f"src/dst shape mismatch: {src.shape} vs {dst.shape}")
+    if drop_self_loops:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if weights is not None:
+            weights = weights[keep]
+    # Dense id assignment over the union of endpoints, sorted by raw index so
+    # that the mapping is monotone (searchsorted-able reverse mapping).
+    id_to_index, inverse = np.unique(
+        np.concatenate([src, dst]), return_inverse=True
+    )
+    m = src.shape[0]
+    src_id = inverse[:m].astype(np.int32)
+    dst_id = inverse[m:].astype(np.int32)
+    n = int(id_to_index.shape[0])
+    if dedup:
+        key = src_id.astype(np.int64) * n + dst_id
+        _, keep_idx = np.unique(key, return_index=True)
+        src_id, dst_id = src_id[keep_idx], dst_id[keep_idx]
+        if weights is not None:
+            weights = weights[keep_idx]
+    out_deg = np.bincount(src_id, minlength=n).astype(np.int32)
+    in_deg = np.bincount(dst_id, minlength=n).astype(np.int32)
+    return EdgeList(
+        src=src_id,
+        dst=dst_id,
+        n=n,
+        out_degree=out_deg,
+        in_degree=in_deg,
+        id_to_index=id_to_index,
+        weights=None if weights is None else weights.astype(np.float32),
+    )

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (TPU target; validated in interpret mode on CPU).
+
+- dsss_spmv.py: the paper's DSSS sub-shard update (ToHub) as an MXU
+  one-hot segment reduction — the graph engine's hot loop.
+- flash_attention.py: tiled online-softmax attention for the LM wing
+  (causal / sliding-window / softcap / GQA-via-index_map).
+- ops.py: jit'd wrappers; ref.py: pure-jnp oracles.
+"""
+from repro.kernels.ops import attention, prepare_subshard_operands, subshard_update
+
+__all__ = ["attention", "prepare_subshard_operands", "subshard_update"]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the DSSS sub-shard update (ToHub phase).
+
+TPU-native re-expression of the paper's destination-sorted fine-grained
+parallelism (§III-D). On CPU, destination sorting removes write conflicts
+between threads; on TPU there are no conflicting threads, but the same sort
+gives every *edge block* a dense, narrow range of **hub slots** (unique
+destinations), so the per-block segment reduction becomes a small dense
+``contribution · one_hot`` product that runs on the MXU — a conflict-free,
+layout-aligned reduction instead of a serial scatter.
+
+Pipeline per grid step (one edge block of ``E_BLK`` edges):
+
+  HBM ──DMA──▶ VMEM:  src ids, hub slots, weights of the block
+  VMEM:               source-interval attributes (resident — the paper's
+                      "interval in memory"; SPU keeps it there all iteration)
+  gather   contrib[e] = src_vals[src_idx[e]] ⊙ w[e]      (⊙ = mul | add)
+  one-hot  oh[e, s]   = (hub_inv[e] − base_b == s)       (iota compare)
+  reduce   sum: (1,E)·(E,W) MXU matmul;  min/max: masked VPU reduce
+  out      per-block windowed hub partials (num_blocks, W)
+
+The windowed trick is sound *because* edges are destination-sorted: hub
+slots are non-decreasing along the edge stream, so a block of ``E_BLK``
+edges touches at most ``E_BLK`` consecutive slots (``W = E_BLK``). The
+final slot-scatter (FromHub) is O(unique destinations) and lives in
+:mod:`repro.kernels.ops`.
+
+Semiring modes:
+  gather_op: "mul" (PageRank: rank/deg · w) | "add" (BFS/SSSP: depth + w)
+  reduce:    "sum" | "min" | "max"
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dsss_spmv_block_partials", "E_BLK"]
+
+E_BLK = 512  # edges per block; also the hub-slot window width W
+
+
+def _identity(reduce: str, dtype):
+    if reduce == "sum":
+        return jnp.zeros((), dtype)
+    # ±inf for floats so empty slots match jax.ops.segment_min/max exactly.
+    big = jnp.inf if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max
+    return jnp.array(big if reduce == "min" else -big, dtype)
+
+
+def _kernel(
+    src_vals_ref,  # (isize,)          resident source-interval attributes
+    src_idx_ref,  # (E_BLK,)           edge source offsets within interval
+    hub_inv_ref,  # (E_BLK,)           edge -> global hub slot
+    w_ref,  # (E_BLK,)                 edge weights (identity-padded)
+    base_ref,  # (1,)                  first hub slot of this block
+    out_ref,  # (1, W)                 windowed hub partials for this block
+    *,
+    gather_op: str,
+    reduce: str,
+):
+    contrib_dtype = out_ref.dtype
+    vals = jnp.take(src_vals_ref[...], src_idx_ref[...], axis=0)
+    w = w_ref[...]
+    if gather_op == "mul":
+        contrib = (vals * w).astype(contrib_dtype)
+    else:
+        contrib = (vals + w).astype(contrib_dtype)
+    slots = hub_inv_ref[...] - base_ref[0]
+    W = out_ref.shape[1]
+    # One-hot over the slot window. Destination-sorted edges guarantee
+    # 0 <= slots < W for all valid edges; identity-padded edges may fall
+    # anywhere and contribute the identity.
+    oh = slots[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    if reduce == "sum":
+        # MXU path: (1, E) · (E, W).
+        out = jnp.dot(
+            contrib[None, :], oh.astype(contrib_dtype), preferred_element_type=jnp.float32
+        ).astype(contrib_dtype)
+        out_ref[...] = out
+    else:
+        ident = _identity(reduce, contrib_dtype)
+        masked = jnp.where(oh, contrib[:, None], ident)
+        red = jnp.min(masked, axis=0) if reduce == "min" else jnp.max(masked, axis=0)
+        out_ref[...] = red[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gather_op", "reduce", "interpret")
+)
+def dsss_spmv_block_partials(
+    src_vals: jax.Array,  # (isize,) float
+    src_idx: jax.Array,  # (E_pad,) int32, E_pad % E_BLK == 0
+    hub_inv: jax.Array,  # (E_pad,) int32 global hub slots (non-decreasing)
+    weights: jax.Array,  # (E_pad,) same dtype as src_vals, identity-padded
+    block_base: jax.Array,  # (num_blocks,) int32 = hub_inv[b*E_BLK]
+    *,
+    gather_op: str = "mul",
+    reduce: str = "sum",
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the kernel over all edge blocks; returns (num_blocks, W) partials."""
+    e_pad = src_idx.shape[0]
+    assert e_pad % E_BLK == 0, f"pad edges to a multiple of {E_BLK}"
+    num_blocks = e_pad // E_BLK
+    grid = (num_blocks,)
+    return pl.pallas_call(
+        functools.partial(_kernel, gather_op=gather_op, reduce=reduce),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(src_vals.shape, lambda b: (0,) * src_vals.ndim),
+            pl.BlockSpec((E_BLK,), lambda b: (b,)),
+            pl.BlockSpec((E_BLK,), lambda b: (b,)),
+            pl.BlockSpec((E_BLK,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, E_BLK), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, E_BLK), src_vals.dtype),
+        interpret=interpret,
+    )(src_vals, src_idx, hub_inv, weights, block_base)

@@ -1,0 +1,147 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``subshard_update`` is the full DSSS sub-shard update: the Pallas kernel
+produces per-edge-block windowed hub partials, and a cheap slot-scatter
+(the FromHub fold, O(unique destinations) ≪ O(edges)) turns them into the
+destination-interval update. ``attention`` dispatches between the Pallas
+flash kernel and the jnp reference by flag (models use this entry point).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+from repro.kernels.dsss_spmv import E_BLK, dsss_spmv_block_partials
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = ["subshard_update", "attention", "prepare_subshard_operands", "E_BLK"]
+
+
+def _identity_value(reduce: str, dtype) -> float:
+    if reduce == "sum":
+        return 0.0
+    big = (
+        float("inf")
+        if jnp.issubdtype(dtype, jnp.floating)
+        else int(jnp.iinfo(dtype).max)
+    )
+    return big if reduce == "min" else -big
+
+
+def prepare_subshard_operands(
+    src_local: np.ndarray,
+    hub_inv_global: np.ndarray,
+    weights: np.ndarray | None,
+    dtype,
+    *,
+    gather_op: str,
+    reduce: str,
+):
+    """Host-side staging: pad edge arrays to E_BLK and compute block bases.
+
+    Padded edges carry identity weights so they contribute the ⊕-identity:
+    for ``mul``/sum  w=0 → contrib 0; for ``add``/min w=+inf → contrib inf.
+
+    Supported (gather_op, reduce) pairs: ("mul","sum") — PageRank-family;
+    ("add","min"/"max") — BFS/SSSP/WCC/label-propagation. "mul" with
+    min/max has no finite multiplicative padding identity and no user.
+    """
+    if gather_op == "mul" and reduce != "sum":
+        raise ValueError("gather_op='mul' requires reduce='sum'")
+    e = len(src_local)
+    e_pad = max(E_BLK, -(-e // E_BLK) * E_BLK)
+    pad = e_pad - e
+    if weights is None:
+        w_fill = 1.0 if gather_op == "mul" else 0.0
+        weights = np.full(e, w_fill, np.float64)
+    ident_w = _identity_value(reduce, jnp.dtype(dtype)) if gather_op == "add" else 0.0
+    src_idx = np.pad(src_local, (0, pad))
+    hub_inv = np.pad(
+        hub_inv_global, (0, pad), constant_values=hub_inv_global[-1] if e else 0
+    )
+    w = np.pad(weights.astype(np.float64), (0, pad), constant_values=ident_w)
+    block_base = hub_inv[::E_BLK].astype(np.int32)
+    return (
+        jnp.asarray(src_idx, jnp.int32),
+        jnp.asarray(hub_inv, jnp.int32),
+        jnp.asarray(w, dtype),
+        jnp.asarray(block_base, jnp.int32),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "gather_op", "reduce", "interpret")
+)
+def subshard_update(
+    src_vals: jax.Array,  # (isize,)
+    src_idx: jax.Array,  # (E_pad,) from prepare_subshard_operands
+    hub_inv: jax.Array,
+    weights: jax.Array,
+    block_base: jax.Array,
+    num_slots: int,
+    *,
+    gather_op: str = "mul",
+    reduce: str = "sum",
+    interpret: bool = True,
+) -> jax.Array:
+    """Full sub-shard ToHub on the Pallas kernel; returns (num_slots,) hub."""
+    partials = dsss_spmv_block_partials(
+        src_vals,
+        src_idx,
+        hub_inv,
+        weights,
+        block_base,
+        gather_op=gather_op,
+        reduce=reduce,
+        interpret=interpret,
+    )  # (num_blocks, W)
+    nb, w = partials.shape
+    #
+
+    # Slot-scatter: partial row b covers slots [base_b, base_b + W); fold all
+    # rows into the hub vector. O(num_blocks · W) ≪ O(edges) when d > 1.
+    slot_ids = (block_base[:, None] + jnp.arange(w)[None, :]).reshape(-1)
+    flat = partials.reshape(-1)
+    if reduce == "sum":
+        return jax.ops.segment_sum(flat, slot_ids, num_segments=num_slots)
+    if reduce == "min":
+        return jax.ops.segment_min(flat, slot_ids, num_segments=num_slots)
+    return jax.ops.segment_max(flat, slot_ids, num_segments=num_slots)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Model-facing attention entry point.
+
+    ``use_kernel=False`` (default on this CPU container) runs the jnp
+    reference; ``use_kernel=True`` runs the Pallas flash kernel (TPU target,
+    interpret=True validates it here).
+    """
+    if use_kernel:
+        return flash_attention(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+            scale=scale,
+            interpret=interpret,
+        )
+    return _ref.attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+    )

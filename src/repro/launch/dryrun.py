@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+).strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture × applicable shape × mesh) cell:
+  1. build ShapeDtypeStruct inputs with NamedShardings attached,
+  2. ``jax.jit(step).lower(...)`` then ``.compile()`` on the production mesh
+     (16×16 single-pod / 2×16×16 multi-pod of host placeholder devices),
+  3. print ``memory_analysis()`` (fits-HBM proof) and ``cost_analysis()``,
+  4. parse the optimized HLO for collective bytes,
+  5. emit the three roofline terms to a JSON cache for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_is_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, input_specs, prefill
+from repro.optim import AdamW
+from repro.runtime.analytic_cost import analytic_cost
+from repro.runtime.hlo_analysis import HW, RooflineReport
+from repro.runtime.hlo_loops import collective_bytes_weighted
+from repro.sharding.rules import (
+    SERVING_RULES,
+    TRAIN_FSDP_RULES,
+    activate_mesh,
+    batch_spec,
+    cache_specs,
+    named_sharding,
+    tree_shardings,
+)
+from repro.train.state import abstract_train_state
+from repro.train.step import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _attach(specs_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs_tree,
+        shardings_tree,
+    )
+
+
+def _batch_shardings(specs: dict, mesh) -> dict:
+    out = {}
+    for k, v in specs.items():
+        bs = batch_spec(mesh, v.shape[0])
+        spec = P(*(list(bs) + [None] * (len(v.shape) - len(bs))))
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+
+    if shape.kind == "train":
+        import dataclasses as _dc
+
+        # bf16 stored params + fp32 Adam moments: weight all-gathers and
+        # gradient reduce-scatters move half the bytes (§Perf iteration).
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+        opt = AdamW(learning_rate=1e-4, weight_decay=0.1)
+        # Train profile v2 (pure FSDP / ZeRO-3, see sharding/rules.py):
+        # batch DP over every axis, params 2-D sharded + gathered per layer,
+        # no TP activation all-reduces. accum=1: activations are fully
+        # batch-sharded so the saved-residual stack is small.
+        rules = TRAIN_FSDP_RULES if os.environ.get("REPRO_TRAIN_RULES", "fsdp") == "fsdp" else None
+        # accum=1 when the global batch fills the mesh (activations fully
+        # sharded); otherwise microbatch to bound the saved-residual stack
+        # (multi-pod: 256-seq batch on 512 chips shards only 32-way).
+        accum = 1 if (rules is not None and shape.global_batch % chips == 0) else 4
+        step_fn = make_train_step(cfg, opt, accum_steps=accum)
+        state = abstract_train_state(cfg, opt)
+        state_sh = tree_shardings(state, mesh, rules=rules)
+        state_in = _attach(state, state_sh)
+        specs = input_specs(cfg, shape)
+        batch_in = _attach(specs, _batch_shardings(specs, mesh))
+        with mesh, activate_mesh(mesh, rules):
+            jitted = jax.jit(
+                step_fn,
+                donate_argnums=(0,),
+                out_shardings=(
+                    jax.tree.map(lambda s: s, state_sh),
+                    None,
+                ),
+            )
+            lowered = jitted.lower(state_in, batch_in)
+    elif shape.kind == "prefill":
+        opt = AdamW()
+        state = abstract_train_state(cfg, opt)
+        params = state["params"]
+        params_sh = tree_shardings(params, mesh, rules=SERVING_RULES)
+        params_in = _attach(params, params_sh)
+        specs = input_specs(cfg, shape)
+        batch_in = _attach(specs, _batch_shardings(specs, mesh))
+
+        def prefill_fn(params, inputs):
+            extra = {k: v for k, v in inputs.items() if k != "tokens"}
+            return prefill(
+                cfg, params, inputs["tokens"], max_len=shape.seq_len, **extra
+            )
+
+        with mesh, activate_mesh(mesh):
+            lowered = jax.jit(prefill_fn).lower(params_in, batch_in)
+    else:  # decode
+        opt = AdamW()
+        state = abstract_train_state(cfg, opt)
+        params = state["params"]
+        params_sh = tree_shardings(params, mesh, rules=SERVING_RULES)
+        params_in = _attach(params, params_sh)
+        specs = input_specs(cfg, shape)
+        cache_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            cache_specs(specs["cache"], mesh),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        cache_in = _attach(specs["cache"], cache_sh)
+        tok_in = jax.ShapeDtypeStruct(
+            specs["token"].shape,
+            specs["token"].dtype,
+            sharding=NamedSharding(mesh, batch_spec(mesh, shape.global_batch)),
+        )
+        pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def decode_fn(params, cache, token, pos):
+            return decode_step(cfg, params, cache, token, pos)
+
+        with mesh, activate_mesh(mesh):
+            lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
+                params_in, cache_in, tok_in, pos_in
+            )
+    return cfg, lowered, chips
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str | None):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    cfg, lowered, chips = lower_cell(arch, shape_name, mesh, mesh_name)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    shape = SHAPES[shape_name]
+
+    def _mem_field(name):
+        try:
+            return float(getattr(mem, name))
+        except Exception:
+            return float("nan")
+
+    bytes_per_chip = sum(
+        v
+        for v in (
+            _mem_field("argument_size_in_bytes"),
+            _mem_field("output_size_in_bytes"),
+            _mem_field("temp_size_in_bytes"),
+        )
+        if v == v
+    )
+    # donated args alias outputs; peak live is ~ max(arg, out) + temp.
+    args_b = _mem_field("argument_size_in_bytes")
+    out_b = _mem_field("output_size_in_bytes")
+    temp_b = _mem_field("temp_size_in_bytes")
+    peak = max(args_b, out_b) + (temp_b if temp_b == temp_b else 0.0)
+
+    # Roofline terms. FLOPs/HBM come from the analytic model (XLA's
+    # cost_analysis counts while-loop bodies once — wrong for scanned
+    # stacks; see runtime/analytic_cost.py); collectives come from the
+    # trip-count-weighted HLO parse; cost_analysis stays as a diagnostic.
+    hw = HW()
+    ana = analytic_cost(cfg, shape)
+    n_active = cfg.active_params()
+    coll = collective_bytes_weighted(hlo)
+    coll_total = float(sum(coll.values()))
+    rep = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=ana.flops_global / chips,
+        hlo_bytes=ana.hbm_bytes_global / chips,
+        coll_bytes_per_chip=coll_total,
+        coll_breakdown=coll,
+        model_flops=ana.model_flops,
+        bytes_per_chip_peak=peak,
+    )
+    rep.compute_s = rep.hlo_flops / hw.peak_flops
+    rep.memory_s = rep.hlo_bytes / hw.hbm_bw
+    rep.collective_s = coll_total / hw.ici_bw
+    result = rep.to_dict()
+    result.update(
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=dict(
+            argument_size_in_bytes=args_b,
+            output_size_in_bytes=out_b,
+            temp_size_in_bytes=temp_b,
+            peak_estimate=peak,
+        ),
+        analytic=dict(
+            flops_global=ana.flops_global,
+            hbm_bytes_global=ana.hbm_bytes_global,
+            notes=ana.notes,
+        ),
+        cost_analysis_diag={
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float))
+            and k in ("flops", "bytes accessed", "transcendentals")
+        },
+        params=cfg.num_params(),
+        active_params=n_active,
+    )
+    print(f"== {arch} × {shape_name} × {mesh_name} ({chips} chips) ==")
+    print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+    print(f"  memory_analysis: args={args_b/1e9:.2f}GB out={out_b/1e9:.2f}GB "
+          f"temp={temp_b/1e9:.2f}GB peak≈{peak/1e9:.2f}GB/chip "
+          f"(HBM {HW().hbm_bytes/1e9:.0f}GB: {'FITS' if peak < HW().hbm_bytes else 'OVER'})")
+    print(f"  cost_analysis: flops={rep.hlo_flops:.3e} bytes={rep.hlo_bytes:.3e}")
+    print(f"  collectives/chip: {rep.coll_bytes_per_chip:.3e} B {rep.coll_breakdown}")
+    print(f"  roofline: compute={rep.compute_s*1e3:.2f}ms memory={rep.memory_s*1e3:.2f}ms "
+          f"collective={rep.collective_s*1e3:.2f}ms dominant={rep.dominant} "
+          f"useful_flops_ratio={rep.useful_flops_ratio:.3f} "
+          f"roofline_fraction={rep.roofline_fraction:.3f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+        print(f"  -> {fn}")
+    return result
+
+
+def run_graph_cell(name: str, mesh_name: str, out_dir: str | None):
+    """Dry-run one paper-scale graph on the production mesh: lower+compile
+    the shard_map PageRank step (core/distributed.py) from SDS inputs."""
+    from repro.core.distributed import (
+        GRAPH_SCALES,
+        graph_input_specs,
+        make_pagerank_step,
+    )
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    src_axes = ("pod", "data") if mesh_name == "multi" else ("data",)
+    specs = graph_input_specs(name, mesh, src_axes=src_axes)
+    step, _ = make_pagerank_step(
+        mesh, specs["n"], specs["n_pad"], src_axes=src_axes
+    )
+    lowered = step.lower(
+        specs["x"], specs["dang"], specs["src_l"], specs["dst_l"], specs["w"]
+    )
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    n, m = GRAPH_SCALES[name]
+    coll = collective_bytes_weighted(hlo)
+    coll_total = float(sum(coll.values()))
+    hw = HW()
+    # analytic: per edge one mul+add (gather+weight) + one add (segment).
+    flops = 3.0 * m
+    # HBM: edges (src,dst,w = 12 B) + x gather + hub write/read + y.
+    hbm = 12.0 * m + 4.0 * m + 3 * 4.0 * n
+    rep = RooflineReport(
+        arch=f"graph:{name}",
+        shape="pagerank_iter",
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops / chips,
+        hlo_bytes=hbm / chips,
+        coll_bytes_per_chip=coll_total,
+        coll_breakdown=coll,
+        model_flops=2.0 * m,
+        bytes_per_chip_peak=float(getattr(mem, "temp_size_in_bytes", 0.0))
+        + float(getattr(mem, "argument_size_in_bytes", 0.0)),
+    )
+    rep.compute_s = rep.hlo_flops / hw.peak_flops
+    rep.memory_s = rep.hlo_bytes / hw.hbm_bw
+    rep.collective_s = coll_total / hw.ici_bw
+    result = rep.to_dict()
+    result.update(lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+    print(f"== graph:{name} × pagerank × {mesh_name} ({chips} chips) ==")
+    print(
+        f"  args={float(getattr(mem,'argument_size_in_bytes',0))/1e9:.2f}GB "
+        f"temp={float(getattr(mem,'temp_size_in_bytes',0))/1e9:.2f}GB "
+        f"compile {t_compile:.1f}s"
+    )
+    print(
+        f"  roofline: compute={rep.compute_s*1e3:.2f}ms memory={rep.memory_s*1e3:.2f}ms "
+        f"collective={rep.collective_s*1e3:.2f}ms dominant={rep.dominant}"
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"graph-{name}__pagerank__{mesh_name}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--graphs", action="store_true", help="graph-engine cells")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.graphs:
+        from repro.core.distributed import GRAPH_SCALES
+
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for name in GRAPH_SCALES:
+            for mesh_name in meshes:
+                try:
+                    run_graph_cell(name, mesh_name, args.out)
+                except Exception as e:
+                    failures.append((name, mesh_name, repr(e)))
+                    traceback.print_exc()
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("\nAll graph dry-run cells passed.")
+        return
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not shape_is_applicable(arch, shape):
+                print(f"-- skip {arch} × {shape} (inapplicable; see DESIGN.md)")
+                continue
+            for mesh_name in meshes:
+                fn = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}.json"
+                )
+                if args.skip_existing and os.path.exists(fn):
+                    print(f"-- cached {fn}")
+                    continue
+                try:
+                    run_cell(arch, shape, mesh_name, args.out)
+                except Exception as e:
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    print(f"!! FAIL {arch} × {shape} × {mesh_name}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

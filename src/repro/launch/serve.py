@@ -1,0 +1,42 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``."""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=8)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(
+            Request(
+                request_id=i,
+                prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).tolist(),
+                max_new_tokens=args.max_new,
+                temperature=args.temperature,
+            )
+        )
+    results = eng.run()
+    for rid in sorted(results):
+        print(f"request {rid}: {results[rid]}")
+
+
+if __name__ == "__main__":
+    main()

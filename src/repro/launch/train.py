@@ -1,0 +1,47 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real multi-host pod this process would call
+``jax.distributed.initialize()`` first (host topology from the scheduler),
+build the production mesh, and shard the data loader by host id. On this
+container it drives the same fault-tolerant loop on one device.
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--grad-sync", default="none", choices=["none", "compressed_bf16"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.train.loop import TrainLoopConfig, train
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    loop = TrainLoopConfig(
+        total_steps=args.steps,
+        checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir,
+        seq_len=args.seq_len,
+        global_batch=args.batch,
+        learning_rate=args.lr,
+        accum_steps=args.accum,
+        grad_sync=args.grad_sync,
+    )
+    stats = train(cfg, loop)
+    print(
+        f"done: steps={stats['final_step']} loss {stats['first_loss']:.3f} "
+        f"-> {stats['last_loss']:.3f} recoveries={stats['recoveries']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Model definitions for the assigned architectures (pure-functional JAX)."""
+from repro.models.model import Model, input_specs
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "Model",
+    "input_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_params",
+    "init_decode_cache",
+]

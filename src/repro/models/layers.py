@@ -1,0 +1,94 @@
+"""Shared neural building blocks (pure-functional, no framework deps).
+
+Params are nested dicts of jnp arrays; every builder has an ``init_*``
+(returns params) and an ``apply``-style pure function. Compute runs in
+``cfg.dtype`` (bf16 by default); norms and softmaxes in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import maybe_constrain
+
+__all__ = [
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope",
+    "mlp_init",
+    "mlp_apply",
+    "embed_init",
+]
+
+
+def dense_init(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    """Truncated-normal with 1/sqrt(fan_in) scale (LeCun normal)."""
+    if fan_in is None:
+        fan_in = shape[0]
+    std = fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d))).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, d: int, ff: int, activation: str, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    if activation == "gelu_plain":  # whisper: 2-matrix GELU MLP
+        return {
+            "wi": dense_init(k1, (d, ff), dtype=dtype),
+            "wo": dense_init(k2, (ff, d), fan_in=ff, dtype=dtype),
+        }
+    # gated (SwiGLU / GeGLU): fused [gate; up] in one matrix
+    return {
+        "wi": dense_init(k1, (d, 2 * ff), dtype=dtype),
+        "wo": dense_init(k2, (ff, d), fan_in=ff, dtype=dtype),
+    }
+
+
+def mlp_apply(params, x, activation: str):
+    dtype = x.dtype
+    wi = params["wi"].astype(dtype)
+    wo = params["wo"].astype(dtype)
+    if activation == "gelu_plain":
+        h = jax.nn.gelu(x @ wi, approximate=True)
+        h = maybe_constrain(
+            h, *(("batch", "seq", "mlp") if h.ndim == 3 else ("batch", "mlp"))
+        )
+        return h @ wo
+    gate_up = x @ wi
+    gate_up = maybe_constrain(
+        gate_up, *(("batch", "seq", "mlp") if gate_up.ndim == 3 else ("batch", "mlp"))
+    )
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    act = jax.nn.silu if activation == "silu" else lambda g: jax.nn.gelu(g, approximate=True)
+    return (act(gate) * up) @ wo

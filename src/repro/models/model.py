@@ -1,0 +1,83 @@
+"""Model facade: one entry point per (arch × shape-kind).
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input of that shape cell — the dry-run lowers against these
+(never allocating). Modality frontends are STUBS per the assignment:
+vlm supplies patch embeddings, audio supplies frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = ["Model", "input_specs"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of this (arch, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+        if cfg.vision is not None:
+            np_ = cfg.vision.num_patches
+            specs["tokens"] = sds((b, s - np_), jnp.int32)
+            specs["labels"] = sds((b, s - np_), jnp.int32)
+            specs["patch_embeds"] = sds((b, np_, cfg.d_model), jnp.bfloat16)
+        if cfg.is_enc_dec:
+            specs["frames"] = sds(
+                (b, cfg.encdec.encoder_frames, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.vision is not None:
+            np_ = cfg.vision.num_patches
+            specs["tokens"] = sds((b, s - np_), jnp.int32)
+            specs["patch_embeds"] = sds((b, np_, cfg.d_model), jnp.bfloat16)
+        if cfg.is_enc_dec:
+            specs["frames"] = sds(
+                (b, cfg.encdec.encoder_frames, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(lambda: init_decode_cache(cfg, b, s))
+    return {
+        "token": sds((b, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "cache": cache,
+    }
+
+
+class Model:
+    """Thin stateless facade over the functional transformer."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def apply(self, params, tokens, **extra):
+        return forward(self.cfg, params, tokens, **extra)
+
+    def prefill(self, params, tokens, max_len: int, **extra):
+        return prefill(self.cfg, params, tokens, max_len, **extra)
+
+    def decode(self, params, cache, token, pos):
+        return decode_step(self.cfg, params, cache, token, pos)
+
+    def init_cache(self, batch: int, max_len: int):
+        return init_decode_cache(self.cfg, batch, max_len)

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x → [branch a: linear → causal conv(4) → RG-LRU] ⊙ [branch b:
+linear → GeLU] → out-proj. The RG-LRU diagonal recurrence
+
+    r_t = σ(Wa x_t + ba)                 (recurrence gate)
+    i_t = σ(Wx x_t + bx)                 (input gate)
+    a_t = exp(c·softplus(Λ)·(−r_t))      (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+
+runs as a parallel associative scan over the sequence (train/prefill) or a
+single fused update (decode, O(1) state) — this is why recurrentgemma-9b
+is long_500k-applicable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.ssm import _causal_conv
+from repro.sharding.rules import maybe_constrain
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "init_rglru_state"]
+
+C_FACTOR = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ [0.9, 0.999] at r = 1 (Griffin appendix).
+    u = jax.random.uniform(ks[0], (w,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * C_FACTOR)))  # softplus^-1
+    return {
+        "in_x": dense_init(ks[1], (d, w), dtype=dtype),
+        "in_gate": dense_init(ks[2], (d, w), dtype=dtype),
+        "conv_w": dense_init(ks[3], (cfg.rglru.conv_width, w), fan_in=cfg.rglru.conv_width, dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(ks[4], (w, w), dtype=dtype),
+        "ba": jnp.zeros((w,), dtype),
+        "wx": dense_init(ks[5], (w, w), dtype=dtype),
+        "bx": jnp.zeros((w,), dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out": dense_init(jax.random.fold_in(key, 7), (w, d), fan_in=w, dtype=dtype),
+    }
+
+
+def _gates(params, x):
+    """Per-step decay a_t and gated input. x: (..., W) bf16 -> fp32 terms."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32) + params["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["wx"].astype(jnp.float32) + params["bx"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_apply(params, u, cfg: ModelConfig, *, return_state: bool = False):
+    """Full-sequence recurrent block. u: (B, S, D) -> (B, S, D) [, state]."""
+    dtype = u.dtype
+    x = u @ params["in_x"].astype(dtype)
+    x = maybe_constrain(x, "batch", "seq", "mlp")
+    gate = jax.nn.gelu(u @ params["in_gate"].astype(dtype))
+    x, conv_state = _causal_conv(
+        x, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype)
+    )
+    a, gated = _gates(params, x)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    y = (h.astype(dtype)) * gate
+    out = y @ params["out"].astype(dtype)
+    if return_state:
+        return out, {"h": h[:, -1], "conv": conv_state}
+    return out
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.rglru.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(params, u, state, cfg: ModelConfig):
+    """One token. u: (B, 1, D) -> (y, new_state)."""
+    dtype = u.dtype
+    x = u @ params["in_x"].astype(dtype)
+    gate = jax.nn.gelu(u @ params["in_gate"].astype(dtype))
+    x, conv_state = _causal_conv(
+        x, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype),
+        state=state["conv"],
+    )
+    a, gated = _gates(params, x)  # (B, 1, W)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    y = h[:, None, :].astype(dtype) * gate
+    return y @ params["out"].astype(dtype), {"h": h, "conv": conv_state}

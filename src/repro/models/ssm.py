@@ -1,0 +1,167 @@
+"""Mamba-1 block (falcon-mamba): selective SSM with chunked scan.
+
+Train/prefill uses a two-level scan — an outer ``lax.scan`` over sequence
+chunks carrying the (B, E, N) state, with a parallel associative scan
+inside each chunk. This bounds the state-expanded intermediate to
+(B, Lc, E_local, N) per step, which is what makes the 500k-token shapes
+compile inside HBM once E is sharded over the model axis (DESIGN.md §5).
+Decode carries (conv_state, ssm_state) and is O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.rules import maybe_constrain
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "init_mamba_state"]
+
+CHUNK = 128
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    e = s.expand * cfg.d_model
+    dtr = s.dt_rank or cfg.d_model // 16
+    return e, dtr, s.d_state, s.d_conv
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    e, dtr, n, k = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A: A = -(1..N) per channel.
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (e, 1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[5], (e,)) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )))  # softplus^-1 of dt in [1e-3, 1e-1]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * e), dtype=dtype),
+        "conv_w": dense_init(ks[1], (k, e), fan_in=k, dtype=dtype),
+        "conv_b": jnp.zeros((e,), dtype),
+        "x_proj": dense_init(ks[2], (e, dtr + 2 * n), fan_in=e, dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, e), fan_in=dtr, dtype=dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(a_init).astype(jnp.float32),
+        "D": jnp.ones((e,), dtype),
+        "out_proj": dense_init(ks[4], (e, d), fan_in=e, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along seq. x: (B, S, E), w: (K, E).
+
+    ``state``: (B, K-1, E) trailing inputs from the previous segment; when
+    given, also returns the new state."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, E)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1) :] if k > 1 else pad
+    return out, new_state
+
+
+def _ssm_params(params, x, e, dtr, n):
+    """Per-step SSM coefficients from the input. x: (..., E)."""
+    dbc = x @ params["x_proj"].astype(x.dtype)  # (..., dtr+2N)
+    dt, b, c = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ params["dt_proj"].astype(x.dtype)
+        + params["dt_bias"].astype(x.dtype)
+    )  # (..., E)
+    a = -jnp.exp(params["A_log"])  # (E, N), fp32
+    return dt.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32), a
+
+
+def mamba_apply(params, u, cfg: ModelConfig, *, return_state: bool = False):
+    """Full-sequence Mamba block. u: (B, S, D) -> (B, S, D) [, final state].
+
+    ``return_state=True`` also returns the (conv, ssm) state after the last
+    position — used by prefill; costs nothing extra since the chunked scan
+    already carries it."""
+    e, dtr, n, k = _dims(cfg)
+    b_, s_, d_ = u.shape
+    dtype = u.dtype
+    xz = u @ params["in_proj"].astype(dtype)
+    xz = maybe_constrain(xz, "batch", "seq", "mlp")
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, S, E)
+    x, conv_state = _causal_conv(x, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype))
+    x = jax.nn.silu(x)
+    dt, bmat, cmat, a = _ssm_params(params, x, e, dtr, n)
+    xf = x.astype(jnp.float32)
+
+    # chunked selective scan
+    nchunks = -(-s_ // CHUNK)
+    pad = nchunks * CHUNK - s_
+    def padded(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+    # Padded steps must be scan identities (decay 1, input 0) or they would
+    # corrupt the carried state that return_state exposes.
+    valid = (jnp.arange(nchunks * CHUNK) < s_).astype(jnp.float32)
+    dt_c = padded(dt).reshape(b_, nchunks, CHUNK, e).transpose(1, 0, 2, 3)
+    b_c = padded(bmat).reshape(b_, nchunks, CHUNK, n).transpose(1, 0, 2, 3)
+    c_c = padded(cmat).reshape(b_, nchunks, CHUNK, n).transpose(1, 0, 2, 3)
+    x_c = padded(xf).reshape(b_, nchunks, CHUNK, e).transpose(1, 0, 2, 3)
+    v_c = valid.reshape(nchunks, 1, CHUNK, 1)
+
+    def chunk_step(h0, inp):
+        dt_k, b_k, c_k, x_k, v_k = inp  # (B, Lc, ...), v_k (1, Lc, 1)
+        # discretize: decay (B,Lc,E,N), input term dt*B*x
+        decay = jnp.exp(dt_k[..., None] * a)  # (B,Lc,E,N)
+        decay = decay * v_k[..., None] + (1.0 - v_k[..., None])
+        inp_t = dt_k[..., None] * b_k[:, :, None, :] * x_k[..., None]
+        inp_t = inp_t * v_k[..., None]
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        acc_a, acc_b = jax.lax.associative_scan(comb, (decay, inp_t), axis=1)
+        h = acc_a * h0[:, None] + acc_b  # (B,Lc,E,N), running state incl. h0
+        y_k = jnp.einsum("blen,bln->ble", h, c_k)
+        return h[:, -1], y_k
+
+    h0 = jnp.zeros((b_, e, n), jnp.float32)
+    h_final, y = jax.lax.scan(chunk_step, h0, (dt_c, b_c, c_c, x_c, v_c))
+    y = y.transpose(1, 0, 2, 3).reshape(b_, nchunks * CHUNK, e)[:, :s_]
+    y = y + xf * params["D"]
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dtype)
+    if return_state:
+        return out, {"conv": conv_state, "ssm": h_final}
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    e, dtr, n, k = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, k - 1, e), dtype),
+        "ssm": jnp.zeros((batch, e, n), jnp.float32),
+    }
+
+
+def mamba_decode(params, u, state, cfg: ModelConfig):
+    """One token. u: (B, 1, D). Returns (y, new_state) — O(1) memory."""
+    e, dtr, n, k = _dims(cfg)
+    dtype = u.dtype
+    xz = u @ params["in_proj"].astype(dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _causal_conv(
+        x, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype),
+        state=state["conv"],
+    )
+    x = jax.nn.silu(x)
+    dt, bmat, cmat, a = _ssm_params(params, x, e, dtr, n)
+    xf = x.astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :, None] * a)  # (B,E,N)
+    h = decay * state["ssm"] + dt[:, 0, :, None] * bmat[:, 0, None, :] * xf[:, 0, :, None]
+    y = jnp.einsum("ben,bn->be", h, cmat[:, 0])[:, None, :] + xf * params["D"]
+    y = y.astype(dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dtype), {"conv": conv_state, "ssm": h}

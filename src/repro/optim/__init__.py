@@ -1,0 +1,18 @@
+"""Optimizers, schedules, clipping, gradient compression."""
+from repro.optim.adafactor import Adafactor
+from repro.optim.adamw import AdamW
+from repro.optim.clipping import clip_by_global_norm, global_norm
+from repro.optim.grad_compression import compress_for_sync, decompress_after_sync
+from repro.optim.schedules import constant, cosine_with_warmup, linear_warmup
+
+__all__ = [
+    "AdamW",
+    "Adafactor",
+    "clip_by_global_norm",
+    "global_norm",
+    "compress_for_sync",
+    "decompress_after_sync",
+    "constant",
+    "cosine_with_warmup",
+    "linear_warmup",
+]

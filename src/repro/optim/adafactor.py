@@ -1,0 +1,81 @@
+"""Adafactor (factored second moments) — memory-lean optimizer option.
+
+For matrices, the second-moment estimate is factored into per-row and
+per-column accumulators (Shazeer & Stern, 2018), cutting optimizer memory
+from 2x params to ~1x + O(rows+cols) — the standard choice for the largest
+assigned configs when HBM is tight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Adafactor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: float | Callable = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def init(self, params):
+        def make(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {
+            "acc": jax.tree.map(make, params, is_leaf=lambda x: hasattr(x, "ndim")),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1) ** -self.decay
+        lr = self._lr(count)
+
+        def upd(p, g, acc):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + self.eps
+            if p.ndim >= 2:
+                vr = beta * acc["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * acc["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                vhat = (
+                    vr[..., None] * vc[..., None, :] / denom[..., None]
+                )
+                u = gf / jnp.sqrt(vhat)
+                new_acc = {"vr": vr, "vc": vc}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(v)
+                new_acc = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            return (p - lr * u).astype(p.dtype), new_acc
+
+        moved = jax.tree.map(
+            upd, params, grads, state["acc"],
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x),
+        )
+        # tree of (param, acc) tuples -> two trees
+        new_params = jax.tree.map(
+            lambda t: t[0], moved, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_acc = jax.tree.map(
+            lambda t: t[1], moved, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return new_params, {"acc": new_acc, "count": count}

@@ -1,0 +1,74 @@
+"""AdamW — hand-rolled (no optax in this container), pytree-native.
+
+State is two moments per parameter plus a step counter; moments inherit the
+parameter sharding (FSDP: optimizer state is sharded exactly like params,
+which is what makes the 26B configs fit 16 GiB/chip in the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # parameters whose path matches any of these suffixes skip weight decay
+    decay_mask: Callable[[Any], Any] | None = None
+
+    def init(self, params):
+        # Moments always fp32 — params may be stored bf16 (the production
+        # mixed-precision config: bf16 weights + fp32 optimizer state).
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state)."""
+        count = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"],
+            grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"],
+            grads,
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+        wd = self.weight_decay
+        mask = (
+            self.decay_mask(params)
+            if self.decay_mask is not None
+            else jax.tree.map(lambda p: p.ndim > 1, params)
+        )
+
+        def step(p, m, v, use_wd):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if wd:
+                upd = upd + wd * p * jnp.asarray(use_wd, p.dtype)
+            return (p - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, mu, nu, mask)
+        return new_params, {"mu": mu, "nu": nu, "count": count}

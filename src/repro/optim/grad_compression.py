@@ -1,0 +1,28 @@
+"""Gradient compression for cross-pod sync (distributed-optimization trick).
+
+On a multi-pod mesh the inter-pod links are the scarcest bandwidth; casting
+gradients to bf16 before the cross-pod reduction halves that traffic at
+negligible quality cost (loss-scale-safe: the reduction itself accumulates
+in fp32). ``compress_for_sync`` is applied inside the train step when
+``grad_sync == "compressed_bf16"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_for_sync", "decompress_after_sync"]
+
+
+def compress_for_sync(grads, mode: str = "none"):
+    if mode == "none":
+        return grads
+    if mode == "compressed_bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    raise ValueError(f"unknown grad_sync mode {mode!r}")
+
+
+def decompress_after_sync(grads, mode: str = "none"):
+    if mode == "none":
+        return grads
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)

@@ -1,0 +1,27 @@
+"""LR schedules as pure ``count -> lr`` callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine_with_warmup", "linear_warmup"]
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(count):
+        c = count.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, c / max(warmup_steps, 1))
+    return f
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def f(count):
+        c = count.astype(jnp.float32)
+        warm = jnp.minimum(1.0, c / max(warmup_steps, 1))
+        prog = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return f

@@ -1,0 +1,1 @@
+"""Runtime analysis + fault tolerance utilities."""

@@ -1,0 +1,42 @@
+"""Per-shape weighted collective profile — the dry-run 'profiler'.
+
+Groups trip-count-weighted collective bytes by (kind, shape) so the perf
+loop can see WHICH tensors dominate the ICI term (the closest thing to a
+comm profile without hardware).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.runtime.hlo_analysis import _shape_bytes
+from repro.runtime.hlo_loops import (
+    _COLLECTIVE_LINE,
+    _split_computations,
+    computation_multipliers,
+)
+
+__all__ = ["collective_profile"]
+
+
+def collective_profile(hlo: str, top: int = 12) -> list[tuple[str, float, int]]:
+    """Returns [(descr, weighted_bytes, count), ...] sorted desc."""
+    comps = _split_computations(hlo)
+    mult = computation_multipliers(hlo)
+    agg: dict[str, list[float]] = {}
+    for name, body in comps.items():
+        w = mult.get(name, 0)
+        if w == 0:
+            continue
+        for m in _COLLECTIVE_LINE.finditer(body):
+            shape_text, kind, phase = m.group(1), m.group(2), m.group(3)
+            if phase == "-done":
+                continue
+            b = _shape_bytes(shape_text)
+            key = f"{kind} {shape_text.strip()[:60]}"
+            cur = agg.setdefault(key, [0.0, 0])
+            cur[0] += w * b
+            cur[1] += w
+    rows = sorted(
+        ((k, v[0], v[1]) for k, v in agg.items()), key=lambda r: -r[1]
+    )
+    return rows[:top]

@@ -1,0 +1,154 @@
+"""Roofline terms from a compiled XLA artifact (deliverable g).
+
+``cost_analysis()`` supplies HLO FLOPs and bytes; collective bytes are NOT
+in cost_analysis, so we parse the optimized HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Hardware constants are TPU v5e:
+
+  peak 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link
+    hbm_bytes: float = 16e9  # capacity per chip
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.5 = f32[1024,512]{1,0} all-reduce(%x), replica_groups=...
+# also tuple-shaped: (f32[8]{0}, f32[16]{0}) all-reduce(...)
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes per collective kind from optimized HLO text.
+
+    -start/-done async pairs are counted once (on -start; bare ops always).
+    Shapes are PER-PARTITION in SPMD HLO, so the totals are per-device
+    bytes, which is what the ICI roofline term wants.
+    """
+    out: dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_text, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_text)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per-chip FLOPs (SPMD module cost_analysis)
+    hlo_bytes: float  # per-chip bytes accessed
+    coll_bytes_per_chip: float
+    coll_breakdown: dict
+    model_flops: float  # 6·N·D (dense) or 6·N_active·D
+    bytes_per_chip_peak: float  # from memory_analysis
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """model FLOPs / total compiled FLOPs (hlo_flops is per-device)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max(all terms): 1.0 = perfectly compute-bound."""
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.compute_s / t if t else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    model_flops: float,
+    bytes_per_chip_peak: float,
+    hw: HW = HW(),
+) -> RooflineReport:
+    # cost_analysis() runs on the per-device SPMD module: flops/bytes are
+    # already per-chip (validated: gemma-2b train flops × 256 ≈ 6·N·D).
+    flops = float(cost.get("flops", 0.0))
+    btot = float(
+        cost.get("bytes accessed", 0.0)
+        or sum(v for k, v in cost.items() if k.startswith("bytes accessed"))
+    )
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    rep = RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=btot,
+        coll_bytes_per_chip=coll_total,
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        bytes_per_chip_peak=bytes_per_chip_peak,
+    )
+    rep.compute_s = flops / hw.peak_flops
+    rep.memory_s = btot / hw.hbm_bw
+    rep.collective_s = coll_total / hw.ici_bw  # per-chip shapes
+    return rep

@@ -1,0 +1,124 @@
+"""Trip-count-aware HLO traversal.
+
+XLA's ``HloCostAnalysis`` (and a naive text scan) counts a ``while`` body
+ONCE — but scan-over-layers executes it ``num_layers`` times, so collective
+bytes and FLOPs inside the loop are undercounted by the trip count. This
+module parses the optimized HLO text into computations, recovers each
+while-loop's trip count from its condition, propagates multipliers along
+the call graph (whiles nest: a CE-chunk scan inside the layer scan inherits
+both trips), and re-sums collective bytes with the correct weights.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.runtime.hlo_analysis import _shape_bytes
+
+__all__ = ["collective_bytes_weighted", "computation_multipliers"]
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)"
+)
+_CALL_RE = re.compile(
+    r"(?:call|fusion)\([^)]*\)\s*,\s*(?:[^,]*,\s*)?(?:to_apply|calls)=%?([\w\.\-]+)"
+)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLLECTIVE_LINE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    """computation name -> body text.
+
+    Header lines look like ``[ENTRY ]%name (params...) -> type {`` — params
+    may contain nested parens (tuple types) and layout braces, so headers
+    are recognized line-wise (the only lines that end with ``{``) and the
+    body is brace-matched from the line end."""
+    comps: dict[str, str] = {}
+    lines = hlo.splitlines(keepends=True)
+    offsets = []
+    pos = 0
+    for ln in lines:
+        offsets.append(pos)
+        pos += len(ln)
+    for idx, ln in enumerate(lines):
+        stripped = ln.rstrip()
+        if not stripped.endswith("{") or "->" not in stripped:
+            continue
+        head = stripped.lstrip()
+        if head.startswith("ENTRY"):
+            head = head[len("ENTRY"):].lstrip()
+        if not head:
+            continue
+        name = head.split()[0].split("(")[0].lstrip("%")
+        if not name:
+            continue
+        start = offsets[idx] + len(ln)
+        depth = 1
+        i = start
+        while i < len(hlo) and depth:
+            c = hlo[i]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+            i += 1
+        comps[name] = hlo[start:i]
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Largest s32[] constant in the while condition ≈ trip count."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo: str) -> dict[str, int]:
+    """Execution-count multiplier per computation (entry = 1)."""
+    comps = _split_computations(hlo)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: first computation
+        entry = next(iter(comps), None)
+    mult: dict[str, int] = {}
+
+    def visit(name: str, factor: int):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + factor
+        body = comps[name]
+        for wm in _WHILE_RE.finditer(body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            visit(wbody, factor * trips)
+            visit(cond, factor * (trips + 1))
+        for cm in _CALL_RE.finditer(body):
+            visit(cm.group(1), factor)
+
+    if entry:
+        visit(entry, 1)
+    return mult
+
+
+def collective_bytes_weighted(hlo: str) -> dict[str, float]:
+    """Collective bytes per kind, weighted by loop trip counts."""
+    comps = _split_computations(hlo)
+    mult = computation_multipliers(hlo)
+    out: dict[str, float] = {}
+    for name, body in comps.items():
+        w = mult.get(name, 0)
+        if w == 0:
+            continue
+        for m in _COLLECTIVE_LINE.finditer(body):
+            shape_text, kind, phase = m.group(1), m.group(2), m.group(3)
+            if phase == "-done":
+                continue
+            out[kind] = out.get(kind, 0.0) + w * _shape_bytes(shape_text)
+    return out

@@ -1,0 +1,4 @@
+"""Serving: batched prefill/decode engine with sampling."""
+from repro.serving.engine import Request, ServeEngine, sample_token
+
+__all__ = ["Request", "ServeEngine", "sample_token"]

@@ -1,0 +1,122 @@
+"""Batched serving engine: length-bucketed batching, prefill + decode,
+sampling.
+
+The batcher buckets queued requests by prompt length (uniform-length
+batches keep the cache layout exact — no left-pad attention pollution),
+prefills each bucket as one batch, then decodes all sequences in lockstep
+with per-request stop handling. Greedy / temperature / top-k sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+__all__ = ["Request", "ServeEngine", "sample_token"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 => greedy
+    top_k: int = 0
+    eos_id: int | None = None
+
+
+def sample_token(logits, key, temperature: float, top_k: int):
+    """logits: (B, V). Returns (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Stateless-model, stateful-queue serving engine."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8, seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.key = jax.random.PRNGKey(seed)
+        self._queue: list[Request] = []
+        self._decode_jit = jax.jit(
+            lambda params, cache, tok, pos: self.model.decode(params, cache, tok, pos)
+        )
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _take_bucket(self) -> list[Request]:
+        """Pop up to max_batch requests sharing one prompt length."""
+        if not self._queue:
+            return []
+        by_len: dict[int, list[Request]] = defaultdict(list)
+        for r in self._queue:
+            by_len[len(r.prompt)].append(r)
+        # largest bucket first: maximizes batch utilization
+        length = max(by_len, key=lambda k: len(by_len[k]))
+        bucket = by_len[length][: self.max_batch]
+        taken = set(id(r) for r in bucket)
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        return bucket
+
+    # -- execution ----------------------------------------------------------
+    def run(self) -> dict[int, list[int]]:
+        """Drain the queue; returns request_id -> generated token list."""
+        results: dict[int, list[int]] = {}
+        while self._queue:
+            bucket = self._take_bucket()
+            results.update(self._run_bucket(bucket))
+        return results
+
+    def _run_bucket(self, bucket: Sequence[Request]) -> dict[int, list[int]]:
+        b = len(bucket)
+        prompt_len = len(bucket[0].prompt)
+        max_new = max(r.max_new_tokens for r in bucket)
+        max_len = prompt_len + max_new + 1
+        tokens = jnp.asarray([r.prompt for r in bucket], jnp.int32)
+        last_logits, cache = self.model.prefill(
+            self.params, tokens, max_len=max_len
+        )
+        out: dict[int, list[int]] = {r.request_id: [] for r in bucket}
+        done = np.zeros(b, bool)
+        cur = last_logits[:, 0, : self.cfg.vocab_size]
+        for t in range(max_new):
+            self.key, sub = jax.random.split(self.key)
+            temps = bucket[0].temperature  # per-bucket sampling params
+            topk = bucket[0].top_k
+            nxt = sample_token(cur.astype(jnp.float32), sub, temps, topk)
+            nxt_np = np.asarray(nxt)
+            for i, r in enumerate(bucket):
+                if done[i] or t >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                tok = int(nxt_np[i])
+                out[r.request_id].append(tok)
+                if r.eos_id is not None and tok == r.eos_id:
+                    done[i] = True
+            if done.all():
+                break
+            logits, cache = self._decode_jit(
+                self.params,
+                cache,
+                nxt[:, None],
+                jnp.asarray(prompt_len + t, jnp.int32),
+            )
+            cur = logits[:, 0, : self.cfg.vocab_size]
+        return out

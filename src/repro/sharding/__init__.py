@@ -1,0 +1,22 @@
+"""Divisibility-aware logical-axis sharding rules."""
+from repro.sharding.rules import (
+    LOGICAL_RULES,
+    batch_spec,
+    constrain,
+    named_sharding,
+    param_logical_axes,
+    param_specs,
+    spec_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "batch_spec",
+    "constrain",
+    "named_sharding",
+    "param_logical_axes",
+    "param_specs",
+    "spec_for",
+    "tree_shardings",
+]

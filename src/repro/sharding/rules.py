@@ -1,0 +1,325 @@
+"""Logical-axis sharding rules — divisibility-aware (DESIGN.md §5).
+
+Every parameter / activation dimension gets a *logical* name; rules map
+logical names to mesh axes; :func:`spec_for` drops any mesh axis that does
+not divide the concrete dimension (qwen2.5's 40 heads vs model=16, whisper's
+odd vocab before padding, ...), guaranteeing that every (arch × shape × mesh)
+cell lowers. The fallbacks (context/sequence parallelism for attention) are
+encoded in the activation rules.
+
+Default mapping:
+  batch   -> ("pod", "data")   DP across pods and the data axis
+  embed   -> "data"            FSDP storage sharding of params/optimizer
+  vocab/heads/kv_heads/mlp/experts -> "model"   TP / EP
+  kv_seq  -> "model"           flash-decoding fallback when heads don't fit
+  seq     -> "data"            long-context cache sharding (SP)
+  layers  -> None              scan-stacked depth: replicated
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_RULES",
+    "spec_for",
+    "named_sharding",
+    "param_logical_axes",
+    "param_specs",
+    "tree_shardings",
+    "batch_spec",
+    "constrain",
+]
+
+# logical axis -> tuple of mesh axes to try (joined as a tuple spec entry)
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    # CE-loss logits keep vocab on "model": batch for the loss shards over
+    # (pod, data) only, so the lm-head is never gathered (train profile v2
+    # would otherwise all-gather the (V, D) head per CE chunk — measured
+    # 50 GB/chip on codeqwen).
+    "batch_ce": ("pod", "data"),
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "seq": (),
+    "kv_seq": ("model",),
+    # decode KV caches: sequence over "model" (flash-decoding style) — kv
+    # head counts (8, 1, ...) rarely divide the 16-way model axis, cache
+    # length always does. Batch still takes (pod, data).
+    "cache_seq": ("model",),
+    "layers": (),
+    "conv": (),
+    "state": (),
+    "frames": (),
+    "dt_rank": (),
+    None: (),
+}
+
+
+# Serving profile: parameters are NOT FSDP-sharded over "data" — a decode
+# step would otherwise all-gather every parameter once per token. TP-only
+# weights fit HBM for every assigned arch (26B fp32 / 16 = 1.6 GB more than
+# offset by removing per-token gathers).
+SERVING_RULES: dict[str, tuple[str, ...]] = dict(LOGICAL_RULES)
+SERVING_RULES["embed"] = ()
+
+# Train profile v2 (§Perf iteration): pure FSDP / ZeRO-3. Batch data-
+# parallel over EVERY mesh axis; parameters 2-D sharded over (data, model)
+# for storage and all-gathered (bf16) per layer; no tensor parallelism =>
+# no per-layer activation all-reduces (measured: the dominant train
+# collective, 240 GB/chip f32 on codeqwen), and MoE dispatch stays fully
+# local (no expert parallelism => no replicated global dispatch scatter).
+# The vocab axis keeps "model" so embedding/lm-head stay 2-D sharded.
+TRAIN_FSDP_RULES: dict[str, tuple[str, ...]] = dict(LOGICAL_RULES)
+TRAIN_FSDP_RULES.update(
+    batch=("pod", "data", "model"),
+    embed=("data", "model"),
+    vocab=("model",),
+    heads=(),
+    kv_heads=(),
+    mlp=(),
+    experts=(),
+)
+
+
+def _axes_that_divide(dim: int, axes: tuple[str, ...], mesh: Mesh) -> tuple[str, ...]:
+    """Greedily keep the prefix of mesh axes whose product divides dim."""
+    kept: list[str] = []
+    prod = 1
+    for ax in axes:
+        if ax not in mesh.shape:
+            continue
+        nxt = prod * mesh.shape[ax]
+        if dim % nxt == 0:
+            kept.append(ax)
+            prod = nxt
+        else:
+            break
+    return tuple(kept)
+
+
+def spec_for(
+    logical: tuple[str | None, ...],
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> P:
+    """Build a PartitionSpec for a tensor with the given logical axes."""
+    rules = rules or LOGICAL_RULES
+    assert len(logical) == len(shape), f"{logical} vs {shape}"
+    entries: list[Any] = []
+    used: set[str] = set()
+    for name, dim in zip(logical, shape):
+        want = rules.get(name, ())
+        want = tuple(a for a in want if a not in used)
+        kept = _axes_that_divide(dim, want, mesh)
+        used.update(kept)
+        if not kept:
+            entries.append(None)
+        elif len(kept) == 1:
+            entries.append(kept[0])
+        else:
+            entries.append(tuple(kept))
+    return P(*entries)
+
+
+def named_sharding(logical, shape, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(tuple(logical), tuple(shape), mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# Parameter-tree logical axes by path pattern.
+# Paths look like "blocks/0/attn/wq" or "pre/0/moe/wi".
+# ---------------------------------------------------------------------------
+_PARAM_PATTERNS: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed$", ("vocab", "embed")),
+    (r"lm_head$", ("vocab", "embed")),
+    (r"attn/wq$", ("embed", "heads", "head_dim")),
+    (r"attn/wk$", ("embed", "kv_heads", "head_dim")),
+    (r"attn/wv$", ("embed", "kv_heads", "head_dim")),
+    (r"attn/wo$", ("heads", "head_dim", "embed")),
+    (r"attn/b[qkv]$", (None, None)),
+    (r"cross/wq$", ("embed", "heads", "head_dim")),
+    (r"cross/w[kv]$", ("embed", "kv_heads", "head_dim")),
+    (r"cross/wo$", ("heads", "head_dim", "embed")),
+    (r"cross/b[qkv]$", (None, None)),
+    (r"mlp/wi$", ("embed", "mlp")),
+    (r"mlp/wo$", ("mlp", "embed")),
+    (r"shared/wi$", ("embed", "mlp")),
+    (r"shared/wo$", ("mlp", "embed")),
+    (r"moe/router$", ("embed", None)),
+    (r"moe/wi$", ("experts", "embed", "expert_mlp")),
+    (r"moe/wo$", ("experts", "expert_mlp", "embed")),
+    # Mamba: shard the expanded inner dim (counts as "mlp")
+    (r"ssm/in_proj$", ("embed", "mlp")),
+    (r"ssm/conv_w$", ("conv", "mlp")),
+    (r"ssm/conv_b$", ("mlp",)),
+    (r"ssm/x_proj$", ("mlp", None)),
+    (r"ssm/dt_proj$", ("dt_rank", "mlp")),
+    (r"ssm/dt_bias$", ("mlp",)),
+    (r"ssm/A_log$", ("mlp", "state")),
+    (r"ssm/D$", ("mlp",)),
+    (r"ssm/out_proj$", ("mlp", "embed")),
+    # RG-LRU: lru width counts as "mlp"
+    (r"rec/in_x$", ("embed", "mlp")),
+    (r"rec/in_gate$", ("embed", "mlp")),
+    (r"rec/conv_w$", ("conv", "mlp")),
+    (r"rec/conv_b$", ("mlp",)),
+    (r"rec/w[ax]$", ("mlp", None)),
+    (r"rec/b[ax]$", ("mlp",)),
+    (r"rec/lambda$", ("mlp",)),
+    (r"rec/out$", ("mlp", "embed")),
+    (r"(ln[12x]?|ln1_post|ln2_post|final_norm|lnx)/scale$", ("embed",)),
+]
+
+# decode-cache leaves (inputs/outputs of decode_step / prefill)
+_CACHE_PATTERNS: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"kv/[kv]$", ("batch", "cache_seq", None, None)),
+    (r"cross_kv/[kv]$", ("batch", "cache_seq", None, None)),
+    (r"rec/h$", ("batch", "mlp")),
+    (r"rec/conv$", ("batch", None, "mlp")),
+    (r"ssm/conv$", ("batch", None, "mlp")),
+    (r"ssm/ssm$", ("batch", "mlp", "state")),
+]
+
+
+def cache_logical_axes(path: str, shape: tuple[int, ...]) -> tuple[str | None, ...]:
+    stacked = bool(re.search(r"(^|/)blocks/", path))
+    for pat, axes in _CACHE_PATTERNS:
+        if re.search(pat, path):
+            return (("layers",) + tuple(axes)) if stacked else tuple(axes)
+    return tuple([None] * len(shape))
+
+
+def cache_specs(cache_shapes, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten(cache_shapes)
+    paths = _tree_paths(cache_shapes)
+    specs = []
+    for (path, leaf), _ in zip(paths, flat):
+        axes = cache_logical_axes(path, tuple(leaf.shape))
+        specs.append(spec_for(axes, tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_logical_axes(path: str, shape: tuple[int, ...]) -> tuple[str | None, ...]:
+    """Logical axes for a parameter, by path suffix match. Scanned stacks
+    ("blocks/...") carry a leading "layers" axis."""
+    stacked = bool(re.search(r"(^|/)blocks/", path)) or bool(
+        re.search(r"encoder/blocks", path)
+    )
+    for pat, axes in _PARAM_PATTERNS:
+        if re.search(pat, path):
+            if stacked:
+                return ("layers",) + tuple(axes)
+            return tuple(axes)
+    # default: replicate
+    return tuple([None] * len(shape))
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def param_specs(param_shapes, mesh: Mesh, rules: dict | None = None):
+    """PartitionSpec tree mirroring a parameter (shape) tree."""
+    flat, treedef = jax.tree_util.tree_flatten(param_shapes)
+    paths = _tree_paths(param_shapes)
+    specs = []
+    for (path, leaf), _ in zip(paths, flat):
+        axes = param_logical_axes(path, tuple(leaf.shape))
+        specs.append(spec_for(axes, tuple(leaf.shape), mesh, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(param_shapes, mesh: Mesh, rules: dict | None = None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(param_shapes, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Sharding for the leading batch dim of inputs."""
+    axes = _axes_that_divide(batch, LOGICAL_RULES["batch"], mesh)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def constrain(x, mesh: Mesh, logical: tuple[str | None, ...]):
+    """with_sharding_constraint by logical axes (activation annotations)."""
+    spec = spec_for(logical, tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Active-mesh context: model code annotates activations with logical axes;
+# the annotations are no-ops unless a launcher activated a mesh (CPU tests
+# and single-device runs see unannotated pure functions).
+# ---------------------------------------------------------------------------
+import contextlib
+
+_ACTIVE_MESH: list[tuple[Mesh, dict]] = []
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh, rules: dict | None = None):
+    _ACTIVE_MESH.append((mesh, rules or LOGICAL_RULES))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.pop()
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE_MESH[-1][0] if _ACTIVE_MESH else None
+
+
+def active_rules() -> dict:
+    return _ACTIVE_MESH[-1][1] if _ACTIVE_MESH else LOGICAL_RULES
+
+
+_IN_SHARD_MAP: list[bool] = []
+
+
+@contextlib.contextmanager
+def suppress_constraints():
+    """Inside shard_map bodies, mesh axes are manual — with_sharding_
+    constraint is illegal there, so annotations become no-ops."""
+    _IN_SHARD_MAP.append(True)
+    try:
+        yield
+    finally:
+        _IN_SHARD_MAP.pop()
+
+
+def maybe_constrain(x, *logical: str | None):
+    """Divisibility-aware activation annotation; no-op without a mesh."""
+    if not _ACTIVE_MESH or _IN_SHARD_MAP:
+        return x
+    mesh, rules = _ACTIVE_MESH[-1]
+    spec = spec_for(tuple(logical), tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

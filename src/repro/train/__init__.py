@@ -1,0 +1,12 @@
+"""Training substrate: state, step builder, fault-tolerant loop."""
+from repro.train.state import TrainState, abstract_train_state, make_train_state
+from repro.train.step import chunked_cross_entropy, make_loss_fn, make_train_step
+
+__all__ = [
+    "TrainState",
+    "abstract_train_state",
+    "make_train_state",
+    "chunked_cross_entropy",
+    "make_loss_fn",
+    "make_train_step",
+]

@@ -1,0 +1,35 @@
+"""Train state pytree + construction helpers."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState", "make_train_state", "abstract_train_state"]
+
+
+def TrainState(params, opt_state, step) -> dict:
+    """Plain-dict train state (pytree-friendly, checkpoint-friendly)."""
+    return {"params": params, "opt_state": opt_state, "step": step}
+
+
+def make_train_state(cfg, optimizer, key) -> dict:
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(cfg, optimizer) -> Any:
+    """ShapeDtypeStruct tree of the train state — used by the dry-run
+    (lower against specs; never allocate the 26B configs on CPU)."""
+    from repro.models import init_params
+
+    def build():
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        return TrainState(
+            params, optimizer.init(params), jnp.zeros((), jnp.int32)
+        )
+
+    return jax.eval_shape(build)

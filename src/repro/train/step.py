@@ -1,0 +1,175 @@
+"""Train step builder: loss (chunked CE + z-loss + MoE aux), grad
+accumulation, clipping, optional bf16 gradient compression, optimizer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.optim import clip_by_global_norm, global_norm
+from repro.sharding.rules import maybe_constrain
+from repro.train.state import TrainState
+
+__all__ = ["make_loss_fn", "make_train_step", "chunked_cross_entropy"]
+
+CE_CHUNK = 256  # sequence positions per CE chunk (bounds fp32 softmax memory)
+
+
+def chunked_cross_entropy(
+    hidden, head, labels, *, z_loss: float = 1e-4, softcap: float | None = None
+):
+    """Fused head-projection + CE over hidden states (B, S, D), chunked.
+
+    The (B, S, V) logits tensor NEVER materializes: each scan step projects
+    CE_CHUNK positions through the (V, D) head, takes fp32 log-softmax, and
+    discards. The chunk body is rematerialized in backward, so dlogits also
+    stays O(chunk). Without this, train_4k × 256k-vocab transiently needs
+    ~1 TB fp32 globally (measured: 685 GB/device temp in the dry-run).
+    """
+    b, s, d = hidden.shape
+    nchunk = -(-s // CE_CHUNK)
+    pad = nchunk * CE_CHUNK - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(b, nchunk, CE_CHUNK, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, nchunk, CE_CHUNK).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(h, yy):
+        lg = jnp.einsum("bcd,vd->bcv", h, head.astype(h.dtype))
+        lg = maybe_constrain(lg, "batch", None, "vocab")
+        if softcap is not None:
+            lg = softcap * jnp.tanh(lg / softcap)
+        lg = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.maximum(yy, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (yy >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return nll.sum(), (jnp.square(lse) * valid).sum(), valid.sum()
+
+    def step(carry, inp):
+        tot, zl, cnt = carry
+        h, yy = inp
+        a, b_, c = chunk_loss(h, yy)
+        return (tot + a, zl + b_, cnt + c), None
+
+    (tot, zl, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (hc, yc)
+    )
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt + z_loss * zl / cnt, cnt
+
+
+def _cast_params_for_compute(params, cfg: ModelConfig):
+    """Master-weight mixed precision: cast >=2-D params to the compute dtype
+    ONCE per step, while still sharded. All per-layer FSDP all-gathers then
+    move bf16 instead of f32 (measured: halves the dominant train
+    collectives). The cast's VJP converts the bf16 cotangents back to f32
+    for the optimizer, so master weights stay exact."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def cast(x):
+        if x.ndim >= 2 and x.dtype == jnp.float32:
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(cast, params)
+
+
+def make_loss_fn(cfg: ModelConfig, *, z_loss: float = 1e-4, moe_aux_coef: float = 0.01):
+    def loss_fn(params, batch):
+        params = _cast_params_for_compute(params, cfg)
+        extra = {
+            k: batch[k]
+            for k in ("patch_embeds", "frames")
+            if k in batch
+        }
+        hidden, aux = forward(
+            cfg, params, batch["tokens"], return_hidden=True, **extra
+        )
+        labels = batch["labels"]
+        if cfg.vision is not None:
+            # patch positions carry no next-token loss
+            hidden = hidden[:, cfg.vision.num_patches :, :]
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        loss, tokens = chunked_cross_entropy(
+            hidden, head, labels, z_loss=z_loss, softcap=cfg.final_softcap
+        )
+        metrics = {"ce_loss": loss, "tokens": tokens}
+        if "load_balance_loss" in aux:
+            loss = loss + moe_aux_coef * aux["load_balance_loss"]
+            metrics["load_balance_loss"] = aux["load_balance_loss"]
+            metrics["dropped_fraction"] = aux.get("dropped_fraction", 0.0)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    *,
+    clip_norm: float = 1.0,
+    accum_steps: int = 1,
+    grad_sync: str = "none",  # "none" | "compressed_bf16"
+    z_loss: float = 1e-4,
+):
+    """Build the jit-able ``train_step(state, batch) -> (state, metrics)``.
+
+    ``accum_steps > 1`` scans over microbatches (leading batch split),
+    accumulating grads — in bf16 when ``grad_sync == "compressed_bf16"``,
+    which halves the cross-pod gradient-reduction traffic (the accumulated
+    tensor is what crosses the DP axes).
+    """
+    loss_fn = make_loss_fn(cfg, z_loss=z_loss)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    acc_dtype = jnp.bfloat16 if grad_sync == "compressed_bf16" else jnp.float32
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            )
+            (grads, loss_sum), metrics_stack = jax.lax.scan(
+                acc_step, (g0, jnp.zeros(())), micro
+            )
+            grads = jax.tree.map(
+                lambda g: (g / accum_steps).astype(jnp.float32), grads
+            )
+            loss = loss_sum / accum_steps
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_stack)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, state["opt_state"], params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, state["step"] + 1), metrics
+
+    return train_step

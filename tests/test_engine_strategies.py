@@ -1,0 +1,260 @@
+"""SPU / DPU / MPU / fused equivalence + I/O-model property tests.
+
+The paper's central systems claim is that all three update strategies
+compute the same fixpoint while trading memory for slow-tier traffic
+exactly as Table II predicts. Both halves are tested here.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    IOParams,
+    NXGraphEngine,
+    PageRank,
+    build_dsss,
+    dpu_io,
+    mpu_io,
+    mpu_q,
+    select_strategy,
+    spu_io,
+    turbograph_like_io,
+)
+from repro.core.baselines import TurboGraphLikeEngine
+from repro.core.vertex_programs import BFS, WCC
+from repro.graph.generators import erdos_renyi, rmat
+from repro.graph.preprocess import degree_and_densify
+
+ITERS = 8
+
+
+def _graph(n=120, m=600, seed=0, P=4):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+class TestStrategyEquivalence:
+    @pytest.mark.parametrize("strategy", ["spu", "dpu", "mpu", "fused"])
+    def test_pagerank_equal_across_strategies(self, strategy):
+        g = _graph(seed=1)
+        ref = NXGraphEngine(g, PageRank(), strategy="spu").run(ITERS, tol=0.0)
+        eng = NXGraphEngine(
+            g, PageRank(), strategy=strategy, memory_budget=4_000
+        )
+        got = eng.run(ITERS, tol=0.0)
+        np.testing.assert_allclose(got.attrs, ref.attrs, rtol=1e-6, atol=1e-9)
+
+    @pytest.mark.parametrize("strategy", ["spu", "dpu", "mpu", "fused"])
+    @pytest.mark.parametrize("program_cls", [BFS, WCC])
+    def test_monotone_programs_equal(self, strategy, program_cls):
+        g = _graph(seed=2)
+        kw = {"root": 0} if program_cls is BFS else {}
+        ref = NXGraphEngine(g, program_cls(), strategy="spu").run(200, **kw)
+        eng = NXGraphEngine(
+            g, program_cls(), strategy=strategy, memory_budget=2_000
+        )
+        got = eng.run(200, **kw)
+        np.testing.assert_array_equal(got.attrs, ref.attrs)
+
+    def test_turbograph_like_same_fixpoint(self):
+        g = _graph(seed=3)
+        ref = NXGraphEngine(g, PageRank(), strategy="spu").run(ITERS, tol=0.0)
+        got = TurboGraphLikeEngine(g, PageRank()).run(ITERS, tol=0.0)
+        np.testing.assert_allclose(got.attrs, ref.attrs, rtol=1e-6, atol=1e-9)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 50),
+        P=st.integers(1, 6),
+        budget=st.integers(500, 50_000),
+    )
+    def test_property_strategy_equivalence(self, seed, P, budget):
+        """Any strategy × any budget × any partitioning → same PageRank."""
+        g = _graph(n=60, m=240, seed=seed, P=P)
+        ref = NXGraphEngine(g, PageRank(), strategy="fused").run(5, tol=0.0)
+        for strategy in ["spu", "dpu", "mpu"]:
+            got = NXGraphEngine(
+                g, PageRank(), strategy=strategy, memory_budget=budget
+            ).run(5, tol=0.0)
+            np.testing.assert_allclose(
+                got.attrs, ref.attrs, rtol=1e-5, atol=1e-8
+            )
+
+
+class TestByteMeters:
+    """Engine meters must reproduce the paper's Table II closed forms."""
+
+    def test_spu_edges_streamed_exactly(self):
+        g = _graph(seed=4)
+        eng = NXGraphEngine(g, PageRank(), strategy="spu", memory_budget=None)
+        res = eng.run(ITERS, tol=0.0)
+        # Unlimited memory: everything resident, zero slow-tier traffic
+        # (B_read = 0 when B_M > 2n·Ba + m·Be).
+        assert res.meters.bytes_read == 0 and res.meters.bytes_written == 0
+
+    def test_spu_read_formula_with_budget(self):
+        g = _graph(seed=4)
+        prog = PageRank()
+        Ba = prog.attr_bytes
+        budget = 2 * g.n_pad * Ba + (g.m * 8) // 3  # 1/3 of edges resident
+        eng = NXGraphEngine(g, prog, strategy="spu", memory_budget=budget)
+        res = eng.run(ITERS, tol=0.0)
+        per = res.meters.per_iteration()
+        expect_read, expect_write = spu_io(eng.params, budget)
+        # Residency is block-granular; allow one max-block slack.
+        max_block = max(b["e"] for b in eng.blocks.values()) * eng.Be
+        assert abs(per.bytes_read - expect_read) <= max_block
+        assert per.bytes_written == expect_write == 0
+
+    def test_dpu_formula_exact_with_measured_d(self):
+        g = _graph(seed=5)
+        prog = PageRank()
+        eng = NXGraphEngine(g, prog, strategy="dpu")
+        res = eng.run(ITERS, tol=0.0)
+        per = res.meters.per_iteration()
+        # Use the graph's actual hub factor d — then the formula is exact
+        # for PageRank (non-monotone: no extra interval reads).
+        p = eng.params
+        expect_read, expect_write = dpu_io(p)
+        # n·Ba in the formula vs n_pad·Ba in the engine (padded intervals).
+        pad_slack = (g.n_pad - g.n) * p.Ba
+        assert abs(per.bytes_read - expect_read) <= pad_slack + 1e-6
+        assert abs(per.bytes_written - expect_write) <= pad_slack + 1e-6
+
+    def test_mpu_between_spu_and_dpu(self):
+        g = _graph(n=200, m=1000, seed=6, P=8)
+        prog = PageRank()
+        dpu = NXGraphEngine(g, prog, strategy="dpu").run(ITERS, tol=0.0)
+        budget = 2 * g.interval_size * prog.attr_bytes * 5  # Q = 5 of 8
+        mpu = NXGraphEngine(
+            g, prog, strategy="mpu", memory_budget=budget
+        ).run(ITERS, tol=0.0)
+        spu = NXGraphEngine(g, prog, strategy="spu").run(ITERS, tol=0.0)
+        assert (
+            spu.meters.bytes_total
+            <= mpu.meters.bytes_total
+            <= dpu.meters.bytes_total
+        )
+
+    def test_mpu_endpoints(self):
+        """Q=0 ⇒ MPU meters == DPU meters; Q=P ⇒ MPU == SPU (paper §III-B3)."""
+        g = _graph(seed=7)
+        prog = PageRank()
+        d = NXGraphEngine(g, prog, strategy="dpu").run(ITERS, tol=0.0)
+        m0 = NXGraphEngine(g, prog, strategy="mpu", memory_budget=0).run(
+            ITERS, tol=0.0
+        )
+        assert m0.meters.bytes_total == d.meters.bytes_total
+        big = 10**9
+        s = NXGraphEngine(g, prog, strategy="spu", memory_budget=big).run(
+            ITERS, tol=0.0
+        )
+        mP = NXGraphEngine(g, prog, strategy="mpu", memory_budget=big).run(
+            ITERS, tol=0.0
+        )
+        # Full-memory MPU has zero hub/interval traffic; SPU may additionally
+        # pin sub-shards, so MPU-edges vs SPU: both stream-or-resident.
+        assert mP.meters.bytes_read_hubs == 0
+        assert mP.meters.bytes_written_intervals == 0
+
+    def test_turbograph_like_np_scaling(self):
+        """The baseline's interval traffic is n·P·Ba + n·Ba (paper §III-C)."""
+        g = _graph(n=160, m=800, seed=8, P=8)
+        prog = PageRank()
+        eng = TurboGraphLikeEngine(g, prog)
+        res = eng.run(ITERS, tol=0.0)
+        per = res.meters.per_iteration()
+        Ba = prog.attr_bytes
+        # Destination loads: P intervals; source loads: one per non-empty
+        # (i, j) pair — n·P·Ba when the density matrix is full.
+        nonempty = len(eng.blocks)
+        expect_iv_read = (g.P + nonempty) * g.interval_size * Ba
+        assert per.bytes_read_intervals == pytest.approx(expect_iv_read)
+        assert per.bytes_written_intervals == pytest.approx(
+            g.P * g.interval_size * Ba
+        )
+
+    def test_mpu_dominates_turbograph_like_in_paper_regime(self):
+        """Measured version of paper Fig. 6: MPU total I/O ≤ TurboGraph-like.
+
+        The paper's claim is made for Yahoo-web parameters where the hub
+        factor d ≈ 10–20. It does NOT hold for sparse graphs with d ≈ 1
+        (hub traffic m·(Ba+Bv)/d then dominates the baseline's n·P·Ba) —
+        a boundary of the claim we document in EXPERIMENTS.md. Here we
+        check the measured claim in the paper's regime: a dense graph
+        whose sub-shard destinations have high in-degree.
+        """
+        src, dst = rmat(12, edge_factor=16, seed=2)
+        el = degree_and_densify(src, dst, drop_self_loops=True)
+        g = build_dsss(el, 12)  # paper §IV-B2: P = 12..48 are good practice
+        prog = PageRank()
+        for frac in [0.2, 0.5, 0.8]:
+            budget = int(2 * g.n_pad * prog.attr_bytes * frac)
+            mpu = NXGraphEngine(
+                g, prog, strategy="mpu", memory_budget=budget
+            ).run(ITERS, tol=0.0)
+            tg = TurboGraphLikeEngine(g, prog, memory_budget=budget).run(
+                ITERS, tol=0.0
+            )
+            assert mpu.meters.bytes_total <= tg.meters.bytes_total
+
+    def test_small_d_flips_fig6_claim(self):
+        """Beyond-paper finding: with hub factor d ≈ 1 (very sparse blocks),
+        the TurboGraph-like strategy can beat MPU — Fig. 6's 'always
+        outperforms' is parameter-dependent."""
+        g = _graph(n=240, m=1400, seed=9, P=8)
+        assert g.mean_hub_in_degree() < 2
+        prog = PageRank()
+        budget = int(2 * g.n_pad * prog.attr_bytes * 0.2)
+        mpu = NXGraphEngine(g, prog, strategy="mpu", memory_budget=budget).run(
+            ITERS, tol=0.0
+        )
+        tg = TurboGraphLikeEngine(g, prog, memory_budget=budget).run(
+            ITERS, tol=0.0
+        )
+        assert tg.meters.bytes_total < mpu.meters.bytes_total
+
+
+class TestIOModelClosedForms:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n=st.integers(100, 10**7),
+        deg=st.integers(1, 64),
+        P=st.integers(1, 64),
+        frac=st.floats(0.0, 1.5),
+    )
+    def test_model_monotonicity_and_endpoints(self, n, deg, P, frac):
+        m = n * deg
+        p = IOParams(n=n, m=m, P=P)
+        B_M = int(2 * n * p.Ba * frac)
+        # MPU interpolates: Q=0 -> DPU, budget >= 2nBa -> SPU-like traffic.
+        r_mpu, w_mpu = mpu_io(p, B_M)
+        r_dpu, w_dpu = dpu_io(p)
+        assert r_mpu <= r_dpu + 1e-6 and w_mpu <= w_dpu + 1e-6
+        if mpu_q(p, B_M) == 0:
+            assert r_mpu == pytest.approx(r_dpu) and w_mpu == pytest.approx(w_dpu)
+        # paper Fig. 6 claim: MPU total <= TurboGraph-like total, for all
+        # budgets — in the paper's continuous-Q (large-P) setting. Our
+        # analysis (EXPERIMENTS.md §Fig6) shows the claim is a theorem
+        # exactly when hub traffic H = m(Ba+Bv)/d ≤ min_x (1/x−1+2x) /
+        # (2(1−x)²) · n·Ba ≈ 2.98·n·Ba — satisfied by Yahoo-web (H/A≈0.92)
+        # but not by arbitrarily dense graphs.
+        H = p.m * (p.Ba + p.Bv) / p.d
+        A = p.n * p.Ba
+        if B_M > 0 and H <= 2.9 * A:
+            r_tg, w_tg = turbograph_like_io(p, B_M)
+            r_c, w_c = mpu_io(p, B_M, continuous=True)
+            assert r_c + w_c <= r_tg + w_tg + 1e-6
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(100, 10**6), deg=st.integers(1, 32), frac=st.floats(0.0, 3.0))
+    def test_selection_picks_min_io(self, n, deg, frac):
+        p = IOParams(n=n, m=n * deg, P=16)
+        B_M = int(2 * n * p.Ba * frac)
+        choice = select_strategy(p, B_M)
+        if B_M >= 2 * p.P * -(-n // p.P) * p.Ba:
+            assert choice.strategy == "spu"
+        else:
+            assert choice.strategy in ("mpu", "dpu")
+            assert 0 <= choice.Q < p.P

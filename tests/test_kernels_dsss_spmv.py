@@ -1,0 +1,148 @@
+"""dsss_spmv Pallas kernel vs pure-jnp oracle: shape/dtype/semiring sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PageRank, build_dsss
+from repro.core.engine import NXGraphEngine
+from repro.graph.generators import erdos_renyi, rmat
+from repro.graph.preprocess import degree_and_densify
+from repro.kernels.ops import prepare_subshard_operands, subshard_update
+from repro.kernels.ref import subshard_update_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _random_subshard(isize, e, nslots, seed, sorted_slots=True):
+    rng = np.random.default_rng(seed)
+    src_local = rng.integers(0, isize, e).astype(np.int32)
+    hub_inv = rng.integers(0, nslots, e).astype(np.int32)
+    if sorted_slots:
+        hub_inv = np.sort(hub_inv)
+    w = rng.random(e).astype(np.float32) + 0.1
+    return src_local, hub_inv, w
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "isize,e,nslots",
+    [(64, 100, 32), (300, 2000, 150), (128, 513, 128), (1000, 4096, 999), (16, 8, 4)],
+)
+@pytest.mark.parametrize(
+    "gather_op,reduce", [("mul", "sum"), ("add", "min"), ("add", "max")]
+)
+def test_kernel_matches_oracle(isize, e, nslots, gather_op, reduce, dtype):
+    src_local, hub_inv, w = _random_subshard(isize, e, nslots, seed=e + isize)
+    src_vals = jnp.asarray(RNG.random(isize) + 0.5, dtype)
+    ops_in = prepare_subshard_operands(
+        src_local, hub_inv, w, dtype, gather_op=gather_op, reduce=reduce
+    )
+    got = subshard_update(
+        src_vals, *ops_in, nslots, gather_op=gather_op, reduce=reduce
+    )
+    want = subshard_update_ref(
+        src_vals,
+        jnp.asarray(src_local),
+        jnp.asarray(hub_inv),
+        jnp.asarray(w, dtype),
+        nslots,
+        gather_op=gather_op,
+        reduce=reduce,
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+def test_mul_min_rejected():
+    src_local, hub_inv, w = _random_subshard(8, 8, 4, seed=0)
+    with pytest.raises(ValueError):
+        prepare_subshard_operands(
+            src_local, hub_inv, w, jnp.float32, gather_op="mul", reduce="min"
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    isize=st.integers(8, 256),
+    e=st.integers(1, 1500),
+    nslots=st.integers(1, 200),
+    seed=st.integers(0, 1000),
+    semiring=st.sampled_from([("mul", "sum"), ("add", "min"), ("add", "max")]),
+)
+def test_property_kernel_oracle(isize, e, nslots, seed, semiring):
+    gather_op, reduce = semiring
+    src_local, hub_inv, w = _random_subshard(isize, e, nslots, seed)
+    src_vals = jnp.asarray(np.random.default_rng(seed).random(isize), jnp.float32)
+    ops_in = prepare_subshard_operands(
+        src_local, hub_inv, w, jnp.float32, gather_op=gather_op, reduce=reduce
+    )
+    got = subshard_update(
+        src_vals, *ops_in, nslots, gather_op=gather_op, reduce=reduce
+    )
+    want = subshard_update_ref(
+        src_vals,
+        jnp.asarray(src_local),
+        jnp.asarray(hub_inv),
+        jnp.asarray(w),
+        nslots,
+        gather_op=gather_op,
+        reduce=reduce,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_end_to_end_pagerank_iteration_via_kernel():
+    """One PageRank iteration assembled from per-sub-shard kernel calls must
+    equal the engine's fused iteration — the kernel really is the engine's
+    hot loop on TPU."""
+    src, dst = rmat(9, edge_factor=8, seed=4)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    P = 4
+    g = build_dsss(el, P)
+    prog = PageRank()
+    eng = NXGraphEngine(g, prog, strategy="fused")
+    ref = eng.run(max_iters=1, tol=0.0)
+
+    # Manual iteration: x' per interval via kernel ToHub + hub scatter.
+    isz = g.interval_size
+    x = np.full(g.n_pad, 0.0, np.float32)
+    x[: g.n] = 1.0 / g.n
+    deg = np.asarray(g.out_degree, np.float32)
+    inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
+    contrib_base = (x * inv).astype(np.float32)  # rank/outdeg, per vertex
+    dangling = x[((deg == 0) & (np.arange(g.n_pad) < g.n))].sum()
+    new = np.zeros(g.n_pad, np.float32)
+    for j in range(P):
+        acc = np.zeros(isz, np.float32)
+        for i in range(P):
+            ss = g.subshard(i, j)
+            if ss.num_edges == 0:
+                continue
+            ops_in = prepare_subshard_operands(
+                ss.src_local,
+                ss.hub_inv,
+                None,
+                jnp.float32,
+                gather_op="mul",
+                reduce="sum",
+            )
+            hub = subshard_update(
+                jnp.asarray(contrib_base[i * isz : (i + 1) * isz]),
+                *ops_in,
+                ss.num_unique_dst,
+                gather_op="mul",
+                reduce="sum",
+            )
+            acc[ss.hub_dst] += np.asarray(hub)
+        new[j * isz : (j + 1) * isz] = (
+            0.15 / g.n + 0.85 * (acc + dangling / g.n)
+        )
+    np.testing.assert_allclose(
+        new[: g.n], ref.attrs, rtol=1e-5, atol=1e-7
+    )

@@ -1,0 +1,105 @@
+"""flash_attention Pallas kernel vs jnp oracle: shape/dtype/feature sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref
+
+RNG = np.random.default_rng(1)
+
+
+def _qkv(b, hq, hkv, sq, sk, d, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, sk, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d",
+    [
+        (2, 4, 4, 64, 64, 32),  # MHA
+        (1, 8, 2, 128, 128, 64),  # GQA 4:1
+        (1, 4, 1, 96, 160, 32),  # MQA, ragged kv, non-multiple block
+        (2, 16, 8, 32, 32, 128),  # gemma2-like ratios
+        (1, 2, 2, 257, 130, 64),  # non-aligned lengths (padding paths)
+    ],
+)
+def test_matches_oracle_causal(b, hq, hkv, sq, sk, d, dtype, tol):
+    q, k, v = _qkv(b, hq, hkv, sq, sk, d, dtype, seed=sq + sk)
+    got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [1, 8, 64, 1024])
+def test_sliding_window(window):
+    q, k, v = _qkv(1, 4, 2, 128, 128, 32, seed=window)
+    got = flash_attention(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [1.0, 30.0, 50.0])
+def test_logit_softcap(softcap):
+    """gemma2's attn_logit_softcapping."""
+    q, k, v = _qkv(1, 4, 4, 64, 64, 32, seed=int(softcap))
+    got = flash_attention(q, k, v, causal=True, softcap=softcap, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True, softcap=softcap)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_non_causal():
+    q, k, v = _qkv(2, 4, 4, 64, 96, 32, seed=9)
+    got = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_single_query():
+    """Decode shape: one query token against a long KV cache."""
+    q, k, v = _qkv(4, 8, 2, 1, 512, 64, seed=11)
+    got = flash_attention(q, k, v, causal=False, block_q=1, block_k=128)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_custom_scale():
+    q, k, v = _qkv(1, 2, 2, 64, 64, 32, seed=13)
+    got = flash_attention(q, k, v, causal=True, scale=0.5, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True, scale=0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    sq=st.integers(1, 150),
+    sk=st.integers(1, 150),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 100),
+)
+def test_property_matches_oracle(b, hkv, group, sq, sk, d, causal, seed):
+    q, k, v = _qkv(b, hkv * group, hkv, sq, sk, d, seed=seed)
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_rows_fully_masked_are_zero():
+    """Causal rows before the first unmasked key (window past end) -> 0."""
+    q, k, v = _qkv(1, 1, 1, 32, 32, 16, seed=3)
+    got = flash_attention(q, k, v, causal=True, window=1, block_q=16, block_k=16)
+    # window=1: each row attends only to itself -> output = v row
+    np.testing.assert_allclose(
+        np.asarray(got[0, 0]), np.asarray(v[0, 0]), rtol=2e-5, atol=2e-5
+    )

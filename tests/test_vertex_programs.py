@@ -1,0 +1,155 @@
+"""Algorithm correctness against networkx oracles (paper §IV tasks)."""
+import collections
+
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import INF_DEPTH, bfs, pagerank, scc, sssp, wcc
+from repro.graph.generators import erdos_renyi, ring, rmat, star
+from repro.graph.preprocess import degree_and_densify
+
+
+def _graph(n, m, seed):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(el.n))
+    G.add_edges_from(zip(el.src.tolist(), el.dst.tolist()))
+    return el, G
+
+
+def _partition_of(labels):
+    groups = collections.defaultdict(set)
+    for v, l in enumerate(labels):
+        groups[int(l)].add(v)
+    return set(map(frozenset, groups.values()))
+
+
+class TestPageRank:
+    @pytest.mark.parametrize("seed,P", [(0, 1), (1, 4), (2, 7)])
+    def test_matches_networkx(self, seed, P):
+        el, G = _graph(150, 600, seed)
+        res = pagerank(el, P=P, iters=100, tol=1e-12)
+        want = nx.pagerank(G, alpha=0.85, max_iter=300, tol=1e-13)
+        got = res.output
+        err = max(abs(got[v] - want[v]) for v in range(el.n))
+        assert err < 1e-6
+
+    def test_sums_to_one(self):
+        el, _ = _graph(100, 400, 5)
+        res = pagerank(el, P=4, iters=50, tol=1e-12)
+        assert res.output.sum() == pytest.approx(1.0, abs=1e-4)
+
+    def test_dangling_mass(self):
+        # star: all leaves are dangling; mass must be redistributed.
+        el = degree_and_densify(*star(20))
+        res = pagerank(el, P=2, iters=80, tol=1e-13)
+        G = nx.DiGraph()
+        G.add_nodes_from(range(el.n))
+        G.add_edges_from(zip(el.src.tolist(), el.dst.tolist()))
+        want = nx.pagerank(G, alpha=0.85)
+        err = max(abs(res.output[v] - want[v]) for v in range(el.n))
+        assert err < 1e-6
+
+    def test_fixed_iters_and_convergence_flag(self):
+        el, _ = _graph(100, 500, 6)
+        res = pagerank(el, P=4, iters=5, tol=0.0)
+        assert res.iterations == 5 and not res.converged
+        res2 = pagerank(el, P=4, iters=500, tol=1e-10)
+        assert res2.converged
+
+
+class TestBFS:
+    @pytest.mark.parametrize("seed,P", [(0, 1), (3, 4), (4, 8)])
+    def test_depths_match(self, seed, P):
+        el, G = _graph(200, 700, seed)
+        root = int(el.src[0])
+        res = bfs(el, root=root, P=P)
+        want = nx.single_source_shortest_path_length(G, root)
+        got = np.asarray(res.attrs)
+        for v in range(el.n):
+            w = want.get(v)
+            g = int(got[v]) if got[v] < INF_DEPTH else None
+            assert w == g, f"vertex {v}: nx={w} ours={g}"
+
+    def test_output_is_max_finite_depth(self):
+        # Paper Algorithm 4.
+        el = degree_and_densify(*ring(10))
+        res = bfs(el, root=0, P=2)
+        assert res.output == 9
+
+    def test_unreachable_stays_inf(self):
+        src = np.array([0, 2])
+        dst = np.array([1, 3])
+        el = degree_and_densify(src, dst)
+        root = int(el.index_to_id(np.array([0]))[0])
+        res = bfs(el, root=root, P=2)
+        inf_count = int((np.asarray(res.attrs) >= INF_DEPTH).sum())
+        assert inf_count == 2  # the 2-3 component
+
+    def test_activity_skips_blocks(self):
+        """BFS on a long ring must not touch every sub-shard every iteration."""
+        el = degree_and_densify(*ring(64))
+        res = bfs(el, root=0, P=8)
+        total_blocks_if_dense = res.iterations * 8 * 8
+        assert res.meters.blocks_skipped > 0
+        assert res.meters.blocks_processed < total_blocks_if_dense
+
+
+class TestWCC:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_partition_matches(self, seed):
+        el, G = _graph(150, 300, seed)
+        res = wcc(el, P=4)
+        want = set(map(frozenset, nx.weakly_connected_components(G)))
+        assert _partition_of(np.asarray(res.attrs)) == want
+
+    def test_min_label_is_component_min(self):
+        el, G = _graph(100, 150, 9)
+        res = wcc(el, P=4)
+        labels = np.asarray(res.attrs)
+        for comp in nx.weakly_connected_components(G):
+            assert {int(labels[v]) for v in comp} == {min(comp)}
+
+
+class TestSSSP:
+    def test_weighted_shortest_paths(self):
+        rng = np.random.default_rng(0)
+        src, dst = erdos_renyi(80, 400, seed=7)
+        w = rng.uniform(0.1, 2.0, size=len(src)).astype(np.float32)
+        el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+        G = nx.DiGraph()
+        G.add_nodes_from(range(el.n))
+        for s, d, ww in zip(el.src.tolist(), el.dst.tolist(), el.weights):
+            G.add_edge(s, d, weight=float(ww))
+        root = 0
+        res = sssp(el, root=root, P=4)
+        want = nx.single_source_dijkstra_path_length(G, root)
+        got = np.asarray(res.attrs)
+        for v in range(el.n):
+            if v in want:
+                assert got[v] == pytest.approx(want[v], rel=1e-5)
+            else:
+                assert np.isinf(got[v])
+
+
+class TestSCC:
+    @pytest.mark.parametrize("seed,n,m", [(0, 60, 150), (1, 100, 260), (2, 150, 450)])
+    def test_partition_matches(self, seed, n, m):
+        el, G = _graph(n, m, seed)
+        labels = scc(el, P=4)
+        want = set(map(frozenset, nx.strongly_connected_components(G)))
+        assert _partition_of(labels) == want
+
+    def test_ring_is_one_scc(self):
+        el = degree_and_densify(*ring(12))
+        labels = scc(el, P=3)
+        assert len(set(labels.tolist())) == 1
+
+    def test_dag_is_all_singletons(self):
+        src = np.array([0, 1, 2, 0, 1])
+        dst = np.array([1, 2, 3, 2, 3])
+        el = degree_and_densify(src, dst)
+        labels = scc(el, P=2)
+        assert len(set(labels.tolist())) == el.n
