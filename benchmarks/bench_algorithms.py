@@ -1,7 +1,8 @@
-"""Paper Fig 12 / Exp 7: BFS, WCC, SCC on the dataset stand-ins."""
+"""Paper Fig 12 / Exp 7: BFS, WCC, SCC on the dataset stand-ins, plus the
+batched multi-source BFS workload (K sources, one edge-stream pass)."""
 import time
 
-from repro.core import bfs, scc, wcc
+from repro.core import bfs, multi_bfs, scc, wcc
 
 from benchmarks._util import graph_standin, row
 
@@ -15,6 +16,18 @@ def run():
             t0 = time.perf_counter()
             fn()
             rows.append((f"{algo}_{name}", time.perf_counter() - t0, f"n={el.n};m={el.m}"))
+        # Batched: 16 sources sharing one streamed pass — compare against
+        # 16× the single-source row above to see the batching win.
+        K = 16
+        t0 = time.perf_counter()
+        batch = multi_bfs(el, list(range(K)), P=8)
+        rows.append(
+            (
+                f"multi_bfs{K}_{name}",
+                time.perf_counter() - t0,
+                f"n={el.n};m={el.m};fused={batch.fused};sweeps={batch.iterations}",
+            )
+        )
         t0 = time.perf_counter()
         scc(el, P=8)
         rows.append((f"scc_{name}", time.perf_counter() - t0, f"n={el.n};m={el.m}"))

@@ -1,5 +1,10 @@
-"""Paper Fig 8: SPU vs DPU wall time + slow-tier bytes (PageRank, BFS)."""
-from repro.core import NXGraphEngine, PageRank, BFS, build_dsss
+"""Paper Fig 8: SPU vs DPU wall time + slow-tier bytes (PageRank, BFS).
+
+Uses the Session/Plan API: the graph is staged once per scale and both
+strategies run against the same resident blocks, so the comparison measures
+the schedules, not repeated staging.
+"""
+from repro.core import ExecutionPlan, GraphSession, PageRank, build_dsss
 
 from benchmarks._util import row, small_rmat, timeit
 
@@ -9,10 +14,11 @@ def run():
     for scale, label in [(12, "small"), (14, "medium")]:
         el = small_rmat(scale, 12, seed=scale)
         g = build_dsss(el, 8)
+        session = GraphSession(g)
         for strat in ["spu", "dpu"]:
-            eng = NXGraphEngine(g, PageRank(), strategy=strat)
-            res = eng.run(3, tol=0.0)
-            t = timeit(lambda: eng.run(3, tol=0.0), warmup=0, iters=2)
+            plan = ExecutionPlan(PageRank(), strategy=strat, max_iters=3, tol=0.0)
+            res = session.run(plan)
+            t = timeit(lambda: session.run(plan), warmup=0, iters=2)
             rows.append(
                 (
                     f"pagerank_{label}_{strat}",

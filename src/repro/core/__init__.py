@@ -1,15 +1,27 @@
 """NXgraph core: the paper's contribution as a composable JAX module.
 
 - :mod:`repro.core.dsss` — Destination-Sorted Sub-Shard structure (§II-A/III-A)
-- :mod:`repro.core.engine` — SPU/DPU/MPU update engine + fused fast path (§III-B)
+- :mod:`repro.core.session` — GraphSession: stage once, run many (batched) jobs
+- :mod:`repro.core.plan` — ExecutionPlan: frozen, hashable job descriptions
+- :mod:`repro.core.engine` — back-compat NXGraphEngine shim over Session/Plan
 - :mod:`repro.core.vertex_programs` — Initialize/Update/Output programs (§II-B)
 - :mod:`repro.core.iomodel` — Table II I/O closed forms + adaptive selection
-- :mod:`repro.core.algorithms` — PageRank/BFS/WCC/SSSP/SCC drivers (§IV)
+- :mod:`repro.core.algorithms` — PageRank/BFS/WCC/SSSP/SCC drivers (§IV),
+  plus batched ``multi_bfs`` / ``multi_sssp``
 - :mod:`repro.core.baselines` — TurboGraph-like + GraphChi-like baselines (§III-C)
 - :mod:`repro.core.distributed` — shard_map 2-D partitioned multi-pod engine
 """
 from repro.core.dsss import DSSSGraph, SubShard, build_dsss
-from repro.core.engine import Meters, NXGraphEngine, Result
+from repro.core.plan import ExecutionPlan
+from repro.core.session import (
+    BatchResult,
+    GraphSession,
+    Meters,
+    Result,
+    clear_session_cache,
+    get_session,
+)
+from repro.core.engine import NXGraphEngine
 from repro.core.iomodel import (
     IOParams,
     StrategyChoice,
@@ -28,12 +40,25 @@ from repro.core.vertex_programs import (
     VertexProgram,
     WCC,
 )
-from repro.core.algorithms import bfs, pagerank, scc, sssp, wcc
+from repro.core.algorithms import (
+    bfs,
+    multi_bfs,
+    multi_sssp,
+    pagerank,
+    scc,
+    sssp,
+    wcc,
+)
 
 __all__ = [
     "DSSSGraph",
     "SubShard",
     "build_dsss",
+    "GraphSession",
+    "ExecutionPlan",
+    "BatchResult",
+    "get_session",
+    "clear_session_cache",
     "Meters",
     "NXGraphEngine",
     "Result",
@@ -56,4 +81,6 @@ __all__ = [
     "wcc",
     "sssp",
     "scc",
+    "multi_bfs",
+    "multi_sssp",
 ]

@@ -1,16 +1,30 @@
-"""High-level graph algorithms on the NXgraph engine (paper §IV tasks).
+"""High-level graph algorithms on the Session/Plan API (paper §IV tasks).
 
-``pagerank`` / ``bfs`` / ``wcc`` / ``sssp`` are thin drivers over one engine
-run; ``scc`` is the forward-backward colouring driver (trim + max-label
-forward propagation + backward reachability), matching what single-machine
-engines of this family implement on top of their iteration primitive.
+``pagerank`` / ``bfs`` / ``wcc`` / ``sssp`` are thin drivers that stage the
+graph into a (LRU-cached) :class:`~repro.core.session.GraphSession` and run
+one :class:`~repro.core.plan.ExecutionPlan`; repeated calls on the same
+graph object re-use the staged blocks and jit caches. ``multi_bfs`` /
+``multi_sssp`` are the batched drivers: K sources share one streamed pass
+over the edge blocks (``session.run_batch``). ``scc`` is the
+forward-backward colouring driver (trim + max-label forward propagation +
+backward reachability), matching what single-machine engines of this
+family implement on top of their iteration primitive — its repeated
+forward/backward runs are exactly the "stage once, run many" access
+pattern the session exists for.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.dsss import DSSSGraph, build_dsss
-from repro.core.engine import NXGraphEngine, Result
+from repro.core.plan import ExecutionPlan
+from repro.core.session import (
+    BatchResult,
+    GraphSession,
+    IdentityLRU,
+    Result,
+    get_session,
+)
 from repro.core.vertex_programs import (
     BFS,
     INF_DEPTH,
@@ -22,11 +36,23 @@ from repro.core.vertex_programs import (
 )
 from repro.graph.preprocess import EdgeList
 
-__all__ = ["pagerank", "bfs", "wcc", "sssp", "scc"]
+__all__ = ["pagerank", "bfs", "wcc", "sssp", "scc", "multi_bfs", "multi_sssp"]
+
+
+# Sharded-graph LRU keyed by edge-list identity, so repeated driver calls
+# on the same EdgeList hit the same DSSSGraph object — and therefore the
+# same staged GraphSession (get_session is keyed by graph identity).
+_DSSS_LRU = IdentityLRU(size=8)
 
 
 def _as_graph(g: EdgeList | DSSSGraph, P: int) -> DSSSGraph:
-    return g if isinstance(g, DSSSGraph) else build_dsss(g, P)
+    if isinstance(g, DSSSGraph):
+        return g
+    return _DSSS_LRU.get_or_build(g, (P,), lambda: build_dsss(g, P))
+
+
+def _session(g, P: int, memory_budget: int | None) -> GraphSession:
+    return get_session(_as_graph(g, P), memory_budget=memory_budget)
 
 
 def pagerank(
@@ -39,13 +65,13 @@ def pagerank(
     strategy: str = "auto",
     memory_budget: int | None = None,
 ) -> Result:
-    graph = _as_graph(g, P)
-    prog = PageRank(damping=damping)
-    eng = NXGraphEngine(
-        graph, prog, strategy=strategy, memory_budget=memory_budget
-    )
+    sess = _session(g, P, memory_budget)
     # tol=0 → fixed iteration count (paper runs 10 PageRank iterations).
-    return eng.run(max_iters=iters, tol=tol)
+    return sess.run(
+        ExecutionPlan(
+            PageRank(damping=damping), strategy=strategy, max_iters=iters, tol=tol
+        )
+    )
 
 
 def bfs(
@@ -56,11 +82,42 @@ def bfs(
     strategy: str = "auto",
     memory_budget: int | None = None,
 ) -> Result:
-    graph = _as_graph(g, P)
-    eng = NXGraphEngine(
-        graph, BFS(), strategy=strategy, memory_budget=memory_budget
+    sess = _session(g, P, memory_budget)
+    return sess.run(
+        ExecutionPlan(
+            BFS(),
+            strategy=strategy,
+            max_iters=sess.graph.n + 1,
+            program_kwargs={"root": root},
+        )
     )
-    return eng.run(max_iters=graph.n + 1, root=root)
+
+
+def multi_bfs(
+    g: EdgeList | DSSSGraph,
+    sources,
+    *,
+    P: int = 8,
+    strategy: str = "auto",
+    memory_budget: int | None = None,
+) -> BatchResult:
+    """BFS from K sources in one batched pass over the edge blocks.
+
+    All K depth frontiers advance together: each sub-shard is streamed once
+    per sweep (``meters.bytes_read_edges`` is the single-query cost, not
+    K×) while the vmapped block primitives update K attribute states.
+    """
+    sess = _session(g, P, memory_budget)
+    plans = [
+        ExecutionPlan(
+            BFS(),
+            strategy=strategy,
+            max_iters=sess.graph.n + 1,
+            program_kwargs={"root": int(r)},
+        )
+        for r in sources
+    ]
+    return sess.run_batch(plans)
 
 
 def wcc(
@@ -71,11 +128,17 @@ def wcc(
     memory_budget: int | None = None,
 ) -> Result:
     """Weakly connected components — runs on the symmetrized graph."""
-    graph = build_dsss(g.symmetrized(), P) if isinstance(g, EdgeList) else g
-    eng = NXGraphEngine(
-        graph, WCC(), strategy=strategy, memory_budget=memory_budget
+    if isinstance(g, EdgeList):
+        # Freshly built per call: a throwaway session, not an LRU slot —
+        # the staged blocks must not outlive the call.
+        graph = build_dsss(g.symmetrized(), P)
+        sess = GraphSession(graph, memory_budget=memory_budget)
+    else:
+        graph = g
+        sess = get_session(graph, memory_budget=memory_budget)
+    return sess.run(
+        ExecutionPlan(WCC(), strategy=strategy, max_iters=graph.n + 1)
     )
-    return eng.run(max_iters=graph.n + 1)
 
 
 def sssp(
@@ -86,11 +149,37 @@ def sssp(
     strategy: str = "auto",
     memory_budget: int | None = None,
 ) -> Result:
-    graph = _as_graph(g, P)
-    eng = NXGraphEngine(
-        graph, SSSP(), strategy=strategy, memory_budget=memory_budget
+    sess = _session(g, P, memory_budget)
+    return sess.run(
+        ExecutionPlan(
+            SSSP(),
+            strategy=strategy,
+            max_iters=sess.graph.n + 1,
+            program_kwargs={"root": root},
+        )
     )
-    return eng.run(max_iters=graph.n + 1, root=root)
+
+
+def multi_sssp(
+    g: EdgeList | DSSSGraph,
+    sources,
+    *,
+    P: int = 8,
+    strategy: str = "auto",
+    memory_budget: int | None = None,
+) -> BatchResult:
+    """Weighted shortest paths from K sources, one streamed pass (batched)."""
+    sess = _session(g, P, memory_budget)
+    plans = [
+        ExecutionPlan(
+            SSSP(),
+            strategy=strategy,
+            max_iters=sess.graph.n + 1,
+            program_kwargs={"root": int(r)},
+        )
+        for r in sources
+    ]
+    return sess.run_batch(plans)
 
 
 def scc(
@@ -115,16 +204,16 @@ def scc(
       3. *Reach*: backward propagation (on the transpose) of a reach flag
          from roots, restricted to same-colour edges. Reached vertices of
          colour c form exactly SCC(c); extract and go to 0.
+
+    Both graphs are staged once; every round re-uses the two sessions.
     """
     fwd = build_dsss(el, P)
     bwd = build_dsss(el.reversed(), P)
     n, n_pad = fwd.n, fwd.n_pad
-    eng_fwd = NXGraphEngine(
-        fwd, MaxLabelForward(), strategy=strategy, memory_budget=memory_budget
-    )
-    eng_bwd = NXGraphEngine(
-        bwd, ReachBackward(), strategy=strategy, memory_budget=memory_budget
-    )
+    # Both graphs are built per call, so the sessions are local too (they
+    # are re-used across every colour/reach round below, then released).
+    sess_fwd = GraphSession(fwd, memory_budget=memory_budget)
+    sess_bwd = GraphSession(bwd, memory_budget=memory_budget)
 
     src, dst = el.src, el.dst
     mask = np.zeros(n_pad, np.int32)
@@ -152,8 +241,13 @@ def scc(
         # -- colour ----------------------------------------------------------
         init_labels = np.full(n_pad, -INF_DEPTH, np.int32)
         init_labels[:n][live] = np.nonzero(live)[0].astype(np.int32)
-        res = eng_fwd.run(
-            max_iters=n + 1, labels=init_labels, mask=mask
+        res = sess_fwd.run(
+            ExecutionPlan(
+                MaxLabelForward(),
+                strategy=strategy,
+                max_iters=n + 1,
+                program_kwargs={"labels": init_labels, "mask": mask},
+            )
         )
         colors = np.full(n_pad, -1, np.int32)
         colors[:n] = res.attrs
@@ -161,8 +255,13 @@ def scc(
         seed = np.zeros(n_pad, np.int32)
         root_ids = np.nonzero(live & (colors[:n] == np.arange(n)))[0]
         seed[root_ids] = 1
-        res_b = eng_bwd.run(
-            max_iters=n + 1, reach=seed, colors=colors, mask=mask
+        res_b = sess_bwd.run(
+            ExecutionPlan(
+                ReachBackward(),
+                strategy=strategy,
+                max_iters=n + 1,
+                program_kwargs={"reach": seed, "colors": colors, "mask": mask},
+            )
         )
         reached = (res_b.attrs > 0) & live
         labels[reached] = colors[:n][reached]

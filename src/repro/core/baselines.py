@@ -10,17 +10,29 @@
    sub-shards keep GraphChi's source-major edge order, so the per-block
    reduction cannot use sorted-segment semantics and falls back to random
    scatter — the paper's Table IV ablation. Build the graph with
-   ``build_dsss(el, P, src_sorted=True)`` and pass it to the normal
-   :class:`~repro.core.engine.NXGraphEngine`; the scatter-order penalty is
-   what bench_subshard_order.py measures.
+   ``build_dsss(el, P, src_sorted=True)`` and run it through the normal
+   session/engine; the scatter-order penalty is what
+   bench_subshard_order.py measures.
+
+The TurboGraph-like schedule plugs into the Session/Plan executor as a
+registered custom strategy, so it batches over queries and meters exactly
+like the native SPU/DPU/MPU schedules.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dsss import DSSSGraph, build_dsss
-from repro.core.engine import Meters, NXGraphEngine, Result
-from repro.core.iomodel import IOParams
+from repro.core.engine import Meters, NXGraphEngine
+from repro.core.session import (
+    GraphSession,
+    _apply_interval,
+    _block_gather_reduce,
+    _pre_iteration,
+    _rows_to_process,
+)
+from repro.core.vertex_programs import reduce_identity
 from repro.graph.preprocess import EdgeList
 
 __all__ = ["TurboGraphLikeEngine", "turbograph_like_partitions", "build_graphchi_like"]
@@ -36,6 +48,63 @@ def build_graphchi_like(el: EdgeList, P: int) -> DSSSGraph:
     return build_dsss(el, P, src_sorted=True)
 
 
+def _iteration_turbograph(ctx, attrs, active, meters: Meters):
+    """Column-major block-load schedule: every destination interval reloads
+    all of its source intervals — the ``n·P·Ba`` re-read term of §III-C."""
+    sess, prog = ctx.session, ctx.program
+    g = sess.graph
+    isz = g.interval_size
+    K = ctx.K
+    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    ident = reduce_identity(prog.reduce, prog.dtype)
+    rows = _rows_to_process(ctx, active)
+    iv_bytes = isz * ctx.params.Ba * K
+    new_cols = []
+    active_next = np.zeros((K, g.P), dtype=bool)
+    for j in range(g.P):
+        acc = jnp.full((K, isz), ident, prog.dtype)
+        touched = False
+        meters.bytes_read_intervals += iv_bytes  # load destination block
+        for i in rows:
+            blk = sess.blocks.get((i, j))
+            if blk is None:
+                continue
+            # Re-load the source interval for every (i, j) pair — the
+            # n·P·Ba term that the paper's Fig. 6 analysis penalizes.
+            meters.bytes_read_intervals += iv_bytes
+            meters.bytes_read_edges += blk["e"] * sess.Be
+            meters.blocks_processed += 1
+            meters.edges_processed += blk["e"]
+            acc = _block_gather_reduce(
+                prog,
+                attrs[:, i],
+                ctx.aux_views[i],
+                ctx.aux_views[j] if prog.needs_dst_aux else {},
+                blk["src_local"],
+                blk["dst_local"],
+                blk["weights"],
+                blk["e_valid"],
+                acc,
+                num_segments=isz,
+                has_weights=sess.has_weights,
+            )
+            touched = True
+        if not touched and prog.monotone:
+            new_cols.append(attrs[:, j])
+            continue
+        new_j, changed = _apply_interval(
+            prog, attrs[:, j], acc, ctx.aux_views[j], globals_,
+            ctx.valid[j], ctx.tol,
+        )
+        new_cols.append(new_j)
+        active_next[:, j] = np.asarray(changed)
+        meters.bytes_written_intervals += iv_bytes
+    return jnp.stack(new_cols, axis=1), active_next
+
+
+GraphSession.register_strategy("turbograph-like", _iteration_turbograph)
+
+
 class TurboGraphLikeEngine(NXGraphEngine):
     """TurboGraph/GridGraph-style block-load schedule (paper §III-C).
 
@@ -46,73 +115,25 @@ class TurboGraphLikeEngine(NXGraphEngine):
     reproduce the paper's Fig. 6 I/O-ratio curve with *measured* bytes.
     """
 
-    def __init__(self, graph: DSSSGraph, program, *, memory_budget: int | None = None, Be: int = 8, Bv: int = 4):
+    def __init__(
+        self,
+        graph: DSSSGraph,
+        program,
+        *,
+        memory_budget: int | None = None,
+        Be: int | None = None,
+        Bv: int | None = None,
+        session: GraphSession | None = None,
+    ):
         super().__init__(
-            graph, program, strategy="spu", memory_budget=None, Be=Be, Bv=Bv
+            graph,
+            program,
+            strategy="turbograph-like",
+            memory_budget=None,
+            Be=Be,
+            Bv=Bv,
+            session=session,
         )
-        # Overwrite the auto-selected plan: this engine has exactly one
-        # schedule, and nothing is resident between blocks.
-        from repro.core.iomodel import StrategyChoice
-
-        self.choice = StrategyChoice("turbograph-like", 0, 0.0, 0.0)
+        # This engine has exactly one schedule and nothing resident between
+        # blocks; memory_budget only parameterizes its modelled-I/O formula.
         self.memory_budget = memory_budget
-        self.resident = set()
-
-    def _dispatch(self, strat, attrs, active, aux, valid, tol, meters):
-        return self._iteration_turbograph(attrs, active, aux, valid, tol, meters)
-
-    def _iteration_turbograph(self, attrs, active, aux, valid, tol, meters: Meters):
-        import jax.numpy as jnp
-
-        from repro.core.engine import (
-            _apply_interval,
-            _block_gather_reduce,
-        )
-        from repro.core.vertex_programs import reduce_identity
-
-        g, prog = self.g, self.program
-        isz = g.interval_size
-        globals_ = prog.pre_iteration(attrs.reshape(-1), aux)
-        ident = reduce_identity(prog.reduce, prog.dtype)
-        rows = self._rows_to_process(active)
-        iv_bytes = isz * self.params.Ba
-        new_rows = []
-        active_next = np.zeros(g.P, dtype=bool)
-        for j in range(g.P):
-            acc = jnp.full(isz, ident, prog.dtype)
-            touched = False
-            meters.bytes_read_intervals += iv_bytes  # load destination block
-            for i in rows:
-                blk = self.blocks.get((i, j))
-                if blk is None:
-                    continue
-                # Re-load the source interval for every (i, j) pair — the
-                # n·P·Ba term that the paper's Fig. 6 analysis penalizes.
-                meters.bytes_read_intervals += iv_bytes
-                meters.bytes_read_edges += blk["e"] * self.Be
-                meters.blocks_processed += 1
-                meters.edges_processed += blk["e"]
-                acc = _block_gather_reduce(
-                    prog,
-                    attrs[i],
-                    self._interval_aux(aux, i),
-                    self._interval_aux(aux, j) if prog.needs_dst_aux else {},
-                    blk["src_local"],
-                    blk["dst_local"],
-                    blk["weights"],
-                    blk["e_valid"],
-                    acc,
-                    num_segments=isz,
-                    has_weights=self.has_weights,
-                )
-                touched = True
-            if not touched and prog.monotone:
-                new_rows.append(attrs[j])
-                continue
-            new_j, changed = _apply_interval(
-                prog, attrs[j], acc, self._interval_aux(aux, j), globals_, valid[j], tol
-            )
-            new_rows.append(new_j)
-            active_next[j] = bool(changed)
-            meters.bytes_written_intervals += iv_bytes
-        return jnp.stack(new_rows), active_next

@@ -150,13 +150,12 @@ def make_pagerank_step(
         return my, diff / mesh.shape[dst_axis]
 
     in_specs = (src_spec, src_spec, blk_spec, blk_spec, blk_spec)
-    step = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(src_spec, P()),
-        check_vma=False,
-    )
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=(src_spec, P()))
+    try:
+        # check_vma only exists on newer jax; older releases call it check_rep.
+        step = shard_map(body, check_vma=False, **kwargs)
+    except TypeError:
+        step = shard_map(body, check_rep=False, **kwargs)
     return jax.jit(step), (src_spec, blk_spec)
 
 

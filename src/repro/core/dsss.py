@@ -24,7 +24,15 @@ import numpy as np
 
 from repro.graph.preprocess import EdgeList
 
-__all__ = ["DSSSGraph", "build_dsss", "SubShard"]
+__all__ = ["DSSSGraph", "build_dsss", "SubShard", "next_bucket"]
+
+
+def next_bucket(e: int, minimum: int = 8) -> int:
+    """Smallest power-of-two bucket >= e (jit shape-bucketing for blocks)."""
+    b = minimum
+    while b < e:
+        b *= 2
+    return b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +110,37 @@ class DSSSGraph:
 
     def subshard_edge_count(self, i: int, j: int) -> int:
         return int(self.offsets[i, j + 1] - self.offsets[i, j])
+
+    def padded_subshard(self, i: int, j: int) -> dict | None:
+        """Host-side staging of SS[i, j] in the engine's 'shard file' format.
+
+        Edge arrays are padded to a power-of-two bucket (so jit compiles one
+        executable per bucket size, not per sub-shard) and the hub slot list
+        to its own bucket. Returns ``None`` for empty sub-shards. The device
+        upload happens once per graph in :class:`repro.core.session.
+        GraphSession`; this method owns only the numpy-side layout.
+        """
+        e = self.subshard_edge_count(i, j)
+        if e == 0:
+            return None
+        ss = self.subshard(i, j)
+        pad = next_bucket(e) - e
+        ub = next_bucket(max(ss.num_unique_dst, 1))
+        blk = {
+            "src_local": np.pad(ss.src_local, (0, pad)),
+            "dst_local": np.pad(ss.dst_local, (0, pad)),
+            "hub_inv": np.pad(ss.hub_inv, (0, pad)),
+            "hub_dst": np.pad(ss.hub_dst, (0, ub - ss.num_unique_dst)),
+            "e": e,
+            "u": ss.num_unique_dst,
+            "u_bucket": ub,
+            "weights": (
+                None
+                if ss.weights is None
+                else np.pad(ss.weights, (0, pad)).astype(np.float32)
+            ),
+        }
+        return blk
 
     def mean_hub_in_degree(self) -> float:
         """The paper's ``d``: average in-degree of sub-shard destinations.

@@ -1,326 +1,115 @@
-"""The NXgraph update engine: SPU / DPU / MPU schedules (paper §III-B).
+"""Back-compat engine facade over the Session/Plan execution API.
 
-Single-host execution model: the scheduler runs on the host (as NXgraph's
-does), dispatching jitted block primitives per sub-shard; attribute state
-lives on device. Three faithful strategies plus a beyond-paper ``fused``
-strategy (whole iteration as one XLA program — the TPU fast path where
-"disk" is HBM and XLA streams the edge buffer).
+The NXgraph update engine (SPU / DPU / MPU schedules, paper §III-B) now
+lives in :mod:`repro.core.session`: a :class:`~repro.core.session.
+GraphSession` owns the device-staged DSSS blocks and executes
+:class:`~repro.core.plan.ExecutionPlan` jobs against them, including
+batched multi-query passes (``session.run_batch``).
 
-Byte meters: every strategy meters the bytes that cross the slow tier
-(edges streamed, intervals loaded/spilled, hubs written/read) so the paper's
-Table II closed forms can be property-tested against real schedules.
+:class:`NXGraphEngine` is kept as a thin shim for existing callers: it
+binds one (graph, program) pair to a private session and forwards
+``run()`` to ``session.run(plan)``. Direct engine construction is
+**deprecated** for new code — it re-stages the graph per program, which is
+exactly the coupling the session API removes. Prefer::
 
-Activity tracking (paper §II-B): per-interval active flags; a monotone
-program (BFS/WCC/SSSP) skips sub-shard rows whose source interval is
-inactive; execution terminates when all intervals are inactive.
+    session = GraphSession(graph, memory_budget=...)
+    result  = session.run(ExecutionPlan(PageRank(), max_iters=20, tol=0.0))
+
+``Meters`` / ``Result`` are re-exported unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.dsss import DSSSGraph
-from repro.core.iomodel import IOParams, StrategyChoice, select_strategy
-from repro.core.vertex_programs import VertexProgram, reduce_identity
+from repro.core.plan import ExecutionPlan
+from repro.core.session import GraphSession, Meters, Result
 
 __all__ = ["NXGraphEngine", "Meters", "Result"]
 
 
-def _next_bucket(e: int, minimum: int = 8) -> int:
-    b = minimum
-    while b < e:
-        b *= 2
-    return b
-
-
-@dataclasses.dataclass
-class Meters:
-    """Slow-tier byte counters + scheduling statistics."""
-
-    bytes_read_edges: float = 0.0
-    bytes_read_intervals: float = 0.0
-    bytes_read_hubs: float = 0.0
-    bytes_written_hubs: float = 0.0
-    bytes_written_intervals: float = 0.0
-    iterations: int = 0
-    blocks_processed: int = 0
-    blocks_skipped: int = 0
-    edges_processed: int = 0
-    wall_seconds: float = 0.0
-
-    @property
-    def bytes_read(self) -> float:
-        return self.bytes_read_edges + self.bytes_read_intervals + self.bytes_read_hubs
-
-    @property
-    def bytes_written(self) -> float:
-        return self.bytes_written_hubs + self.bytes_written_intervals
-
-    @property
-    def bytes_total(self) -> float:
-        return self.bytes_read + self.bytes_written
-
-    def per_iteration(self) -> "Meters":
-        k = max(self.iterations, 1)
-        out = Meters(**{f.name: getattr(self, f.name) for f in dataclasses.fields(self)})
-        for f in (
-            "bytes_read_edges",
-            "bytes_read_intervals",
-            "bytes_read_hubs",
-            "bytes_written_hubs",
-            "bytes_written_intervals",
-        ):
-            setattr(out, f, getattr(self, f) / k)
-        return out
-
-    def mteps(self) -> float:
-        """Million traversed edges per second (paper Fig. 11 metric)."""
-        if self.wall_seconds <= 0:
-            return float("nan")
-        return self.edges_processed / self.wall_seconds / 1e6
-
-
-@dataclasses.dataclass
-class Result:
-    attrs: np.ndarray
-    output: Any
-    iterations: int
-    converged: bool
-    meters: Meters
-    strategy: StrategyChoice
-
-
-# ---------------------------------------------------------------------------
-# Jitted block primitives. ``program`` is a frozen dataclass => hashable =>
-# usable as a static argument; jit caches one executable per
-# (program, bucket, num_segments) combination.
-# ---------------------------------------------------------------------------
-@functools.partial(
-    jax.jit, static_argnames=("program", "num_segments", "has_weights")
-)
-def _block_gather_reduce(
-    program: VertexProgram,
-    prev_src: jnp.ndarray,  # (isize,) source-interval attributes
-    src_aux: dict,  # per-source-interval aux (1-D sliced or scalar)
-    dst_aux: dict,  # per-dest-interval aux (or empty)
-    src_local: jnp.ndarray,  # (bucket,)
-    dst_local: jnp.ndarray,  # (bucket,)
-    weights: jnp.ndarray | None,
-    e_valid: jnp.ndarray,  # scalar int32: real edge count in the bucket
-    acc: jnp.ndarray,  # (num_segments,) running ⊕ accumulator
-    num_segments: int,
-    has_weights: bool,
-):
-    vals = prev_src[src_local]
-    s_aux = {k: (v[src_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in src_aux.items()}
-    d_aux = (
-        {k: (v[dst_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in dst_aux.items()}
-        if program.needs_dst_aux
-        else None
-    )
-    contrib = program.gather(vals, weights if has_weights else None, s_aux, d_aux)
-    ident = reduce_identity(program.reduce, contrib.dtype)
-    mask = jnp.arange(contrib.shape[0]) < e_valid
-    contrib = jnp.where(mask, contrib, ident)
-    if program.reduce == "sum":
-        red = jax.ops.segment_sum(contrib, dst_local, num_segments=num_segments)
-        return jnp.add(acc, red.astype(acc.dtype))
-    if program.reduce == "min":
-        red = jax.ops.segment_min(contrib, dst_local, num_segments=num_segments)
-        return jnp.minimum(acc, red.astype(acc.dtype))
-    red = jax.ops.segment_max(contrib, dst_local, num_segments=num_segments)
-    return jnp.maximum(acc, red.astype(acc.dtype))
-
-
-@functools.partial(
-    jax.jit, static_argnames=("program", "num_segments", "has_weights")
-)
-def _block_to_hub(
-    program: VertexProgram,
-    prev_src: jnp.ndarray,
-    src_aux: dict,
-    dst_aux: dict,
-    src_local: jnp.ndarray,
-    hub_inv: jnp.ndarray,  # (bucket,) edge -> hub slot
-    dst_local: jnp.ndarray,
-    weights: jnp.ndarray | None,
-    e_valid: jnp.ndarray,
-    num_segments: int,  # number of hub slots (unique destinations), padded
-    has_weights: bool,
-):
-    """ToHub (paper Alg. 6 line 4): partial ⊕ per unique destination."""
-    vals = prev_src[src_local]
-    s_aux = {k: (v[src_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in src_aux.items()}
-    d_aux = (
-        {k: (v[dst_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in dst_aux.items()}
-        if program.needs_dst_aux
-        else None
-    )
-    contrib = program.gather(vals, weights if has_weights else None, s_aux, d_aux)
-    ident = reduce_identity(program.reduce, contrib.dtype)
-    mask = jnp.arange(contrib.shape[0]) < e_valid
-    contrib = jnp.where(mask, contrib, ident)
-    if program.reduce == "sum":
-        return jax.ops.segment_sum(contrib, hub_inv, num_segments=num_segments)
-    if program.reduce == "min":
-        return jax.ops.segment_min(contrib, hub_inv, num_segments=num_segments)
-    return jax.ops.segment_max(contrib, hub_inv, num_segments=num_segments)
-
-
-@functools.partial(jax.jit, static_argnames=("program",))
-def _block_from_hub(
-    program: VertexProgram,
-    acc: jnp.ndarray,  # (isize,)
-    hub_dst: jnp.ndarray,  # (u,) unique local destinations
-    partial: jnp.ndarray,  # (u,) hub values
-    u_valid: jnp.ndarray,  # scalar: real number of hub slots
-):
-    """FromHub (paper Alg. 6 line 11): fold one hub into the accumulator."""
-    ident = reduce_identity(program.reduce, acc.dtype)
-    mask = jnp.arange(partial.shape[0]) < u_valid
-    partial = jnp.where(mask, partial.astype(acc.dtype), ident)
-    if program.reduce == "sum":
-        return acc.at[hub_dst].add(partial, mode="drop")
-    if program.reduce == "min":
-        return acc.at[hub_dst].min(partial, mode="drop")
-    return acc.at[hub_dst].max(partial, mode="drop")
-
-
-@functools.partial(jax.jit, static_argnames=("program",))
-def _apply_interval(
-    program: VertexProgram,
-    old: jnp.ndarray,
-    acc: jnp.ndarray,
-    aux: dict,
-    globals_: dict,
-    valid: jnp.ndarray,  # (isize,) bool — mask off padding in the last interval
-    tol: jnp.ndarray,
-):
-    new = program.apply(old, acc, aux, globals_)
-    new = jnp.where(valid, new, old)
-    changed = jnp.any(program.changed(old, new, tol) & valid)
-    return new, changed
-
-
 class NXGraphEngine:
-    """Host-scheduled NXgraph engine over a :class:`DSSSGraph`.
+    """Host-scheduled NXgraph engine over a :class:`DSSSGraph` (shim).
 
     Args:
       graph: sharded graph.
       program: vertex program (semiring decomposition of Update).
-      strategy: "auto" | "spu" | "dpu" | "mpu" | "fused".
-        "auto" applies the paper's adaptive selection from ``memory_budget``.
+      strategy: "auto" | "spu" | "dpu" | "mpu" | "fused" | a registered
+        custom strategy. "auto" applies the paper's adaptive selection
+        from ``memory_budget``.
       memory_budget: bytes of fast-tier memory (B_M). ``None`` = unlimited.
       Be: bytes per edge in the I/O model (8 = two int32 ids).
       Bv: bytes per vertex id.
+      session: share an existing staged session instead of staging a new
+        one (the upgrade path to the Session/Plan API).
     """
 
     def __init__(
         self,
         graph: DSSSGraph,
-        program: VertexProgram,
+        program,
         *,
         strategy: str = "auto",
         memory_budget: int | None = None,
-        Be: int = 8,
-        Bv: int = 4,
+        Be: int | None = None,
+        Bv: int | None = None,
+        session: GraphSession | None = None,
     ):
+        if session is None:
+            session = GraphSession(
+                graph,
+                memory_budget=memory_budget,
+                Be=8 if Be is None else Be,
+                Bv=4 if Bv is None else Bv,
+            )
+        else:
+            # A shared session already fixes the staging + I/O-model
+            # configuration; reject silently-ignored conflicting arguments.
+            if session.graph is not graph:
+                raise ValueError(
+                    "session was staged for a different graph object than `graph`"
+                )
+            if memory_budget is not None and memory_budget != session.memory_budget:
+                raise ValueError(
+                    f"memory_budget={memory_budget} conflicts with the shared "
+                    f"session's budget ({session.memory_budget}); configure the "
+                    "budget on the GraphSession"
+                )
+            expect_Be = None if Be is None else Be + (4 if session.has_weights else 0)
+            if expect_Be is not None and expect_Be != session.Be:
+                raise ValueError(
+                    f"Be={Be} conflicts with the shared session's edge size; "
+                    "configure Be on the GraphSession"
+                )
+            if Bv is not None and Bv != session.Bv:
+                raise ValueError(
+                    f"Bv={Bv} conflicts with the shared session's vertex-id "
+                    "size; configure Bv on the GraphSession"
+                )
+        self.session = session
         self.g = graph
         self.program = program
-        self.Be = Be + (4 if graph.weights is not None else 0)
-        self.Bv = Bv
-        self.params = IOParams(
-            n=graph.n,
-            m=graph.m,
-            Ba=program.attr_bytes,
-            Bv=self.Bv,
-            Be=self.Be,
-            d=graph.mean_hub_in_degree(),
-            P=graph.P,
-        )
-        self.memory_budget = memory_budget
-        if strategy == "auto":
-            self.choice = select_strategy(self.params, memory_budget)
-        else:
-            Q = graph.P
-            if strategy == "dpu":
-                Q = 0
-            elif strategy == "mpu":
-                from repro.core.iomodel import mpu_q
+        self.memory_budget = session.memory_budget
+        self._strategy = strategy
+        compiled = session.compile(ExecutionPlan(program, strategy=strategy))
+        self.params = compiled.params
+        self.choice = compiled.choice
+        self.resident = compiled.resident
 
-                Q = mpu_q(self.params, memory_budget or 0)
-            self.choice = StrategyChoice(strategy, Q, 0.0, 0.0)
-        self._prepare_blocks()
-        self._prepare_residency()
+    # -- staged state (delegated to the shared session) ----------------------
+    @property
+    def blocks(self):
+        return self.session.blocks
 
-    # -- preparation --------------------------------------------------------
-    def _prepare_blocks(self) -> None:
-        """Stage padded per-sub-shard device arrays (the 'shard files')."""
-        g = self.g
-        self.blocks: dict[tuple[int, int], dict] = {}
-        for i in range(g.P):
-            for j in range(g.P):
-                e = g.subshard_edge_count(i, j)
-                if e == 0:
-                    continue
-                ss = g.subshard(i, j)
-                b = _next_bucket(e)
-                pad = b - e
-                blk = {
-                    "src_local": jnp.asarray(
-                        np.pad(ss.src_local, (0, pad)), jnp.int32
-                    ),
-                    "dst_local": jnp.asarray(
-                        np.pad(ss.dst_local, (0, pad)), jnp.int32
-                    ),
-                    "hub_inv": jnp.asarray(np.pad(ss.hub_inv, (0, pad)), jnp.int32),
-                    "e_valid": jnp.asarray(e, jnp.int32),
-                    "e": e,
-                    "u": ss.num_unique_dst,
-                }
-                ub = _next_bucket(max(ss.num_unique_dst, 1))
-                blk["hub_dst"] = jnp.asarray(
-                    np.pad(ss.hub_dst, (0, ub - ss.num_unique_dst)), jnp.int32
-                )
-                blk["u_valid"] = jnp.asarray(ss.num_unique_dst, jnp.int32)
-                blk["u_bucket"] = ub
-                if ss.weights is not None:
-                    blk["weights"] = jnp.asarray(
-                        np.pad(ss.weights, (0, pad)), jnp.float32
-                    )
-                else:
-                    blk["weights"] = None
-                self.blocks[(i, j)] = blk
-        self.has_weights = g.weights is not None
+    @property
+    def Be(self) -> int:
+        return self.session.Be
 
-    def _prepare_residency(self) -> None:
-        """SPU edge residency: leftover budget pins sub-shards in memory."""
-        g = self.g
-        self.resident: set[tuple[int, int]] = set()
-        if self.choice.strategy != "spu":
-            return
-        if self.memory_budget is None:
-            self.resident = set(self.blocks)
-            return
-        leftover = self.memory_budget - 2 * g.n_pad * self.params.Ba
-        for key in sorted(self.blocks):  # row-major, as the SPU schedule runs
-            cost = self.blocks[key]["e"] * self.Be
-            if leftover >= cost:
-                self.resident.add(key)
-                leftover -= cost
+    @property
+    def Bv(self) -> int:
+        return self.session.Bv
 
-    def _interval_aux(self, aux: dict, k: int) -> dict:
-        isz = self.g.interval_size
-        return {
-            key: (v[k * isz : (k + 1) * isz] if getattr(v, "ndim", 0) == 1 else v)
-            for key, v in aux.items()
-        }
+    @property
+    def has_weights(self) -> bool:
+        return self.session.has_weights
 
     # -- public API ----------------------------------------------------------
     def run(
@@ -329,294 +118,11 @@ class NXGraphEngine:
         tol: float = 1e-10,
         **program_kwargs,
     ) -> Result:
-        g, prog = self.g, self.program
-        isz = g.interval_size
-        attrs = prog.init_attrs(g, **program_kwargs).reshape(g.P, isz)
-        active = prog.init_active(g, **program_kwargs)
-        aux = prog.make_aux(g, **program_kwargs)
-        valid = (jnp.arange(g.n_pad) < g.n).reshape(g.P, isz)
-        tol_arr = jnp.asarray(tol, jnp.float32)
-        meters = Meters()
-        start = time.perf_counter()
-        it = 0
-        converged = False
-        strat = self.choice.strategy
-        for it in range(1, max_iters + 1):
-            if not active.any():
-                converged = True
-                it -= 1
-                break
-            attrs, active = self._dispatch(
-                strat, attrs, active, aux, valid, tol_arr, meters
-            )
-            meters.iterations += 1
-        else:
-            converged = not active.any()
-        flat = attrs.reshape(-1)
-        meters.wall_seconds = time.perf_counter() - start
-        return Result(
-            attrs=np.asarray(flat[: g.n]),
-            output=prog.output(flat, g),
-            iterations=it,
-            converged=converged,
-            meters=meters,
-            strategy=self.choice,
+        plan = ExecutionPlan(
+            self.program,
+            strategy=self._strategy,
+            max_iters=max_iters,
+            tol=tol,
+            program_kwargs=program_kwargs,
         )
-
-    # -- iteration bodies ----------------------------------------------------
-    def _dispatch(self, strat, attrs, active, aux, valid, tol, meters):
-        if strat == "fused":
-            return self._iteration_fused(attrs, active, aux, valid, tol, meters)
-        if strat == "spu":
-            return self._iteration_spu(attrs, active, aux, valid, tol, meters)
-        if strat == "dpu":
-            return self._iteration_two_phase(
-                attrs, active, aux, valid, tol, meters, Q=0
-            )
-        if strat == "mpu":
-            return self._iteration_two_phase(
-                attrs, active, aux, valid, tol, meters, Q=self.choice.Q
-            )
-        raise ValueError(f"unknown strategy {strat!r}")
-
-    def _rows_to_process(self, active: np.ndarray) -> list[int]:
-        """Monotone programs skip inactive source intervals (paper §II-B)."""
-        if self.program.monotone:
-            return [i for i in range(self.g.P) if active[i]]
-        return list(range(self.g.P))
-
-    def _iteration_spu(self, attrs, active, aux, valid, tol, meters: Meters):
-        """Paper Algorithm 5: row-major, all intervals ping-pong resident."""
-        g, prog = self.g, self.program
-        isz = g.interval_size
-        globals_ = prog.pre_iteration(attrs.reshape(-1), aux)
-        ident = reduce_identity(prog.reduce, prog.dtype)
-        acc = [jnp.full(isz, ident, prog.dtype) for _ in range(g.P)]
-        touched = [False] * g.P
-        rows = self._rows_to_process(active)
-        for i in rows:
-            src_aux_i = self._interval_aux(aux, i)
-            for j in range(g.P):
-                blk = self.blocks.get((i, j))
-                if blk is None:
-                    continue
-                acc[j] = _block_gather_reduce(
-                    prog,
-                    attrs[i],
-                    src_aux_i,
-                    self._interval_aux(aux, j) if prog.needs_dst_aux else {},
-                    blk["src_local"],
-                    blk["dst_local"],
-                    blk["weights"],
-                    blk["e_valid"],
-                    acc[j],
-                    num_segments=isz,
-                    has_weights=self.has_weights,
-                )
-                touched[j] = True
-                meters.blocks_processed += 1
-                meters.edges_processed += blk["e"]
-                if (i, j) not in self.resident:
-                    meters.bytes_read_edges += blk["e"] * self.Be
-        meters.blocks_skipped += (g.P - len(rows)) * g.P
-        new_rows = []
-        active_next = np.zeros(g.P, dtype=bool)
-        for j in range(g.P):
-            if not touched[j] and prog.monotone:
-                new_rows.append(attrs[j])
-                continue
-            new_j, changed = _apply_interval(
-                prog, attrs[j], acc[j], self._interval_aux(aux, j), globals_, valid[j], tol
-            )
-            new_rows.append(new_j)
-            active_next[j] = bool(changed)
-        return jnp.stack(new_rows), active_next
-
-    def _iteration_two_phase(
-        self, attrs, active, aux, valid, tol, meters: Meters, Q: int
-    ):
-        """Paper Algorithms 6 (Q=0: DPU) and 7 (0<Q<P: MPU).
-
-        Intervals < Q are ping-pong resident (SPU-like); intervals >= Q are
-        cold: their contributions route through hubs and they are
-        loaded/saved once per iteration.
-        """
-        g, prog = self.g, self.program
-        isz = g.interval_size
-        globals_ = prog.pre_iteration(attrs.reshape(-1), aux)
-        ident = reduce_identity(prog.reduce, prog.dtype)
-        acc = [jnp.full(isz, ident, prog.dtype) for _ in range(g.P)]
-        touched = [False] * g.P
-        hubs: dict[tuple[int, int], jnp.ndarray] = {}
-        rows = self._rows_to_process(active)
-        iv_bytes = isz * self.params.Ba
-
-        def _direct(i: int, j: int, blk: dict) -> None:
-            """UpdateInMemory (paper Alg. 7 lines 4, 10, 20)."""
-            acc[j] = _block_gather_reduce(
-                prog,
-                attrs[i],
-                self._interval_aux(aux, i),
-                self._interval_aux(aux, j) if prog.needs_dst_aux else {},
-                blk["src_local"],
-                blk["dst_local"],
-                blk["weights"],
-                blk["e_valid"],
-                acc[j],
-                num_segments=isz,
-                has_weights=self.has_weights,
-            )
-            touched[j] = True
-            meters.bytes_read_edges += blk["e"] * self.Be
-            meters.blocks_processed += 1
-            meters.edges_processed += blk["e"]
-
-        # Phase 1 (row-major): resident rows (i < Q) update resident
-        # destinations (j < Q); cold rows (i >= Q) are loaded once, updating
-        # resident destinations directly and cold destinations via ToHub.
-        # Blocks (i < Q, j >= Q) are deferred to the column phase so that
-        # only one cold accumulator is ever live (paper Alg. 7 lines 17-24).
-        for i in rows:
-            if i >= Q:
-                meters.bytes_read_intervals += iv_bytes  # LoadFromDisk(I_i)
-            for j in range(g.P):
-                blk = self.blocks.get((i, j))
-                if blk is None:
-                    continue
-                if j < Q:
-                    _direct(i, j, blk)
-                elif i >= Q:
-                    # UpdateToHub (cold source AND cold destination).
-                    partial = _block_to_hub(
-                        prog,
-                        attrs[i],
-                        self._interval_aux(aux, i),
-                        self._interval_aux(aux, j) if prog.needs_dst_aux else {},
-                        blk["src_local"],
-                        blk["hub_inv"],
-                        blk["dst_local"],
-                        blk["weights"],
-                        blk["e_valid"],
-                        num_segments=blk["u_bucket"],
-                        has_weights=self.has_weights,
-                    )
-                    hubs[(i, j)] = partial
-                    touched[j] = True
-                    meters.bytes_read_edges += blk["e"] * self.Be
-                    meters.bytes_written_hubs += blk["u"] * (
-                        self.params.Ba + self.Bv
-                    )
-                    meters.blocks_processed += 1
-                    meters.edges_processed += blk["e"]
-        meters.blocks_skipped += (g.P - len(rows)) * g.P
-
-        # Phase 2 (column-major): resident columns apply directly; cold
-        # columns first take deferred resident-source blocks, then fold hubs,
-        # then save (paper Alg. 6 lines 8-14 / Alg. 7 lines 17-26).
-        new_rows: list[jnp.ndarray] = [None] * g.P  # type: ignore[list-item]
-        active_next = np.zeros(g.P, dtype=bool)
-        for j in range(g.P):
-            if j >= Q:
-                for i in rows:
-                    if i < Q:
-                        blk = self.blocks.get((i, j))
-                        if blk is not None:
-                            _direct(i, j, blk)
-                for i in rows:
-                    h = hubs.get((i, j))
-                    if h is None:
-                        continue
-                    blk = self.blocks[(i, j)]
-                    acc[j] = _block_from_hub(
-                        prog, acc[j], blk["hub_dst"], h, blk["u_valid"]
-                    )
-                    meters.bytes_read_hubs += blk["u"] * (self.params.Ba + self.Bv)
-            if not touched[j] and prog.monotone:
-                new_rows[j] = attrs[j]
-                continue
-            if j >= Q and prog.monotone:
-                # Monotone apply needs the previous attributes of a cold
-                # interval — one extra interval read vs. the paper's
-                # PageRank-style accounting (documented deviation).
-                meters.bytes_read_intervals += iv_bytes
-            new_j, changed = _apply_interval(
-                prog, attrs[j], acc[j], self._interval_aux(aux, j), globals_, valid[j], tol
-            )
-            new_rows[j] = new_j
-            active_next[j] = bool(changed)
-            if j >= Q:
-                meters.bytes_written_intervals += iv_bytes  # SaveToDisk(I_j)
-        return jnp.stack(new_rows), active_next
-
-    # -- beyond-paper fused path ----------------------------------------------
-    def _iteration_fused(self, attrs, active, aux, valid, tol, meters: Meters):
-        """One XLA program per iteration: global gather + segment-reduce.
-
-        Produces bit-identical results to SPU for sum/min/max programs; this
-        is the TPU-native fast path (HBM-resident, no host scheduling) and
-        the baseline the Pallas kernel (kernels/dsss_spmv.py) is checked
-        against.
-        """
-        g, prog = self.g, self.program
-        if not hasattr(self, "_fused_arrays"):
-            self._fused_arrays = dict(
-                src=jnp.asarray(g.src, jnp.int32),
-                dst=jnp.asarray(g.dst, jnp.int32),
-                weights=None if g.weights is None else jnp.asarray(g.weights),
-            )
-        fa = self._fused_arrays
-        flat, changed_iv = _fused_iteration(
-            prog,
-            attrs.reshape(-1),
-            aux,
-            fa["src"],
-            fa["dst"],
-            fa["weights"],
-            valid.reshape(-1),
-            tol,
-            n_pad=g.n_pad,
-            P=g.P,
-            has_weights=self.has_weights,
-        )
-        meters.blocks_processed += len(self.blocks)
-        meters.edges_processed += g.m
-        return flat.reshape(g.P, g.interval_size), np.asarray(changed_iv)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("program", "n_pad", "P", "has_weights")
-)
-def _fused_iteration(
-    program: VertexProgram,
-    attrs: jnp.ndarray,  # (n_pad,)
-    aux: dict,
-    src: jnp.ndarray,
-    dst: jnp.ndarray,
-    weights: jnp.ndarray | None,
-    valid: jnp.ndarray,
-    tol: jnp.ndarray,
-    n_pad: int,
-    P: int,
-    has_weights: bool,
-):
-    globals_ = program.pre_iteration(attrs, aux)
-    vals = attrs[src]
-    s_aux = {k: (v[src] if getattr(v, "ndim", 0) == 1 else v) for k, v in aux.items()}
-    d_aux = (
-        {k: (v[dst] if getattr(v, "ndim", 0) == 1 else v) for k, v in aux.items()}
-        if program.needs_dst_aux
-        else None
-    )
-    contrib = program.gather(vals, weights if has_weights else None, s_aux, d_aux)
-    if program.reduce == "sum":
-        red = jax.ops.segment_sum(contrib, dst, num_segments=n_pad)
-    elif program.reduce == "min":
-        red = jax.ops.segment_min(contrib, dst, num_segments=n_pad)
-    else:
-        red = jax.ops.segment_max(contrib, dst, num_segments=n_pad)
-    red = red.astype(attrs.dtype)
-    new = program.apply(attrs, red, aux, globals_)
-    new = jnp.where(valid, new, attrs)
-    changed = program.changed(attrs, new, tol) & valid
-    changed_iv = jnp.any(changed.reshape(P, -1), axis=1)
-    return new, changed_iv
+        return self.session.run(plan)

@@ -1,0 +1,113 @@
+"""Execution plans — frozen, hashable job descriptions for a GraphSession.
+
+An :class:`ExecutionPlan` is *what to run*: a vertex program, a strategy
+name, iteration limits and tolerances, plus the program's Initialize
+kwargs (e.g. a BFS root). It deliberately contains no device state — the
+staged graph lives in :class:`repro.core.session.GraphSession` — so one
+plan can be compiled against many sessions and one session can execute
+many plans. Because plans are hashable they key the session's compile
+cache directly, and because the engine's jitted block primitives take the
+(frozen) program as a static argument, jit executables persist across
+plans that share a program.
+
+Program kwargs may contain numpy/JAX arrays (the SCC driver passes label
+and mask vectors); they are frozen into content-hashed
+:class:`FrozenArray` wrappers so the plan stays hashable with value
+semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.vertex_programs import VertexProgram
+
+__all__ = ["ExecutionPlan", "FrozenArray"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenArray:
+    """An immutable, content-hashed snapshot of an array-valued kwarg."""
+
+    data: bytes
+    shape: tuple[int, ...]
+    dtype: str
+
+    @classmethod
+    def freeze(cls, value) -> "FrozenArray":
+        arr = np.asarray(value)
+        return cls(data=arr.tobytes(), shape=arr.shape, dtype=str(arr.dtype))
+
+    def thaw(self) -> np.ndarray:
+        return np.frombuffer(self.data, dtype=np.dtype(self.dtype)).reshape(
+            self.shape
+        )
+
+
+def _freeze_value(v):
+    if isinstance(v, FrozenArray):
+        return v
+    if isinstance(v, (np.ndarray,)) or type(v).__module__.startswith("jax"):
+        return FrozenArray.freeze(v)
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze_value(x) for x in v)
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
+def _thaw_value(v):
+    if isinstance(v, FrozenArray):
+        return v.thaw()
+    if isinstance(v, tuple):
+        return tuple(_thaw_value(x) for x in v)
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """One job against a staged graph.
+
+    Args:
+      program: the vertex program (frozen dataclass — hashable).
+      strategy: "auto" | "spu" | "dpu" | "mpu" | "fused" | a registered
+        custom strategy name. "auto" resolves against the session's
+        memory budget at compile time (paper's adaptive selection).
+      max_iters: update-sweep budget.
+      tol: convergence tolerance handed to ``program.changed``.
+      program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are
+        frozen by content; pass a mapping, it is normalized to a sorted
+        tuple in ``__post_init__``.
+    """
+
+    program: VertexProgram
+    strategy: str = "auto"
+    max_iters: int = 200
+    tol: float = 1e-10
+    program_kwargs: Any = ()
+
+    def __post_init__(self):
+        kw = self.program_kwargs
+        if isinstance(kw, Mapping):
+            items = kw.items()
+        else:
+            items = tuple(kw)
+        frozen = tuple(sorted((str(k), _freeze_value(v)) for k, v in items))
+        object.__setattr__(self, "program_kwargs", frozen)
+
+    # -- accessors -----------------------------------------------------------
+    def kwargs_dict(self) -> dict[str, Any]:
+        """Thawed Initialize kwargs, ready for ``program.init_attrs(...)``."""
+        return {k: _thaw_value(v) for k, v in self.program_kwargs}
+
+    def with_kwargs(self, **kw) -> "ExecutionPlan":
+        """A copy of this plan with updated program kwargs (e.g. new root)."""
+        merged = self.kwargs_dict()
+        merged.update(kw)
+        return dataclasses.replace(self, program_kwargs=merged)
+
+    def batch_key(self) -> tuple:
+        """Plans sharing a batch_key can fuse into one streamed pass."""
+        return (self.program, self.strategy, self.max_iters, self.tol)

@@ -1,0 +1,991 @@
+"""GraphSession — stage the graph once, run many programs, batch many queries.
+
+NXgraph's core abstraction (paper §II-B) is a graph that *stays put* while
+interval/sub-shard schedules stream over it. This module is that abstraction
+as an API: a :class:`GraphSession` owns the device-staged DSSS blocks, the
+fused edge arrays and the SPU residency sets — built once per graph — and
+executes any number of :class:`repro.core.plan.ExecutionPlan` jobs against
+them. ``session.run(plan)`` runs one job; ``session.run_batch(plans)`` fuses
+K compatible jobs (e.g. 64 BFS sources, a parameter sweep) into a *single*
+streamed pass over the edge blocks: attributes carry a leading batch axis
+and every block primitive is vmapped over it, so the slow-tier edge traffic
+is paid once, not K times.
+
+Execution layout: attributes are held as ``(K, P, interval_size)`` — K
+queries × P intervals — and all block primitives batch over the leading
+axis (K = 1 for single runs; XLA collapses the unit axis). Byte-meter
+accounting under batching: *edge* bytes are charged once per block per
+sweep (the streamed pass is shared), while *interval* and *hub* bytes are
+charged K× (each query owns its attribute state). ``meters.iterations``
+always equals the number of update sweeps executed.
+
+The per-iteration schedules themselves (SPU / DPU / MPU / fused, paper
+§III-B) are unchanged from the engine; custom schedules (the TurboGraph-like
+baseline) register via :meth:`GraphSession.register_strategy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+import weakref
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsss import DSSSGraph
+from repro.core.iomodel import IOParams, StrategyChoice, mpu_q, select_strategy
+from repro.core.plan import ExecutionPlan
+from repro.core.vertex_programs import VertexProgram, reduce_identity
+
+__all__ = [
+    "GraphSession",
+    "Meters",
+    "Result",
+    "BatchResult",
+    "CompiledPlan",
+    "IdentityLRU",
+    "get_session",
+    "clear_session_cache",
+]
+
+
+@dataclasses.dataclass
+class Meters:
+    """Slow-tier byte counters + scheduling statistics."""
+
+    bytes_read_edges: float = 0.0
+    bytes_read_intervals: float = 0.0
+    bytes_read_hubs: float = 0.0
+    bytes_written_hubs: float = 0.0
+    bytes_written_intervals: float = 0.0
+    iterations: int = 0
+    blocks_processed: int = 0
+    blocks_skipped: int = 0
+    edges_processed: int = 0
+    wall_seconds: float = 0.0
+
+    @property
+    def bytes_read(self) -> float:
+        return self.bytes_read_edges + self.bytes_read_intervals + self.bytes_read_hubs
+
+    @property
+    def bytes_written(self) -> float:
+        return self.bytes_written_hubs + self.bytes_written_intervals
+
+    @property
+    def bytes_total(self) -> float:
+        return self.bytes_read + self.bytes_written
+
+    def per_iteration(self) -> "Meters":
+        k = max(self.iterations, 1)
+        out = Meters(**{f.name: getattr(self, f.name) for f in dataclasses.fields(self)})
+        for f in (
+            "bytes_read_edges",
+            "bytes_read_intervals",
+            "bytes_read_hubs",
+            "bytes_written_hubs",
+            "bytes_written_intervals",
+        ):
+            setattr(out, f, getattr(self, f) / k)
+        return out
+
+    def mteps(self) -> float:
+        """Million traversed edges per second (paper Fig. 11 metric)."""
+        if self.wall_seconds <= 0:
+            return float("nan")
+        return self.edges_processed / self.wall_seconds / 1e6
+
+    def merge(self, other: "Meters") -> "Meters":
+        """Accumulate another run's counters into this one (in place).
+
+        Every field sums — including ``iterations`` — so ``per_iteration()``
+        of a merged meter remains the true per-sweep average.
+        """
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+
+@dataclasses.dataclass
+class Result:
+    attrs: np.ndarray
+    output: Any
+    iterations: int
+    converged: bool
+    meters: Meters
+    strategy: StrategyChoice
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """K plans executed in one streamed pass.
+
+    ``results[m]`` holds per-query attrs/output; every member shares the
+    batch-level ``meters`` object (one edge stream, K attribute states).
+    ``iterations`` is the number of shared update sweeps executed.
+    """
+
+    results: list[Result]
+    meters: Meters
+    iterations: int
+    converged: bool
+    fused: bool  # False when plans were incompatible and ran sequentially
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, m: int) -> Result:
+        return self.results[m]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """A plan resolved against one session: strategy + residency, no state."""
+
+    params: IOParams
+    choice: StrategyChoice
+    resident: frozenset
+
+
+# ---------------------------------------------------------------------------
+# Jitted block primitives, batched over a leading K (query) axis via vmap.
+# ``program`` is a frozen dataclass => hashable => usable as a static
+# argument; jit caches one executable per (program, bucket, num_segments, K)
+# combination, shared by every session/plan that uses the same program.
+# Aux dicts and block index arrays are query-invariant and enter the vmapped
+# body by closure (broadcast); only attributes/accumulators carry K.
+# ---------------------------------------------------------------------------
+def _gather_reduce_core(
+    program, prev_src, src_aux, dst_aux, src_local, dst_local, weights,
+    e_valid, acc, num_segments, has_weights,
+):
+    vals = prev_src[src_local]
+    s_aux = {k: (v[src_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in src_aux.items()}
+    d_aux = (
+        {k: (v[dst_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in dst_aux.items()}
+        if program.needs_dst_aux
+        else None
+    )
+    contrib = program.gather(vals, weights if has_weights else None, s_aux, d_aux)
+    ident = reduce_identity(program.reduce, contrib.dtype)
+    mask = jnp.arange(contrib.shape[0]) < e_valid
+    contrib = jnp.where(mask, contrib, ident)
+    if program.reduce == "sum":
+        red = jax.ops.segment_sum(contrib, dst_local, num_segments=num_segments)
+        return jnp.add(acc, red.astype(acc.dtype))
+    if program.reduce == "min":
+        red = jax.ops.segment_min(contrib, dst_local, num_segments=num_segments)
+        return jnp.minimum(acc, red.astype(acc.dtype))
+    red = jax.ops.segment_max(contrib, dst_local, num_segments=num_segments)
+    return jnp.maximum(acc, red.astype(acc.dtype))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("program", "num_segments", "has_weights")
+)
+def _block_gather_reduce(
+    program: VertexProgram,
+    prev_src: jnp.ndarray,  # (K, isize) source-interval attributes
+    src_aux: dict,  # per-source-interval aux (1-D sliced or scalar; shared)
+    dst_aux: dict,  # per-dest-interval aux (or empty)
+    src_local: jnp.ndarray,  # (bucket,)
+    dst_local: jnp.ndarray,  # (bucket,)
+    weights: jnp.ndarray | None,
+    e_valid: jnp.ndarray,  # scalar int32: real edge count in the bucket
+    acc: jnp.ndarray,  # (K, num_segments) running ⊕ accumulator
+    num_segments: int,
+    has_weights: bool,
+):
+    def one(pv, a):
+        return _gather_reduce_core(
+            program, pv, src_aux, dst_aux, src_local, dst_local, weights,
+            e_valid, a, num_segments, has_weights,
+        )
+
+    return jax.vmap(one)(prev_src, acc)
+
+
+def _to_hub_core(
+    program, prev_src, src_aux, dst_aux, src_local, hub_inv, dst_local,
+    weights, e_valid, num_segments, has_weights,
+):
+    vals = prev_src[src_local]
+    s_aux = {k: (v[src_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in src_aux.items()}
+    d_aux = (
+        {k: (v[dst_local] if getattr(v, "ndim", 0) == 1 else v) for k, v in dst_aux.items()}
+        if program.needs_dst_aux
+        else None
+    )
+    contrib = program.gather(vals, weights if has_weights else None, s_aux, d_aux)
+    ident = reduce_identity(program.reduce, contrib.dtype)
+    mask = jnp.arange(contrib.shape[0]) < e_valid
+    contrib = jnp.where(mask, contrib, ident)
+    if program.reduce == "sum":
+        return jax.ops.segment_sum(contrib, hub_inv, num_segments=num_segments)
+    if program.reduce == "min":
+        return jax.ops.segment_min(contrib, hub_inv, num_segments=num_segments)
+    return jax.ops.segment_max(contrib, hub_inv, num_segments=num_segments)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("program", "num_segments", "has_weights")
+)
+def _block_to_hub(
+    program: VertexProgram,
+    prev_src: jnp.ndarray,  # (K, isize)
+    src_aux: dict,
+    dst_aux: dict,
+    src_local: jnp.ndarray,
+    hub_inv: jnp.ndarray,  # (bucket,) edge -> hub slot
+    dst_local: jnp.ndarray,
+    weights: jnp.ndarray | None,
+    e_valid: jnp.ndarray,
+    num_segments: int,  # number of hub slots (unique destinations), padded
+    has_weights: bool,
+):
+    """ToHub (paper Alg. 6 line 4): partial ⊕ per unique destination."""
+
+    def one(pv):
+        return _to_hub_core(
+            program, pv, src_aux, dst_aux, src_local, hub_inv, dst_local,
+            weights, e_valid, num_segments, has_weights,
+        )
+
+    return jax.vmap(one)(prev_src)
+
+
+@functools.partial(jax.jit, static_argnames=("program",))
+def _block_from_hub(
+    program: VertexProgram,
+    acc: jnp.ndarray,  # (K, isize)
+    hub_dst: jnp.ndarray,  # (u,) unique local destinations
+    partial: jnp.ndarray,  # (K, u) hub values
+    u_valid: jnp.ndarray,  # scalar: real number of hub slots
+):
+    """FromHub (paper Alg. 6 line 11): fold one hub into the accumulator."""
+
+    def one(a, p):
+        ident = reduce_identity(program.reduce, a.dtype)
+        mask = jnp.arange(p.shape[0]) < u_valid
+        p = jnp.where(mask, p.astype(a.dtype), ident)
+        if program.reduce == "sum":
+            return a.at[hub_dst].add(p, mode="drop")
+        if program.reduce == "min":
+            return a.at[hub_dst].min(p, mode="drop")
+        return a.at[hub_dst].max(p, mode="drop")
+
+    return jax.vmap(one)(acc, partial)
+
+
+@functools.partial(jax.jit, static_argnames=("program",))
+def _apply_interval(
+    program: VertexProgram,
+    old: jnp.ndarray,  # (K, isize)
+    acc: jnp.ndarray,  # (K, isize)
+    aux: dict,  # interval view, shared across queries
+    globals_: dict,  # per-query iteration scalars, (K,)-leading leaves
+    valid: jnp.ndarray,  # (isize,) bool — mask off padding in the last interval
+    tol: jnp.ndarray,
+):
+    def one(o, a, gl):
+        new = program.apply(o, a, aux, gl)
+        new = jnp.where(valid, new, o)
+        changed = jnp.any(program.changed(o, new, tol) & valid)
+        return new, changed
+
+    return jax.vmap(one)(old, acc, globals_)
+
+
+@functools.partial(jax.jit, static_argnames=("program",))
+def _pre_iteration(program: VertexProgram, attrs_flat: jnp.ndarray, aux: dict):
+    """Per-query iteration globals (e.g. PageRank dangling mass), (K,)-leaved."""
+    return jax.vmap(lambda a: program.pre_iteration(a, aux))(attrs_flat)
+
+
+def _fused_core(
+    program, attrs, aux, src, dst, weights, valid, tol, n_pad, P, has_weights
+):
+    globals_ = program.pre_iteration(attrs, aux)
+    vals = attrs[src]
+    s_aux = {k: (v[src] if getattr(v, "ndim", 0) == 1 else v) for k, v in aux.items()}
+    d_aux = (
+        {k: (v[dst] if getattr(v, "ndim", 0) == 1 else v) for k, v in aux.items()}
+        if program.needs_dst_aux
+        else None
+    )
+    contrib = program.gather(vals, weights if has_weights else None, s_aux, d_aux)
+    if program.reduce == "sum":
+        red = jax.ops.segment_sum(contrib, dst, num_segments=n_pad)
+    elif program.reduce == "min":
+        red = jax.ops.segment_min(contrib, dst, num_segments=n_pad)
+    else:
+        red = jax.ops.segment_max(contrib, dst, num_segments=n_pad)
+    red = red.astype(attrs.dtype)
+    new = program.apply(attrs, red, aux, globals_)
+    new = jnp.where(valid, new, attrs)
+    changed = program.changed(attrs, new, tol) & valid
+    changed_iv = jnp.any(changed.reshape(P, -1), axis=1)
+    return new, changed_iv
+
+
+@functools.partial(
+    jax.jit, static_argnames=("program", "n_pad", "P", "has_weights")
+)
+def _fused_iteration(
+    program: VertexProgram,
+    attrs: jnp.ndarray,  # (K, n_pad)
+    aux: dict,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    weights: jnp.ndarray | None,
+    valid: jnp.ndarray,
+    tol: jnp.ndarray,
+    n_pad: int,
+    P: int,
+    has_weights: bool,
+):
+    def one(a):
+        return _fused_core(
+            program, a, aux, src, dst, weights, valid, tol, n_pad, P, has_weights
+        )
+
+    return jax.vmap(one)(attrs)
+
+
+# ---------------------------------------------------------------------------
+# Per-run context handed to the iteration bodies.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _RunContext:
+    session: "GraphSession"
+    program: VertexProgram
+    choice: StrategyChoice
+    resident: frozenset
+    params: IOParams
+    aux: dict
+    aux_views: list[dict]  # all P interval views, hoisted once per run
+    valid: jnp.ndarray  # (P, isize) bool
+    tol: jnp.ndarray
+    K: int
+
+
+def _rows_to_process(ctx: _RunContext, active: np.ndarray) -> list[int]:
+    """Monotone programs skip source intervals inactive for *every* query
+    (paper §II-B activity tracking, unioned over the batch axis)."""
+    P = ctx.session.graph.P
+    if ctx.program.monotone:
+        return [i for i in range(P) if active[:, i].any()]
+    return list(range(P))
+
+
+def _iteration_spu(ctx: _RunContext, attrs, active, meters: Meters):
+    """Paper Algorithm 5: row-major, all intervals ping-pong resident."""
+    sess, prog = ctx.session, ctx.program
+    g = sess.graph
+    isz = g.interval_size
+    K = ctx.K
+    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    ident = reduce_identity(prog.reduce, prog.dtype)
+    acc = [jnp.full((K, isz), ident, prog.dtype) for _ in range(g.P)]
+    touched = [False] * g.P
+    rows = _rows_to_process(ctx, active)
+    for i in rows:
+        src_aux_i = ctx.aux_views[i]
+        for j in range(g.P):
+            blk = sess.blocks.get((i, j))
+            if blk is None:
+                continue
+            acc[j] = _block_gather_reduce(
+                prog,
+                attrs[:, i],
+                src_aux_i,
+                ctx.aux_views[j] if prog.needs_dst_aux else {},
+                blk["src_local"],
+                blk["dst_local"],
+                blk["weights"],
+                blk["e_valid"],
+                acc[j],
+                num_segments=isz,
+                has_weights=sess.has_weights,
+            )
+            touched[j] = True
+            meters.blocks_processed += 1
+            meters.edges_processed += blk["e"]
+            if (i, j) not in ctx.resident:
+                meters.bytes_read_edges += blk["e"] * sess.Be
+    meters.blocks_skipped += (g.P - len(rows)) * g.P
+    new_cols = []
+    active_next = np.zeros((K, g.P), dtype=bool)
+    for j in range(g.P):
+        if not touched[j] and prog.monotone:
+            new_cols.append(attrs[:, j])
+            continue
+        new_j, changed = _apply_interval(
+            prog, attrs[:, j], acc[j], ctx.aux_views[j], globals_,
+            ctx.valid[j], ctx.tol,
+        )
+        new_cols.append(new_j)
+        active_next[:, j] = np.asarray(changed)
+    return jnp.stack(new_cols, axis=1), active_next
+
+
+def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int):
+    """Paper Algorithms 6 (Q=0: DPU) and 7 (0<Q<P: MPU).
+
+    Intervals < Q are ping-pong resident (SPU-like); intervals >= Q are
+    cold: their contributions route through hubs and they are loaded/saved
+    once per iteration. Interval and hub bytes are charged per query (K×):
+    each query owns its attribute state, while the edge stream is shared.
+    """
+    sess, prog = ctx.session, ctx.program
+    g = sess.graph
+    isz = g.interval_size
+    K = ctx.K
+    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    ident = reduce_identity(prog.reduce, prog.dtype)
+    acc = [jnp.full((K, isz), ident, prog.dtype) for _ in range(g.P)]
+    touched = [False] * g.P
+    hubs: dict[tuple[int, int], jnp.ndarray] = {}
+    rows = _rows_to_process(ctx, active)
+    iv_bytes = isz * ctx.params.Ba * K
+
+    def _direct(i: int, j: int, blk: dict) -> None:
+        """UpdateInMemory (paper Alg. 7 lines 4, 10, 20)."""
+        acc[j] = _block_gather_reduce(
+            prog,
+            attrs[:, i],
+            ctx.aux_views[i],
+            ctx.aux_views[j] if prog.needs_dst_aux else {},
+            blk["src_local"],
+            blk["dst_local"],
+            blk["weights"],
+            blk["e_valid"],
+            acc[j],
+            num_segments=isz,
+            has_weights=sess.has_weights,
+        )
+        touched[j] = True
+        meters.bytes_read_edges += blk["e"] * sess.Be
+        meters.blocks_processed += 1
+        meters.edges_processed += blk["e"]
+
+    # Phase 1 (row-major): resident rows (i < Q) update resident
+    # destinations (j < Q); cold rows (i >= Q) are loaded once, updating
+    # resident destinations directly and cold destinations via ToHub.
+    # Blocks (i < Q, j >= Q) are deferred to the column phase so that
+    # only one cold accumulator is ever live (paper Alg. 7 lines 17-24).
+    for i in rows:
+        if i >= Q:
+            meters.bytes_read_intervals += iv_bytes  # LoadFromDisk(I_i)
+        for j in range(g.P):
+            blk = sess.blocks.get((i, j))
+            if blk is None:
+                continue
+            if j < Q:
+                _direct(i, j, blk)
+            elif i >= Q:
+                # UpdateToHub (cold source AND cold destination).
+                partial = _block_to_hub(
+                    prog,
+                    attrs[:, i],
+                    ctx.aux_views[i],
+                    ctx.aux_views[j] if prog.needs_dst_aux else {},
+                    blk["src_local"],
+                    blk["hub_inv"],
+                    blk["dst_local"],
+                    blk["weights"],
+                    blk["e_valid"],
+                    num_segments=blk["u_bucket"],
+                    has_weights=sess.has_weights,
+                )
+                hubs[(i, j)] = partial
+                touched[j] = True
+                meters.bytes_read_edges += blk["e"] * sess.Be
+                meters.bytes_written_hubs += blk["u"] * (
+                    ctx.params.Ba + sess.Bv
+                ) * K
+                meters.blocks_processed += 1
+                meters.edges_processed += blk["e"]
+    meters.blocks_skipped += (g.P - len(rows)) * g.P
+
+    # Phase 2 (column-major): resident columns apply directly; cold
+    # columns first take deferred resident-source blocks, then fold hubs,
+    # then save (paper Alg. 6 lines 8-14 / Alg. 7 lines 17-26).
+    new_cols: list[jnp.ndarray] = [None] * g.P  # type: ignore[list-item]
+    active_next = np.zeros((K, g.P), dtype=bool)
+    for j in range(g.P):
+        if j >= Q:
+            for i in rows:
+                if i < Q:
+                    blk = sess.blocks.get((i, j))
+                    if blk is not None:
+                        _direct(i, j, blk)
+            for i in rows:
+                h = hubs.get((i, j))
+                if h is None:
+                    continue
+                blk = sess.blocks[(i, j)]
+                acc[j] = _block_from_hub(
+                    prog, acc[j], blk["hub_dst"], h, blk["u_valid"]
+                )
+                meters.bytes_read_hubs += blk["u"] * (ctx.params.Ba + sess.Bv) * K
+        if not touched[j] and prog.monotone:
+            new_cols[j] = attrs[:, j]
+            continue
+        if j >= Q and prog.monotone:
+            # Monotone apply needs the previous attributes of a cold
+            # interval — one extra interval read vs. the paper's
+            # PageRank-style accounting (documented deviation).
+            meters.bytes_read_intervals += iv_bytes
+        new_j, changed = _apply_interval(
+            prog, attrs[:, j], acc[j], ctx.aux_views[j], globals_,
+            ctx.valid[j], ctx.tol,
+        )
+        new_cols[j] = new_j
+        active_next[:, j] = np.asarray(changed)
+        if j >= Q:
+            meters.bytes_written_intervals += iv_bytes  # SaveToDisk(I_j)
+    return jnp.stack(new_cols, axis=1), active_next
+
+
+def _iteration_dpu(ctx, attrs, active, meters):
+    return _iteration_two_phase(ctx, attrs, active, meters, Q=0)
+
+
+def _iteration_mpu(ctx, attrs, active, meters):
+    return _iteration_two_phase(ctx, attrs, active, meters, Q=ctx.choice.Q)
+
+
+def _iteration_fused(ctx: _RunContext, attrs, active, meters: Meters):
+    """One XLA program per iteration: global gather + segment-reduce.
+
+    Produces bit-identical results to SPU for sum/min/max programs; this
+    is the TPU-native fast path (HBM-resident, no host scheduling) and
+    the baseline the Pallas kernel (kernels/dsss_spmv.py) is checked
+    against.
+    """
+    sess, prog = ctx.session, ctx.program
+    g = sess.graph
+    K = ctx.K
+    fa = sess.fused_arrays()
+    flat, changed_iv = _fused_iteration(
+        prog,
+        attrs.reshape(K, -1),
+        ctx.aux,
+        fa["src"],
+        fa["dst"],
+        fa["weights"],
+        ctx.valid.reshape(-1),
+        ctx.tol,
+        n_pad=g.n_pad,
+        P=g.P,
+        has_weights=sess.has_weights,
+    )
+    meters.blocks_processed += len(sess.blocks)
+    meters.edges_processed += g.m
+    return flat.reshape(K, g.P, g.interval_size), np.asarray(changed_iv)
+
+
+# ---------------------------------------------------------------------------
+# The session.
+# ---------------------------------------------------------------------------
+class _StagedGraph:
+    """Device-resident arrays that are a pure function of the graph.
+
+    Shared between every :class:`GraphSession` variant of one graph (e.g.
+    different memory budgets), so the padded sub-shard blocks are uploaded
+    exactly once per graph object.
+    """
+
+    def __init__(self, graph: DSSSGraph):
+        self.graph = graph
+        self.blocks = self._stage_blocks(graph)
+        self.fused: dict | None = None
+        self.kernel_operands: dict[tuple, tuple] = {}
+
+    @staticmethod
+    def _stage_blocks(g: DSSSGraph) -> dict[tuple[int, int], dict]:
+        """Upload padded per-sub-shard arrays once (the 'shard files')."""
+        blocks: dict[tuple[int, int], dict] = {}
+        for i in range(g.P):
+            for j in range(g.P):
+                host = g.padded_subshard(i, j)
+                if host is None:
+                    continue
+                blocks[(i, j)] = {
+                    "src_local": jnp.asarray(host["src_local"], jnp.int32),
+                    "dst_local": jnp.asarray(host["dst_local"], jnp.int32),
+                    "hub_inv": jnp.asarray(host["hub_inv"], jnp.int32),
+                    "hub_dst": jnp.asarray(host["hub_dst"], jnp.int32),
+                    "e_valid": jnp.asarray(host["e"], jnp.int32),
+                    "u_valid": jnp.asarray(host["u"], jnp.int32),
+                    "e": host["e"],
+                    "u": host["u"],
+                    "u_bucket": host["u_bucket"],
+                    "weights": (
+                        None
+                        if host["weights"] is None
+                        else jnp.asarray(host["weights"], jnp.float32)
+                    ),
+                }
+        return blocks
+
+
+class GraphSession:
+    """Device-staged graph state shared by every run.
+
+    Args:
+      graph: sharded :class:`DSSSGraph`.
+      memory_budget: bytes of fast-tier memory (B_M). ``None`` = unlimited.
+      Be: bytes per edge in the I/O model (8 = two int32 ids; +4 is added
+        automatically for weighted graphs).
+      Bv: bytes per vertex id.
+
+    Staging happens once in ``__init__`` (padded per-sub-shard device
+    arrays — the 'shard files'); plans are compiled lazily and cached, so
+    repeated ``run``/``run_batch`` calls re-use both the staged blocks and
+    the jit executables.
+    """
+
+    _strategies: dict[str, Callable] = {
+        "spu": _iteration_spu,
+        "dpu": _iteration_dpu,
+        "mpu": _iteration_mpu,
+        "fused": _iteration_fused,
+    }
+
+    def __init__(
+        self,
+        graph: DSSSGraph,
+        *,
+        memory_budget: int | None = None,
+        Be: int = 8,
+        Bv: int = 4,
+        staged: _StagedGraph | None = None,
+    ):
+        self.graph = graph
+        self.memory_budget = memory_budget
+        self.has_weights = graph.weights is not None
+        self.Be = Be + (4 if self.has_weights else 0)
+        self.Bv = Bv
+        self._hub_d = graph.mean_hub_in_degree()
+        if staged is not None and staged.graph is not graph:
+            raise ValueError("staged arrays belong to a different graph")
+        self._staged = staged if staged is not None else _StagedGraph(graph)
+        self._residency: dict[int, frozenset] = {}  # Ba -> resident set
+        self._compiled: dict[tuple, CompiledPlan] = {}
+
+    @property
+    def blocks(self) -> dict[tuple[int, int], dict]:
+        return self._staged.blocks
+
+    # -- strategy registry ---------------------------------------------------
+    @classmethod
+    def register_strategy(cls, name: str, iteration_fn: Callable) -> None:
+        """Register a custom per-iteration schedule (e.g. a baseline).
+
+        ``iteration_fn(ctx, attrs, active, meters) -> (attrs, active_next)``
+        with ``attrs`` shaped ``(K, P, interval_size)`` and ``active``
+        ``(K, P)`` bool.
+        """
+        cls._strategies[name] = iteration_fn
+
+    # -- staging -------------------------------------------------------------
+    def fused_arrays(self) -> dict:
+        """Whole-graph edge arrays for the fused path, staged lazily once."""
+        if self._staged.fused is None:
+            g = self.graph
+            self._staged.fused = dict(
+                src=jnp.asarray(g.src, jnp.int32),
+                dst=jnp.asarray(g.dst, jnp.int32),
+                weights=None if g.weights is None else jnp.asarray(g.weights),
+            )
+        return self._staged.fused
+
+    def kernel_operands(
+        self, i: int, j: int, dtype, *, gather_op: str = "mul", reduce: str = "sum"
+    ) -> tuple:
+        """Pallas-kernel operands for SS[i, j], staged once per semiring.
+
+        Returns ``(src_idx, hub_inv, weights, block_base)`` as produced by
+        :func:`repro.kernels.ops.prepare_subshard_operands` — the TPU hot
+        path equivalent of the staged jnp blocks.
+        """
+        key = (i, j, str(jnp.dtype(dtype)), gather_op, reduce)
+        ops = self._staged.kernel_operands.get(key)
+        if ops is None:
+            from repro.kernels.ops import prepare_from_subshard
+
+            ops = prepare_from_subshard(
+                self.graph.subshard(i, j), dtype, gather_op=gather_op, reduce=reduce
+            )
+            self._staged.kernel_operands[key] = ops
+        return ops
+
+    # -- plan compilation ----------------------------------------------------
+    def params_for(self, program: VertexProgram) -> IOParams:
+        g = self.graph
+        return IOParams(
+            n=g.n, m=g.m, Ba=program.attr_bytes, Bv=self.Bv, Be=self.Be,
+            d=self._hub_d, P=g.P,
+        )
+
+    def compile(self, plan: ExecutionPlan) -> CompiledPlan:
+        """Resolve a plan's strategy + residency against this session (cached)."""
+        key = (plan.strategy, plan.program.attr_bytes)
+        compiled = self._compiled.get(key)
+        if compiled is None:
+            params = self.params_for(plan.program)
+            compiled = CompiledPlan(
+                params=params,
+                choice=self._resolve_choice(plan.strategy, params),
+                resident=self._resolve_residency(plan.strategy, params),
+            )
+            self._compiled[key] = compiled
+        return compiled
+
+    def _resolve_choice(self, strategy: str, params: IOParams) -> StrategyChoice:
+        if strategy == "auto":
+            return select_strategy(params, self.memory_budget)
+        if strategy in ("spu", "dpu", "mpu", "fused"):
+            Q = self.graph.P
+            if strategy == "dpu":
+                Q = 0
+            elif strategy == "mpu":
+                Q = mpu_q(params, self.memory_budget or 0)
+            return StrategyChoice(strategy, Q, 0.0, 0.0)
+        if strategy in self._strategies:
+            return StrategyChoice(strategy, 0, 0.0, 0.0)
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    def _resolve_residency(self, strategy: str, params: IOParams) -> frozenset:
+        """SPU edge residency: leftover budget pins sub-shards in memory."""
+        choice_strategy = (
+            self._resolve_choice(strategy, params).strategy
+            if strategy == "auto"
+            else strategy
+        )
+        if choice_strategy != "spu":
+            return frozenset()
+        resident = self._residency.get(params.Ba)
+        if resident is not None:
+            return resident
+        if self.memory_budget is None:
+            resident = frozenset(self.blocks)
+        else:
+            picked = set()
+            leftover = self.memory_budget - 2 * self.graph.n_pad * params.Ba
+            for key in sorted(self.blocks):  # row-major, as the SPU schedule runs
+                cost = self.blocks[key]["e"] * self.Be
+                if leftover >= cost:
+                    picked.add(key)
+                    leftover -= cost
+            resident = frozenset(picked)
+        self._residency[params.Ba] = resident
+        return resident
+
+    def _interval_aux(self, aux: dict, k: int) -> dict:
+        isz = self.graph.interval_size
+        return {
+            key: (v[k * isz : (k + 1) * isz] if getattr(v, "ndim", 0) == 1 else v)
+            for key, v in aux.items()
+        }
+
+    # -- execution -----------------------------------------------------------
+    def run(self, plan: ExecutionPlan) -> Result:
+        """Execute one plan against the staged graph."""
+        batch = self._execute(plan, [plan.kwargs_dict()])
+        res = batch.results[0]
+        assert res.iterations == res.meters.iterations, (
+            "Result.iterations is defined as the number of update sweeps "
+            "executed and must equal meters.iterations"
+        )
+        return res
+
+    def run_batch(self, plans: list[ExecutionPlan]) -> BatchResult:
+        """Execute K plans, sharing one streamed pass over the edge blocks.
+
+        Plans fuse when they agree on (program, strategy, max_iters, tol)
+        and produce identical aux arrays — they may differ only in
+        Initialize kwargs (BFS/SSSP sources, seeds). Incompatible plans
+        fall back to sequential ``run`` calls (``fused=False``); results
+        are identical either way.
+        """
+        if not plans:
+            return BatchResult([], Meters(), 0, True, True)
+        if self._fusable(plans):
+            return self._execute(plans[0], [p.kwargs_dict() for p in plans])
+        meters = Meters()
+        results = [self.run(p) for p in plans]
+        for r in results:
+            meters.merge(r.meters)
+        return BatchResult(
+            results=results,
+            meters=meters,  # summed, incl. iterations (per_iteration stays true)
+            iterations=max(r.iterations for r in results),
+            converged=all(r.converged for r in results),
+            fused=False,
+        )
+
+    def _fusable(self, plans: list[ExecutionPlan]) -> bool:
+        head = plans[0]
+        if any(p.batch_key() != head.batch_key() for p in plans[1:]):
+            return False
+        g = self.graph
+        aux0 = head.program.make_aux(g, **head.kwargs_dict())
+        for p in plans[1:]:
+            aux = p.program.make_aux(g, **p.kwargs_dict())
+            if set(aux) != set(aux0) or any(
+                not np.array_equal(np.asarray(aux[k]), np.asarray(aux0[k]))
+                for k in aux0
+            ):
+                return False
+        return True
+
+    def _execute(self, plan: ExecutionPlan, kwargs_list: list[dict]) -> BatchResult:
+        g = self.graph
+        prog = plan.program
+        compiled = self.compile(plan)
+        isz = g.interval_size
+        K = len(kwargs_list)
+        attrs = jnp.stack(
+            [prog.init_attrs(g, **kw).reshape(g.P, isz) for kw in kwargs_list]
+        )
+        active = np.stack([prog.init_active(g, **kw) for kw in kwargs_list])
+        aux = prog.make_aux(g, **kwargs_list[0])
+        ctx = _RunContext(
+            session=self,
+            program=prog,
+            choice=compiled.choice,
+            resident=compiled.resident,
+            params=compiled.params,
+            aux=aux,
+            # Hoisted: all P interval views of the (run-constant) aux are
+            # sliced once here, not per (i, j) block inside the sweeps.
+            aux_views=[self._interval_aux(aux, k) for k in range(g.P)],
+            valid=(jnp.arange(g.n_pad) < g.n).reshape(g.P, isz),
+            tol=jnp.asarray(plan.tol, jnp.float32),
+            K=K,
+        )
+        iteration = self._strategies[compiled.choice.strategy]
+        meters = Meters()
+        converged_at: list[int | None] = [
+            0 if not active[m].any() else None for m in range(K)
+        ]
+        sweeps = 0
+        start = time.perf_counter()
+        for _ in range(plan.max_iters):
+            if not active.any():
+                break
+            attrs, active = iteration(ctx, attrs, active, meters)
+            sweeps += 1
+            meters.iterations += 1
+            for m in range(K):
+                if converged_at[m] is None and not active[m].any():
+                    converged_at[m] = sweeps
+        meters.wall_seconds = time.perf_counter() - start
+        results = []
+        for m in range(K):
+            flat = attrs[m].reshape(-1)
+            # Per-query iterations: the sweep at which this member converged
+            # (meaningful for monotone programs, where later sweeps are
+            # no-ops for it); otherwise the shared sweep count.
+            iterations = (
+                converged_at[m]
+                if prog.monotone and converged_at[m] is not None
+                else sweeps
+            )
+            results.append(
+                Result(
+                    attrs=np.asarray(flat[: g.n]),
+                    output=prog.output(flat, g),
+                    iterations=iterations,
+                    converged=converged_at[m] is not None,
+                    meters=meters,
+                    strategy=compiled.choice,
+                )
+            )
+        return BatchResult(
+            results=results,
+            meters=meters,
+            iterations=sweeps,
+            converged=not active.any(),
+            fused=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Identity-keyed weak LRU — shared by the session cache below and the
+# sharded-graph cache in repro.core.algorithms.
+# ---------------------------------------------------------------------------
+class IdentityLRU:
+    """Small LRU keyed by ``(id(obj), *extra)`` with a weakref liveness guard.
+
+    Keying by identity is deliberate (the cached value aliases the object's
+    arrays); the weakref invalidates the slot so recycled ids can't alias a
+    dead object.
+    """
+
+    def __init__(self, size: int = 8):
+        self._size = size
+        self._entries: "OrderedDict[tuple, tuple[weakref.ref, Any]]" = OrderedDict()
+
+    def get_or_build(self, obj, extra: tuple, factory: Callable):
+        key = (id(obj), *extra)
+        entry = self._entries.get(key)
+        if entry is not None and entry[0]() is obj:
+            self._entries.move_to_end(key)
+            return entry[1]
+        value = factory()
+        self._entries[key] = (weakref.ref(obj), value)
+        while len(self._entries) > self._size:
+            self._entries.popitem(last=False)
+        return value
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# Session LRU keyed by graph identity — lets the algorithm drivers
+# (repro.core.algorithms) share one staged session per graph object. Each
+# slot holds the graph's staged device arrays plus the session variants
+# (per memory_budget/Be/Bv) built over them, so changing the budget never
+# re-uploads the blocks. The cache intentionally keeps the last
+# `size` graphs' blocks resident (an LRU retains by design — the cached
+# session strongly references its graph); call clear_session_cache() to
+# release them, or construct GraphSession directly for throwaway graphs.
+_SESSION_LRU = IdentityLRU(size=8)
+
+
+def get_session(
+    graph: DSSSGraph, *, memory_budget: int | None = None, Be: int = 8, Bv: int = 4
+) -> GraphSession:
+    """The session for this graph object, staged at most once (LRU of 8).
+
+    Only use this for graph objects the caller keeps alive across calls;
+    for a throwaway graph, construct :class:`GraphSession` directly so the
+    staged blocks die with it instead of pinning an LRU slot.
+    """
+    slot = _SESSION_LRU.get_or_build(
+        graph, (), lambda: {"staged": _StagedGraph(graph), "variants": {}}
+    )
+    key = (memory_budget, Be, Bv)
+    session = slot["variants"].get(key)
+    if session is None:
+        session = GraphSession(
+            graph, memory_budget=memory_budget, Be=Be, Bv=Bv, staged=slot["staged"]
+        )
+        slot["variants"][key] = session
+    return session
+
+
+def clear_session_cache() -> None:
+    """Release every cached session (and its device-staged blocks)."""
+    _SESSION_LRU.clear()

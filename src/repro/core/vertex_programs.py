@@ -39,6 +39,15 @@ __all__ = [
 INF_DEPTH = np.int32(2**30)
 
 
+def _check_root(g, root: int) -> None:
+    # jax's clamped .at[] indexing would otherwise run the query silently
+    # from the wrong (or a padding) vertex.
+    if not 0 <= int(root) < g.n:
+        raise ValueError(
+            f"root {root} out of range for graph with n={g.n} vertices"
+        )
+
+
 def reduce_identity(reduce: str, dtype) -> Any:
     if reduce == "sum":
         return jnp.zeros((), dtype)
@@ -157,10 +166,12 @@ class BFS(VertexProgram):
     attr_bytes: int = 4
 
     def init_attrs(self, g, root: int = 0, **kw):
+        _check_root(g, root)
         a = jnp.full(g.n_pad, INF_DEPTH, self.dtype)
         return a.at[root].set(0)
 
     def init_active(self, g, root: int = 0, **kw):
+        _check_root(g, root)
         act = np.zeros(g.P, dtype=bool)
         act[root // g.interval_size] = True
         return act
@@ -220,10 +231,12 @@ class SSSP(VertexProgram):
     attr_bytes: int = 4
 
     def init_attrs(self, g, root: int = 0, **kw):
+        _check_root(g, root)
         a = jnp.full(g.n_pad, jnp.inf, self.dtype)
         return a.at[root].set(0.0)
 
     def init_active(self, g, root: int = 0, **kw):
+        _check_root(g, root)
         act = np.zeros(g.P, dtype=bool)
         act[root // g.interval_size] = True
         return act

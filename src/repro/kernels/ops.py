@@ -18,7 +18,13 @@ from repro.kernels import ref as _ref
 from repro.kernels.dsss_spmv import E_BLK, dsss_spmv_block_partials
 from repro.kernels.flash_attention import flash_attention
 
-__all__ = ["subshard_update", "attention", "prepare_subshard_operands", "E_BLK"]
+__all__ = [
+    "subshard_update",
+    "attention",
+    "prepare_subshard_operands",
+    "prepare_from_subshard",
+    "E_BLK",
+]
 
 
 def _identity_value(reduce: str, dtype) -> float:
@@ -70,6 +76,19 @@ def prepare_subshard_operands(
         jnp.asarray(hub_inv, jnp.int32),
         jnp.asarray(w, dtype),
         jnp.asarray(block_base, jnp.int32),
+    )
+
+
+def prepare_from_subshard(ss, dtype, *, gather_op: str, reduce: str):
+    """Stage kernel operands straight from a :class:`repro.core.dsss.SubShard`.
+
+    The session hookup: ``GraphSession.kernel_operands(i, j, ...)`` caches
+    the result per (sub-shard, semiring), so the TPU kernel path shares the
+    stage-once lifecycle of the jnp block primitives.
+    """
+    return prepare_subshard_operands(
+        ss.src_local, ss.hub_inv, ss.weights, dtype,
+        gather_op=gather_op, reduce=reduce,
     )
 
 

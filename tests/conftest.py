@@ -1,0 +1,29 @@
+"""Shared pytest configuration.
+
+Two jobs:
+
+1. The property-test modules need ``hypothesis``, which is not part of the
+   runtime environment everywhere. When it is absent, skip *collecting*
+   those five modules instead of erroring the whole run (install
+   ``requirements-dev.txt`` to run them).
+2. Register the ``slow`` marker used by the long-running training/serving
+   smoke tests, so CI can run ``-m "not slow"`` under a wall-clock budget.
+"""
+import importlib.util
+
+collect_ignore = []
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore += [
+        "test_dsss.py",
+        "test_engine_strategies.py",
+        "test_kernels_dsss_spmv.py",
+        "test_kernels_flash_attention.py",
+        "test_substrate.py",
+    ]
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running training/serving smoke tests (deselect with -m 'not slow')",
+    )

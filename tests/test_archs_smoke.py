@@ -8,6 +8,10 @@ import pytest
 from repro.configs import SHAPES, get_config, list_archs, shape_is_applicable
 from repro.models import Model, input_specs
 
+# Long-running training/serving smoke tests: excluded from the tier-1
+# CI lane via -m "not slow" (see tests/conftest.py and .github/workflows).
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 KEY = jax.random.PRNGKey(0)
 

@@ -1,0 +1,292 @@
+"""Session/Plan execution API: stage once, run many programs, batch queries.
+
+Covers the API-redesign contract:
+  * strategy equivalence (SPU == DPU == MPU == fused) through both the
+    batched path (``session.run_batch``) and the ``NXGraphEngine`` shim,
+    on a random *weighted* graph;
+  * staged-block reuse across successive runs (no re-upload);
+  * ``Result.iterations`` == "update sweeps executed" == ``meters.iterations``
+    on every convergence path;
+  * K-source batches stream the edge blocks once (bytes_read_edges equals a
+    single-query run, not K×);
+  * plan hashability / compile caching and the kernel-operand hookup.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BFS,
+    ExecutionPlan,
+    GraphSession,
+    NXGraphEngine,
+    PageRank,
+    SSSP,
+    WCC,
+    bfs,
+    build_dsss,
+    multi_bfs,
+    multi_sssp,
+    sssp,
+)
+from repro.graph.generators import erdos_renyi, ring
+from repro.graph.preprocess import degree_and_densify
+
+ITERS = 8
+STRATEGIES = ["spu", "dpu", "mpu", "fused"]
+
+
+def _graph(n=120, m=600, seed=0, P=4, weighted=False):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    w = None
+    if weighted:
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.1, 2.0, size=len(src)).astype(np.float32)
+    el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+class TestStrategyEquivalence:
+    def test_weighted_pagerank_all_strategies_via_batch_and_shim(self):
+        """One weighted graph, every strategy, both entry points, same ranks."""
+        g = _graph(seed=3, weighted=True)
+        sess = GraphSession(g, memory_budget=4_000)
+        plans = [
+            ExecutionPlan(PageRank(), strategy=s, max_iters=ITERS, tol=0.0)
+            for s in STRATEGIES
+        ]
+        # Heterogeneous strategies cannot fuse — run_batch must still return
+        # correct per-plan results via the sequential fallback.
+        batch = sess.run_batch(plans)
+        assert not batch.fused and len(batch) == len(STRATEGIES)
+        ref = batch[0].attrs
+        for res, strategy in zip(batch, STRATEGIES):
+            assert res.strategy.strategy == strategy
+            np.testing.assert_allclose(res.attrs, ref, rtol=1e-6, atol=1e-9)
+        # The shim over the *same session* agrees with the batched path.
+        for strategy in STRATEGIES:
+            shim = NXGraphEngine(
+                g, PageRank(), strategy=strategy, session=sess
+            ).run(ITERS, tol=0.0)
+            np.testing.assert_allclose(shim.attrs, ref, rtol=1e-6, atol=1e-9)
+
+    def test_weighted_sssp_all_strategies_batched(self):
+        g = _graph(seed=4, weighted=True)
+        sess = GraphSession(g, memory_budget=2_000)
+        ref = None
+        for strategy in STRATEGIES:
+            batch = sess.run_batch(
+                [
+                    ExecutionPlan(
+                        SSSP(),
+                        strategy=strategy,
+                        max_iters=g.n + 1,
+                        program_kwargs={"root": r},
+                    )
+                    for r in (0, 5, 9)
+                ]
+            )
+            assert batch.fused
+            got = np.stack([r.attrs for r in batch])
+            if ref is None:
+                ref = got
+            np.testing.assert_array_equal(got, ref)
+
+
+class TestStagedBlockReuse:
+    def test_successive_runs_share_staged_blocks(self):
+        """The graph is staged once per session: the block dict (and the
+        device arrays inside it) must be identical objects across runs."""
+        g = _graph(seed=1)
+        sess = GraphSession(g)
+        blocks_before = sess.blocks
+        array_ids = {
+            k: (id(b["src_local"]), id(b["dst_local"]))
+            for k, b in blocks_before.items()
+        }
+        sess.run(ExecutionPlan(PageRank(), max_iters=3, tol=0.0))
+        sess.run(ExecutionPlan(BFS(), max_iters=g.n + 1, program_kwargs={"root": 0}))
+        sess.run(ExecutionPlan(PageRank(), strategy="dpu", max_iters=3, tol=0.0))
+        assert sess.blocks is blocks_before
+        assert {
+            k: (id(b["src_local"]), id(b["dst_local"]))
+            for k, b in sess.blocks.items()
+        } == array_ids
+
+    def test_engines_can_share_one_session(self):
+        g = _graph(seed=2)
+        sess = GraphSession(g)
+        e1 = NXGraphEngine(g, PageRank(), strategy="spu", session=sess)
+        e2 = NXGraphEngine(g, BFS(), strategy="dpu", session=sess)
+        assert e1.blocks is e2.blocks is sess.blocks
+
+    def test_compile_cache_hit(self):
+        g = _graph(seed=2)
+        sess = GraphSession(g, memory_budget=4_000)
+        p = ExecutionPlan(PageRank(), strategy="auto", max_iters=3, tol=0.0)
+        assert sess.compile(p) is sess.compile(
+            ExecutionPlan(PageRank(damping=0.5), strategy="auto")
+        )  # same (strategy, Ba) key
+
+
+class TestIterationsSemantics:
+    """Result.iterations == update sweeps executed == meters.iterations."""
+
+    def test_fixed_iteration_path(self):
+        g = _graph(seed=5)
+        res = GraphSession(g).run(ExecutionPlan(PageRank(), max_iters=5, tol=0.0))
+        assert res.iterations == 5 == res.meters.iterations
+        assert not res.converged
+
+    def test_early_convergence_path(self):
+        """Monotone program goes inactive mid-run (top-of-loop break)."""
+        el = degree_and_densify(*ring(24))
+        g = build_dsss(el, 4)
+        sess = GraphSession(g)
+        res = sess.run(
+            ExecutionPlan(BFS(), max_iters=g.n + 1, program_kwargs={"root": 0})
+        )
+        assert res.converged
+        assert res.iterations == res.meters.iterations
+        # "Sweeps executed" is exact: a budget of exactly `iterations` sweeps
+        # reproduces the fixpoint, one fewer does not converge.
+        again = sess.run(
+            ExecutionPlan(
+                BFS(), max_iters=res.iterations, program_kwargs={"root": 0}
+            )
+        )
+        assert again.converged
+        np.testing.assert_array_equal(again.attrs, res.attrs)
+        short = sess.run(
+            ExecutionPlan(
+                BFS(), max_iters=res.iterations - 1, program_kwargs={"root": 0}
+            )
+        )
+        assert not short.converged
+        assert short.iterations == res.iterations - 1 == short.meters.iterations
+
+    def test_tol_convergence_path(self):
+        g = _graph(seed=5)
+        res = GraphSession(g).run(
+            ExecutionPlan(PageRank(), max_iters=500, tol=1e-10)
+        )
+        assert res.converged
+        assert res.iterations == res.meters.iterations < 500
+
+
+class TestBatchedQueries:
+    """K queries share one streamed pass over the edge blocks."""
+
+    def test_k_identical_queries_cost_one_edge_stream(self):
+        """The acceptance check: bytes_read_edges of an 8-query batch equals
+        the single-query run exactly — DPU streams every edge from the slow
+        tier, so any per-query re-read would show up K×."""
+        g = _graph(seed=6)
+        sess = GraphSession(g)
+        plan = ExecutionPlan(PageRank(), strategy="dpu", max_iters=ITERS, tol=0.0)
+        single = sess.run(plan)
+        batch = sess.run_batch([plan] * 8)
+        assert batch.fused and len(batch) == 8
+        assert batch.iterations == single.iterations
+        assert batch.meters.bytes_read_edges == single.meters.bytes_read_edges
+        assert single.meters.bytes_read_edges > 0
+        # Attribute state is genuinely per-query: hub traffic scales K×.
+        assert batch.meters.bytes_read_hubs == 8 * single.meters.bytes_read_hubs
+        for res in batch:
+            np.testing.assert_allclose(res.attrs, single.attrs, rtol=1e-6, atol=1e-9)
+
+    def test_multi_bfs_one_pass_per_sweep(self):
+        # P=1 keeps the activity schedule identical for every source, so the
+        # per-sweep edge traffic of the batch must exactly equal a
+        # single-query sweep (m·Be), not K of them.
+        g = _graph(n=100, m=700, seed=7, P=1)
+        roots = [0, 3, 11, 17, 23, 42, 57, 77]
+        batch = multi_bfs(g, roots, P=1, strategy="dpu")
+        assert batch.fused and len(batch) == len(roots)
+        single = bfs(g, root=roots[0], P=1, strategy="dpu")
+        per_batch = batch.meters.per_iteration().bytes_read_edges
+        per_single = single.meters.per_iteration().bytes_read_edges
+        assert per_batch == per_single == g.m * 8
+        # And strictly sublinear overall vs. K independent runs.
+        assert batch.meters.bytes_read_edges < len(roots) * per_single * (
+            batch.iterations
+        )
+
+    def test_multi_bfs_matches_individual_runs(self):
+        g = _graph(seed=8)
+        roots = [0, 2, 5, 9, 14, 33, 47, 61]
+        batch = multi_bfs(g, roots, P=4)
+        assert batch.fused
+        for res, root in zip(batch, roots):
+            single = bfs(g, root=root, P=4)
+            np.testing.assert_array_equal(res.attrs, single.attrs)
+            assert res.output == single.output
+            assert res.converged
+            assert res.iterations <= batch.iterations
+
+    def test_multi_sssp_matches_individual_runs(self):
+        g = _graph(seed=9, weighted=True)
+        roots = [0, 4, 8, 15]
+        batch = multi_sssp(g, roots, P=4)
+        assert batch.fused
+        for res, root in zip(batch, roots):
+            single = sssp(g, root=root, P=4)
+            np.testing.assert_array_equal(res.attrs, single.attrs)
+
+
+class TestPlanObject:
+    def test_plans_are_hashable_and_value_equal(self):
+        p1 = ExecutionPlan(BFS(), program_kwargs={"root": 3})
+        p2 = ExecutionPlan(BFS(), program_kwargs={"root": 3})
+        p3 = ExecutionPlan(BFS(), program_kwargs={"root": 4})
+        assert p1 == p2 and hash(p1) == hash(p2)
+        assert p1 != p3
+        assert len({p1, p2, p3}) == 2
+
+    def test_array_kwargs_freeze_by_content(self):
+        mask = np.ones(16, np.int32)
+        p1 = ExecutionPlan(WCC(), program_kwargs={"mask": mask})
+        p2 = ExecutionPlan(WCC(), program_kwargs={"mask": mask.copy()})
+        assert p1 == p2 and hash(p1) == hash(p2)
+        np.testing.assert_array_equal(p1.kwargs_dict()["mask"], mask)
+        # Mutating the source array after freezing must not leak in.
+        mask[0] = 7
+        assert p1.kwargs_dict()["mask"][0] == 1
+
+    def test_with_kwargs(self):
+        p = ExecutionPlan(BFS(), max_iters=17, program_kwargs={"root": 0})
+        q = p.with_kwargs(root=5)
+        assert q.max_iters == 17 and q.kwargs_dict() == {"root": 5}
+        assert p.kwargs_dict() == {"root": 0}
+
+
+class TestKernelHookup:
+    def test_session_kernel_operands_cached_and_correct(self):
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import subshard_update
+        from repro.kernels.ref import subshard_update_ref
+
+        g = _graph(seed=10, P=2)
+        sess = GraphSession(g)
+        key = next(iter(sess.blocks))
+        i, j = key
+        ops1 = sess.kernel_operands(i, j, jnp.float32, gather_op="mul", reduce="sum")
+        ops2 = sess.kernel_operands(i, j, jnp.float32, gather_op="mul", reduce="sum")
+        assert all(a is b for a, b in zip(ops1, ops2))  # staged once
+        ss = g.subshard(i, j)
+        vals = jnp.asarray(
+            np.random.default_rng(0).random(g.interval_size), jnp.float32
+        )
+        got = subshard_update(
+            vals, *ops1, ss.num_unique_dst, gather_op="mul", reduce="sum"
+        )
+        want = subshard_update_ref(
+            vals,
+            jnp.asarray(ss.src_local),
+            jnp.asarray(ss.hub_inv),
+            jnp.ones(ss.num_edges, jnp.float32),
+            ss.num_unique_dst,
+            gather_op="mul",
+            reduce="sum",
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -54,6 +54,10 @@ class TestEndToEnd:
             text=True,
             env={
                 "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+                # Without an explicit platform, jax probes for accelerator
+                # plugins (cloud-TPU metadata lookups) and can stall for
+                # minutes in sandboxed environments.
+                "JAX_PLATFORMS": "cpu",
                 "PYTHONPATH": "src",
                 "PATH": "/usr/bin:/bin",
             },

@@ -17,6 +17,10 @@ from repro.train.loop import TrainLoopConfig, train
 from repro.train.state import make_train_state
 from repro.train.step import make_train_step
 
+# Long-running training/serving smoke tests: excluded from the tier-1
+# CI lane via -m "not slow" (see tests/conftest.py and .github/workflows).
+pytestmark = pytest.mark.slow
+
 
 def _tiny_cfg():
     return get_config("gemma-2b", smoke=True)
