@@ -23,9 +23,13 @@ from repro.core.session import (
 )
 from repro.core.engine import NXGraphEngine
 from repro.core.iomodel import (
+    IOComparison,
     IOParams,
     StrategyChoice,
+    calibrate_edge_bytes,
+    compare_measured,
     dpu_io,
+    modelled_io,
     mpu_io,
     mpu_q,
     select_strategy,
@@ -63,11 +67,15 @@ __all__ = [
     "NXGraphEngine",
     "Result",
     "IOParams",
+    "IOComparison",
     "StrategyChoice",
     "spu_io",
     "dpu_io",
     "mpu_io",
     "mpu_q",
+    "modelled_io",
+    "compare_measured",
+    "calibrate_edge_bytes",
     "select_strategy",
     "turbograph_like_io",
     "VertexProgram",

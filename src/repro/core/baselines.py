@@ -59,6 +59,12 @@ def _iteration_turbograph(ctx, attrs, active, meters: Meters):
     ident = reduce_identity(prog.reduce, prog.dtype)
     rows = _rows_to_process(ctx, active)
     iv_bytes = isz * ctx.params.Ba * K
+    # Column-major sweep order; nothing is ever resident for this baseline,
+    # so the fetcher streams (and charges) every block each sweep.
+    order = [
+        (i, j) for j in range(g.P) for i in rows if (i, j) in ctx.block_keys
+    ]
+    fetch = ctx.fetcher.begin(order)
     new_cols = []
     active_next = np.zeros((K, g.P), dtype=bool)
     for j in range(g.P):
@@ -66,13 +72,12 @@ def _iteration_turbograph(ctx, attrs, active, meters: Meters):
         touched = False
         meters.bytes_read_intervals += iv_bytes  # load destination block
         for i in rows:
-            blk = sess.blocks.get((i, j))
-            if blk is None:
+            if (i, j) not in ctx.block_keys:
                 continue
+            blk = fetch()
             # Re-load the source interval for every (i, j) pair — the
             # n·P·Ba term that the paper's Fig. 6 analysis penalizes.
             meters.bytes_read_intervals += iv_bytes
-            meters.bytes_read_edges += blk["e"] * sess.Be
             meters.blocks_processed += 1
             meters.edges_processed += blk["e"]
             acc = _block_gather_reduce(

@@ -142,6 +142,27 @@ class DSSSGraph:
         }
         return blk
 
+    def host_blocks(self) -> dict[tuple[int, int], dict]:
+        """All non-empty sub-shards as padded host buffers, keyed ``(i, j)``.
+
+        This is the slow-tier image of the graph: the session keeps these
+        numpy buffers pinned on the host and either mirrors them to the
+        device once (``residency="device"``) or streams them per sweep
+        (``residency="host"``). No device arrays are created here.
+        """
+        blocks: dict[tuple[int, int], dict] = {}
+        for i in range(self.P):
+            for j in range(self.P):
+                blk = self.padded_subshard(i, j)
+                if blk is not None:
+                    blocks[(i, j)] = blk
+        return blocks
+
+    def total_edge_bytes(self, Be: int) -> int:
+        """Model bytes of the whole edge topology (``m·Be``) — the quantity
+        a ``memory_budget`` must exceed for 100% edge residency."""
+        return self.m * Be
+
     def mean_hub_in_degree(self) -> float:
         """The paper's ``d``: average in-degree of sub-shard destinations.
 

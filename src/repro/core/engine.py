@@ -36,6 +36,10 @@ class NXGraphEngine:
         custom strategy. "auto" applies the paper's adaptive selection
         from ``memory_budget``.
       memory_budget: bytes of fast-tier memory (B_M). ``None`` = unlimited.
+      residency: "device" | "host" | "auto" — whether the budget is merely
+        modelled (device-staged blocks, seed behaviour) or enforced by
+        host-streamed execution. See :class:`GraphSession`. ``None``
+        defaults to "auto" (host streaming iff a budget is set).
       Be: bytes per edge in the I/O model (8 = two int32 ids).
       Bv: bytes per vertex id.
       session: share an existing staged session instead of staging a new
@@ -49,6 +53,7 @@ class NXGraphEngine:
         *,
         strategy: str = "auto",
         memory_budget: int | None = None,
+        residency: str | None = None,
         Be: int | None = None,
         Bv: int | None = None,
         session: GraphSession | None = None,
@@ -57,6 +62,7 @@ class NXGraphEngine:
             session = GraphSession(
                 graph,
                 memory_budget=memory_budget,
+                residency="auto" if residency is None else residency,
                 Be=8 if Be is None else Be,
                 Bv=4 if Bv is None else Bv,
             )
@@ -66,6 +72,14 @@ class NXGraphEngine:
             if session.graph is not graph:
                 raise ValueError(
                     "session was staged for a different graph object than `graph`"
+                )
+            if residency is not None and session.resolved_residency(
+                residency
+            ) != session.resolved_residency():
+                raise ValueError(
+                    f"residency={residency!r} conflicts with the shared "
+                    f"session's residency ({session.residency!r}); configure "
+                    "it on the GraphSession"
                 )
             if memory_budget is not None and memory_budget != session.memory_budget:
                 raise ValueError(

@@ -77,6 +77,10 @@ class ExecutionPlan:
         memory budget at compile time (paper's adaptive selection).
       max_iters: update-sweep budget.
       tol: convergence tolerance handed to ``program.changed``.
+      residency: per-plan override of the session's residency axis —
+        ``None`` (inherit), "device", "host" or "auto" (host iff the
+        session has a memory budget). See
+        :class:`repro.core.session.GraphSession` for the semantics.
       program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are
         frozen by content; pass a mapping, it is normalized to a sorted
         tuple in ``__post_init__``.
@@ -86,9 +90,15 @@ class ExecutionPlan:
     strategy: str = "auto"
     max_iters: int = 200
     tol: float = 1e-10
+    residency: str | None = None
     program_kwargs: Any = ()
 
     def __post_init__(self):
+        if self.residency not in (None, "device", "host", "auto"):
+            raise ValueError(
+                "residency must be None, 'device', 'host' or 'auto', "
+                f"got {self.residency!r}"
+            )
         kw = self.program_kwargs
         if isinstance(kw, Mapping):
             items = kw.items()
@@ -110,4 +120,4 @@ class ExecutionPlan:
 
     def batch_key(self) -> tuple:
         """Plans sharing a batch_key can fuse into one streamed pass."""
-        return (self.program, self.strategy, self.max_iters, self.tol)
+        return (self.program, self.strategy, self.max_iters, self.tol, self.residency)

@@ -22,6 +22,16 @@ always equals the number of update sweeps executed.
 The per-iteration schedules themselves (SPU / DPU / MPU / fused, paper
 §III-B) are unchanged from the engine; custom schedules (the TurboGraph-like
 baseline) register via :meth:`GraphSession.register_strategy`.
+
+Out-of-core execution (paper §I "streamlined disk access"): the session's
+``residency`` axis decides whether sub-shard blocks live on the device
+("device"), or stay as pinned host (numpy) buffers that are streamed to the
+device per sweep with double-buffered prefetch ("host"), with the resident
+set — the blocks the ``memory_budget`` pins in the fast tier — computed by
+:meth:`GraphSession._resolve_residency` and *enforced* by
+:class:`_BlockFetcher`. Graphs larger than the fast tier run in "host" mode
+with device-held topology bounded by the budget (plus a two-block streaming
+ring), bit-identical to the device-resident run.
 """
 from __future__ import annotations
 
@@ -55,13 +65,31 @@ __all__ = [
 
 @dataclasses.dataclass
 class Meters:
-    """Slow-tier byte counters + scheduling statistics."""
+    """Slow-tier byte counters + scheduling statistics.
+
+    The ``bytes_read_*`` / ``bytes_written_*`` fields are the paper's
+    Table II slow-tier traffic, charged in *model units* (``e·Be`` per
+    streamed block, ``interval_size·Ba`` per interval load/save). Under
+    ``residency="host"`` the edge charges coincide with real host→device
+    transfers — a block is charged exactly when it is actually copied —
+    and two extra fields report the physical side of the same events:
+
+    * ``bytes_h2d``: raw bytes of the numpy buffers actually shipped to
+      the device (bucket-padded, index-encoded — ≥ the model bytes).
+    * ``peak_device_graph_bytes``: high-water mark of device-held edge
+      topology in model units (pinned resident set + the ≤2-block
+      prefetch ring). Under ``residency="device"`` this is the whole
+      graph; under ``"host"`` it is bounded by the memory budget plus
+      the documented two-block streaming slack.
+    """
 
     bytes_read_edges: float = 0.0
     bytes_read_intervals: float = 0.0
     bytes_read_hubs: float = 0.0
     bytes_written_hubs: float = 0.0
     bytes_written_intervals: float = 0.0
+    bytes_h2d: float = 0.0
+    peak_device_graph_bytes: float = 0.0
     iterations: int = 0
     blocks_processed: int = 0
     blocks_skipped: int = 0
@@ -89,6 +117,7 @@ class Meters:
             "bytes_read_hubs",
             "bytes_written_hubs",
             "bytes_written_intervals",
+            "bytes_h2d",
         ):
             setattr(out, f, getattr(self, f) / k)
         return out
@@ -103,10 +132,15 @@ class Meters:
         """Accumulate another run's counters into this one (in place).
 
         Every field sums — including ``iterations`` — so ``per_iteration()``
-        of a merged meter remains the true per-sweep average.
+        of a merged meter remains the true per-sweep average. The one
+        exception is ``peak_device_graph_bytes``, a high-water mark:
+        merging takes the max (sequential runs reuse the same device).
         """
         for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+            if f.name == "peak_device_graph_bytes":
+                setattr(self, f.name, max(getattr(self, f.name), getattr(other, f.name)))
+            else:
+                setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
         return self
 
 
@@ -147,11 +181,20 @@ class BatchResult:
 
 @dataclasses.dataclass(frozen=True)
 class CompiledPlan:
-    """A plan resolved against one session: strategy + residency, no state."""
+    """A plan resolved against one session: strategy + residency, no state.
+
+    ``residency`` is the *resolved* placement mode ("device" or "host" —
+    never "auto"); ``resident`` is the set of sub-shard keys the memory
+    budget pins in the fast tier. Under "host" the resident set is
+    enforced (those blocks are device-pinned, the rest are streamed from
+    host buffers per sweep); under "device" every block stays on device
+    and the same resident set drives the modelled byte meters only.
+    """
 
     params: IOParams
     choice: StrategyChoice
     resident: frozenset
+    residency: str = "device"
 
 
 # ---------------------------------------------------------------------------
@@ -374,6 +417,11 @@ class _RunContext:
     valid: jnp.ndarray  # (P, isize) bool
     tol: jnp.ndarray
     K: int
+    fetcher: _BlockFetcher = None  # type: ignore[assignment]
+
+    @property
+    def block_keys(self) -> frozenset:
+        return self.session.block_keys
 
 
 def _rows_to_process(ctx: _RunContext, active: np.ndarray) -> list[int]:
@@ -396,30 +444,28 @@ def _iteration_spu(ctx: _RunContext, attrs, active, meters: Meters):
     acc = [jnp.full((K, isz), ident, prog.dtype) for _ in range(g.P)]
     touched = [False] * g.P
     rows = _rows_to_process(ctx, active)
-    for i in rows:
-        src_aux_i = ctx.aux_views[i]
-        for j in range(g.P):
-            blk = sess.blocks.get((i, j))
-            if blk is None:
-                continue
-            acc[j] = _block_gather_reduce(
-                prog,
-                attrs[:, i],
-                src_aux_i,
-                ctx.aux_views[j] if prog.needs_dst_aux else {},
-                blk["src_local"],
-                blk["dst_local"],
-                blk["weights"],
-                blk["e_valid"],
-                acc[j],
-                num_segments=isz,
-                has_weights=sess.has_weights,
-            )
-            touched[j] = True
-            meters.blocks_processed += 1
-            meters.edges_processed += blk["e"]
-            if (i, j) not in ctx.resident:
-                meters.bytes_read_edges += blk["e"] * sess.Be
+    order = [
+        (i, j) for i in rows for j in range(g.P) if (i, j) in ctx.block_keys
+    ]
+    fetch = ctx.fetcher.begin(order)
+    for i, j in order:
+        blk = fetch()
+        acc[j] = _block_gather_reduce(
+            prog,
+            attrs[:, i],
+            ctx.aux_views[i],
+            ctx.aux_views[j] if prog.needs_dst_aux else {},
+            blk["src_local"],
+            blk["dst_local"],
+            blk["weights"],
+            blk["e_valid"],
+            acc[j],
+            num_segments=isz,
+            has_weights=sess.has_weights,
+        )
+        touched[j] = True
+        meters.blocks_processed += 1
+        meters.edges_processed += blk["e"]
     meters.blocks_skipped += (g.P - len(rows)) * g.P
     new_cols = []
     active_next = np.zeros((K, g.P), dtype=bool)
@@ -452,9 +498,30 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
     ident = reduce_identity(prog.reduce, prog.dtype)
     acc = [jnp.full((K, isz), ident, prog.dtype) for _ in range(g.P)]
     touched = [False] * g.P
-    hubs: dict[tuple[int, int], jnp.ndarray] = {}
+    # Hub state between the phases: (partial, hub_dst, u_valid, u). Keeping
+    # the (small) hub metadata here means phase 2 never re-touches the edge
+    # block — each sub-shard is fetched exactly once per sweep.
+    hubs: dict[tuple[int, int], tuple] = {}
     rows = _rows_to_process(ctx, active)
     iv_bytes = isz * ctx.params.Ba * K
+
+    # Every sub-shard is visited once: (j < Q or i >= Q) blocks in the
+    # row-major phase, deferred (i < Q, j >= Q) blocks in the column-major
+    # phase. Declaring the order up front drives the streaming prefetch.
+    phase1 = [
+        (i, j)
+        for i in rows
+        for j in range(g.P)
+        if (j < Q or i >= Q) and (i, j) in ctx.block_keys
+    ]
+    phase2 = [
+        (i, j)
+        for j in range(g.P)
+        if j >= Q
+        for i in rows
+        if i < Q and (i, j) in ctx.block_keys
+    ]
+    fetch = ctx.fetcher.begin(phase1 + phase2)
 
     def _direct(i: int, j: int, blk: dict) -> None:
         """UpdateInMemory (paper Alg. 7 lines 4, 10, 20)."""
@@ -472,7 +539,6 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
             has_weights=sess.has_weights,
         )
         touched[j] = True
-        meters.bytes_read_edges += blk["e"] * sess.Be
         meters.blocks_processed += 1
         meters.edges_processed += blk["e"]
 
@@ -485,12 +551,12 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
         if i >= Q:
             meters.bytes_read_intervals += iv_bytes  # LoadFromDisk(I_i)
         for j in range(g.P):
-            blk = sess.blocks.get((i, j))
-            if blk is None:
+            if (i, j) not in ctx.block_keys or not (j < Q or i >= Q):
                 continue
+            blk = fetch()
             if j < Q:
                 _direct(i, j, blk)
-            elif i >= Q:
+            else:
                 # UpdateToHub (cold source AND cold destination).
                 partial = _block_to_hub(
                     prog,
@@ -505,9 +571,8 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
                     num_segments=blk["u_bucket"],
                     has_weights=sess.has_weights,
                 )
-                hubs[(i, j)] = partial
+                hubs[(i, j)] = (partial, blk["hub_dst"], blk["u_valid"], blk["u"])
                 touched[j] = True
-                meters.bytes_read_edges += blk["e"] * sess.Be
                 meters.bytes_written_hubs += blk["u"] * (
                     ctx.params.Ba + sess.Bv
                 ) * K
@@ -523,19 +588,15 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
     for j in range(g.P):
         if j >= Q:
             for i in rows:
-                if i < Q:
-                    blk = sess.blocks.get((i, j))
-                    if blk is not None:
-                        _direct(i, j, blk)
+                if i < Q and (i, j) in ctx.block_keys:
+                    _direct(i, j, fetch())
             for i in rows:
                 h = hubs.get((i, j))
                 if h is None:
                     continue
-                blk = sess.blocks[(i, j)]
-                acc[j] = _block_from_hub(
-                    prog, acc[j], blk["hub_dst"], h, blk["u_valid"]
-                )
-                meters.bytes_read_hubs += blk["u"] * (ctx.params.Ba + sess.Bv) * K
+                partial, hub_dst, u_valid, u = h
+                acc[j] = _block_from_hub(prog, acc[j], hub_dst, partial, u_valid)
+                meters.bytes_read_hubs += u * (ctx.params.Ba + sess.Bv) * K
         if not touched[j] and prog.monotone:
             new_cols[j] = attrs[:, j]
             continue
@@ -588,7 +649,7 @@ def _iteration_fused(ctx: _RunContext, attrs, active, meters: Meters):
         P=g.P,
         has_weights=sess.has_weights,
     )
-    meters.blocks_processed += len(sess.blocks)
+    meters.blocks_processed += len(sess.block_keys)
     meters.edges_processed += g.m
     return flat.reshape(K, g.P, g.interval_size), np.asarray(changed_iv)
 
@@ -596,62 +657,206 @@ def _iteration_fused(ctx: _RunContext, attrs, active, meters: Meters):
 # ---------------------------------------------------------------------------
 # The session.
 # ---------------------------------------------------------------------------
+def _device_block(host: dict) -> dict:
+    """Upload one padded host block (the 'shard file') to the device."""
+    return {
+        "src_local": jnp.asarray(host["src_local"], jnp.int32),
+        "dst_local": jnp.asarray(host["dst_local"], jnp.int32),
+        "hub_inv": jnp.asarray(host["hub_inv"], jnp.int32),
+        "hub_dst": jnp.asarray(host["hub_dst"], jnp.int32),
+        "e_valid": jnp.asarray(host["e"], jnp.int32),
+        "u_valid": jnp.asarray(host["u"], jnp.int32),
+        "e": host["e"],
+        "u": host["u"],
+        "u_bucket": host["u_bucket"],
+        "weights": (
+            None
+            if host["weights"] is None
+            else jnp.asarray(host["weights"], jnp.float32)
+        ),
+    }
+
+
+def _host_block_nbytes(host: dict) -> int:
+    """Raw bytes a host→device copy of this block actually ships."""
+    total = 0
+    for name in ("src_local", "dst_local", "hub_inv", "hub_dst", "weights"):
+        arr = host.get(name)
+        if arr is not None:
+            total += arr.nbytes
+    return total
+
+
 class _StagedGraph:
-    """Device-resident arrays that are a pure function of the graph.
+    """Staged arrays that are a pure function of the graph.
 
     Shared between every :class:`GraphSession` variant of one graph (e.g.
-    different memory budgets), so the padded sub-shard blocks are uploaded
-    exactly once per graph object.
+    different memory budgets / residency modes). The *host* blocks — padded
+    numpy sub-shard buffers, the in-memory equivalent of the paper's shard
+    files — are built eagerly once; the full *device* mirror is staged
+    lazily, only when a device-resident session first needs it, so
+    host-streamed sessions never upload the whole graph.
     """
 
     def __init__(self, graph: DSSSGraph):
         self.graph = graph
-        self.blocks = self._stage_blocks(graph)
+        self.host_blocks = graph.host_blocks()
+        self.block_keys = frozenset(self.host_blocks)
+        self._device_blocks: dict[tuple[int, int], dict] | None = None
         self.fused: dict | None = None
         self.kernel_operands: dict[tuple, tuple] = {}
 
-    @staticmethod
-    def _stage_blocks(g: DSSSGraph) -> dict[tuple[int, int], dict]:
-        """Upload padded per-sub-shard arrays once (the 'shard files')."""
-        blocks: dict[tuple[int, int], dict] = {}
-        for i in range(g.P):
-            for j in range(g.P):
-                host = g.padded_subshard(i, j)
-                if host is None:
-                    continue
-                blocks[(i, j)] = {
-                    "src_local": jnp.asarray(host["src_local"], jnp.int32),
-                    "dst_local": jnp.asarray(host["dst_local"], jnp.int32),
-                    "hub_inv": jnp.asarray(host["hub_inv"], jnp.int32),
-                    "hub_dst": jnp.asarray(host["hub_dst"], jnp.int32),
-                    "e_valid": jnp.asarray(host["e"], jnp.int32),
-                    "u_valid": jnp.asarray(host["u"], jnp.int32),
-                    "e": host["e"],
-                    "u": host["u"],
-                    "u_bucket": host["u_bucket"],
-                    "weights": (
-                        None
-                        if host["weights"] is None
-                        else jnp.asarray(host["weights"], jnp.float32)
-                    ),
-                }
-        return blocks
+    def device_blocks(self) -> dict[tuple[int, int], dict]:
+        """The all-on-device block dict (staged once, residency="device")."""
+        if self._device_blocks is None:
+            self._device_blocks = {
+                key: _device_block(host) for key, host in self.host_blocks.items()
+            }
+        return self._device_blocks
+
+
+class _BlockFetcher:
+    """Per-run edge-block access layer — the enforcement point of residency.
+
+    Every schedule body obtains sub-shard blocks exclusively through this
+    object, in its declared sweep order, so edge byte meters are charged
+    where the data actually moves instead of being recomputed per strategy:
+
+    * ``residency="device"``: blocks come from the staged device mirror;
+      a fetch of a key outside the resident set charges ``e·Be`` model
+      bytes (the simulated slow tier — seed behaviour, unchanged).
+    * ``residency="host"``: only the resident set is device-pinned.
+      Fetching any other key performs a real host→device copy of the
+      pinned host buffer, double-buffered: while block t computes, block
+      t+1's transfer is already in flight (``jax.device_put`` is async).
+      The charge is the same ``e·Be`` — it now *is* the transfer — and
+      ``bytes_h2d`` additionally records the raw padded bytes shipped.
+
+    The streaming ring holds at most one prefetched block beyond the one
+    in use, so peak device topology bytes stay ≤ resident + 2 blocks.
+    """
+
+    def __init__(
+        self,
+        session: "GraphSession",
+        compiled: CompiledPlan,
+        meters: Meters,
+        pinned: dict[tuple[int, int], dict],
+    ):
+        self._session = session
+        self._resident = compiled.resident
+        self._host_mode = compiled.residency == "host"
+        self._meters = meters
+        self._pinned = pinned
+        self._ring: dict[tuple[int, int], dict] = {}
+        self._order: list[tuple[int, int]] = []
+        self._pos = 0
+        Be = session.Be
+        host = session._staged.host_blocks
+        self._model_bytes = {k: h["e"] * Be for k, h in host.items()}
+        if self._host_mode:
+            self._pinned_model = float(
+                sum(self._model_bytes[k] for k in pinned)
+            )
+            # The pinned resident set occupies the device for the whole
+            # run, whether or not any block is streamed on top of it.
+            meters.peak_device_graph_bytes = max(
+                meters.peak_device_graph_bytes, self._pinned_model
+            )
+        else:
+            # Everything is device-resident: the high-water mark is the
+            # whole staged topology, reported once up front.
+            total = float(sum(self._model_bytes.values()))
+            meters.peak_device_graph_bytes = max(
+                meters.peak_device_graph_bytes, total
+            )
+
+    def begin(self, order: list[tuple[int, int]]) -> Callable[[], dict]:
+        """Declare this sweep's block order; returns the sequential fetch.
+
+        The first streamed block's transfer is issued immediately so the
+        sweep starts with its double buffer warm.
+        """
+        self._order = order
+        self._pos = 0
+        if self._host_mode and order:
+            self._prefetch(order[0])
+        return self._next
+
+    def _prefetch(self, key: tuple[int, int]) -> None:
+        if key in self._pinned or key in self._ring:
+            return
+        host = self._session._staged.host_blocks[key]
+        self._ring[key] = _device_block(host)
+        self._meters.bytes_h2d += _host_block_nbytes(host)
+
+    def _next(self) -> dict:
+        key = self._order[self._pos]
+        self._pos += 1
+        if not self._host_mode:
+            if key not in self._resident:
+                self._meters.bytes_read_edges += self._model_bytes[key]
+            return self._session._staged.device_blocks()[key]
+        blk = self._pinned.get(key)
+        if blk is not None:
+            if self._pos < len(self._order):
+                self._prefetch(self._order[self._pos])
+            return blk
+        blk = self._ring.pop(key, None)
+        if blk is None:  # cold start / out-of-order access
+            host = self._session._staged.host_blocks[key]
+            blk = _device_block(host)
+            self._meters.bytes_h2d += _host_block_nbytes(host)
+        if self._pos < len(self._order):
+            self._prefetch(self._order[self._pos])
+        self._meters.bytes_read_edges += self._model_bytes[key]
+        live = (
+            self._pinned_model
+            + self._model_bytes[key]
+            + sum(self._model_bytes[k] for k in self._ring)
+        )
+        self._meters.peak_device_graph_bytes = max(
+            self._meters.peak_device_graph_bytes, live
+        )
+        return blk
 
 
 class GraphSession:
-    """Device-staged graph state shared by every run.
+    """Staged graph state shared by every run.
 
     Args:
       graph: sharded :class:`DSSSGraph`.
       memory_budget: bytes of fast-tier memory (B_M). ``None`` = unlimited.
+      residency: where sub-shard edge blocks live between sweeps.
+
+        * ``"device"`` — every block is staged to the device once (the
+          seed behaviour). ``memory_budget`` only parameterizes the
+          *modelled* byte meters and the adaptive strategy choice.
+        * ``"host"`` — the budget is **enforced**: only the resident set
+          that :meth:`_resolve_residency` computes from ``memory_budget``
+          is device-pinned; every other block stays a pinned host (numpy)
+          buffer and is streamed to the device per sweep with
+          double-buffered prefetch, in the schedule's sequential sub-shard
+          order. Results are bit-identical to ``"device"`` and the
+          modelled byte meters are unchanged — they now coincide with the
+          real transfers (``Meters.bytes_h2d`` reports the raw bytes).
+          Vertex-attribute state (``2·n_pad·Ba``) and hub state remain
+          fast-tier resident; their slow-tier traffic under DPU/MPU
+          remains modelled, as in the paper. The ``"fused"`` strategy is
+          the explicitly device-resident fast path and ignores residency.
+        * ``"auto"`` — ``"host"`` when a ``memory_budget`` is set,
+          ``"device"`` otherwise (an unlimited budget pins everything,
+          making the two modes identical).
+
       Be: bytes per edge in the I/O model (8 = two int32 ids; +4 is added
         automatically for weighted graphs).
       Bv: bytes per vertex id.
 
-    Staging happens once in ``__init__`` (padded per-sub-shard device
-    arrays — the 'shard files'); plans are compiled lazily and cached, so
-    repeated ``run``/``run_batch`` calls re-use both the staged blocks and
-    the jit executables.
+    Host-side staging happens once in ``__init__`` (padded per-sub-shard
+    numpy buffers — the 'shard files'); device staging is all-at-once for
+    ``"device"`` residency and budget-bounded for ``"host"``. Plans are
+    compiled lazily and cached, so repeated ``run``/``run_batch`` calls
+    re-use the staged blocks and the jit executables.
     """
 
     _strategies: dict[str, Callable] = {
@@ -666,12 +871,18 @@ class GraphSession:
         graph: DSSSGraph,
         *,
         memory_budget: int | None = None,
+        residency: str = "auto",
         Be: int = 8,
         Bv: int = 4,
         staged: _StagedGraph | None = None,
     ):
+        if residency not in ("device", "host", "auto"):
+            raise ValueError(
+                f"residency must be 'device', 'host' or 'auto', got {residency!r}"
+            )
         self.graph = graph
         self.memory_budget = memory_budget
+        self.residency = residency
         self.has_weights = graph.weights is not None
         self.Be = Be + (4 if self.has_weights else 0)
         self.Bv = Bv
@@ -681,10 +892,53 @@ class GraphSession:
         self._staged = staged if staged is not None else _StagedGraph(graph)
         self._residency: dict[int, frozenset] = {}  # Ba -> resident set
         self._compiled: dict[tuple, CompiledPlan] = {}
+        self._pinned: dict[tuple[int, int], dict] = {}  # host mode device pins
+
+    @property
+    def block_keys(self) -> frozenset:
+        """Keys of the non-empty sub-shards (placement-independent)."""
+        return self._staged.block_keys
+
+    @property
+    def host_blocks(self) -> dict[tuple[int, int], dict]:
+        """The padded numpy 'shard files' (always present, never uploaded)."""
+        return self._staged.host_blocks
 
     @property
     def blocks(self) -> dict[tuple[int, int], dict]:
-        return self._staged.blocks
+        """Back-compat staged-block view.
+
+        Under ``"device"``/``"auto"``-without-budget residency this is the
+        all-on-device dict (staged once); under enforced ``"host"``
+        residency it is the host dict — returning the device mirror here
+        would silently stage the whole graph and break the budget.
+        """
+        if self.resolved_residency() == "host":
+            return self._staged.host_blocks
+        return self._staged.device_blocks()
+
+    def resolved_residency(self, override: str | None = None) -> str:
+        """Resolve the session/plan residency axis to 'device' or 'host'."""
+        mode = override or self.residency
+        if mode == "auto":
+            mode = "host" if self.memory_budget is not None else "device"
+        return mode
+
+    # -- budget accounting ---------------------------------------------------
+    def pinned_device_bytes(self) -> tuple[float, float]:
+        """(model, actual) bytes of the currently device-pinned edge blocks.
+
+        Model bytes use the I/O-model accounting (``e·Be`` per block, the
+        same units as ``memory_budget``); actual bytes are the raw padded
+        buffer sizes (bucket padding makes them up to ~2× larger).
+        """
+        model = float(
+            sum(self.host_blocks[k]["e"] * self.Be for k in self._pinned)
+        )
+        actual = float(
+            sum(_host_block_nbytes(self.host_blocks[k]) for k in self._pinned)
+        )
+        return model, actual
 
     # -- strategy registry ---------------------------------------------------
     @classmethod
@@ -721,10 +975,12 @@ class GraphSession:
         key = (i, j, str(jnp.dtype(dtype)), gather_op, reduce)
         ops = self._staged.kernel_operands.get(key)
         if ops is None:
-            from repro.kernels.ops import prepare_from_subshard
+            from repro.kernels.ops import prepare_from_host_block
 
-            ops = prepare_from_subshard(
-                self.graph.subshard(i, j), dtype, gather_op=gather_op, reduce=reduce
+            # Stage from the already-built host buffer (shared with the
+            # streaming path) instead of re-slicing the flat edge arrays.
+            ops = prepare_from_host_block(
+                self.host_blocks[(i, j)], dtype, gather_op=gather_op, reduce=reduce
             )
             self._staged.kernel_operands[key] = ops
         return ops
@@ -739,7 +995,7 @@ class GraphSession:
 
     def compile(self, plan: ExecutionPlan) -> CompiledPlan:
         """Resolve a plan's strategy + residency against this session (cached)."""
-        key = (plan.strategy, plan.program.attr_bytes)
+        key = (plan.strategy, plan.program.attr_bytes, plan.residency)
         compiled = self._compiled.get(key)
         if compiled is None:
             params = self.params_for(plan.program)
@@ -747,6 +1003,7 @@ class GraphSession:
                 params=params,
                 choice=self._resolve_choice(plan.strategy, params),
                 resident=self._resolve_residency(plan.strategy, params),
+                residency=self.resolved_residency(plan.residency),
             )
             self._compiled[key] = compiled
         return compiled
@@ -766,7 +1023,18 @@ class GraphSession:
         raise ValueError(f"unknown strategy {strategy!r}")
 
     def _resolve_residency(self, strategy: str, params: IOParams) -> frozenset:
-        """SPU edge residency: leftover budget pins sub-shards in memory."""
+        """The single source of truth for which sub-shards the memory budget
+        pins in the fast tier.
+
+        SPU: both attribute copies (``2·n_pad·Ba``) come first; the
+        leftover budget pins sub-shards in row-major (schedule) order.
+        DPU/MPU: no edge blocks are pinned — attribute/hub state owns the
+        fast tier (MPU's Q split governs *interval* residency, which stays
+        attribute-side) and every edge block is streamed, exactly as the
+        Table II ``m·Be`` read term assumes. Under ``residency="host"``
+        this set is physically enforced by :class:`_BlockFetcher`; under
+        ``"device"`` it drives the modelled meters only.
+        """
         choice_strategy = (
             self._resolve_choice(strategy, params).strategy
             if strategy == "auto"
@@ -778,18 +1046,34 @@ class GraphSession:
         if resident is not None:
             return resident
         if self.memory_budget is None:
-            resident = frozenset(self.blocks)
+            resident = frozenset(self.block_keys)
         else:
             picked = set()
+            host = self.host_blocks
             leftover = self.memory_budget - 2 * self.graph.n_pad * params.Ba
-            for key in sorted(self.blocks):  # row-major, as the SPU schedule runs
-                cost = self.blocks[key]["e"] * self.Be
+            for key in sorted(host):  # row-major, as the SPU schedule runs
+                cost = host[key]["e"] * self.Be
                 if leftover >= cost:
                     picked.add(key)
                     leftover -= cost
             resident = frozenset(picked)
         self._residency[params.Ba] = resident
         return resident
+
+    def _ensure_pinned(self, resident: frozenset) -> dict[tuple[int, int], dict]:
+        """Device-pin exactly the resident set (host residency only).
+
+        Blocks leaving the resident set are released so successive plans
+        with different strategies/budgets cannot accumulate device copies
+        past the budget; blocks entering it are uploaded once and reused
+        across runs.
+        """
+        for key in [k for k in self._pinned if k not in resident]:
+            del self._pinned[key]
+        for key in sorted(resident):
+            if key in self.block_keys and key not in self._pinned:
+                self._pinned[key] = _device_block(self.host_blocks[key])
+        return self._pinned
 
     def _interval_aux(self, aux: dict, k: int) -> dict:
         isz = self.graph.interval_size
@@ -860,6 +1144,19 @@ class GraphSession:
         )
         active = np.stack([prog.init_active(g, **kw) for kw in kwargs_list])
         aux = prog.make_aux(g, **kwargs_list[0])
+        meters = Meters()
+        pinned = (
+            self._ensure_pinned(compiled.resident)
+            if compiled.residency == "host"
+            else self._pinned
+        )
+        fetcher = _BlockFetcher(self, compiled, meters, pinned)
+        if compiled.choice.strategy == "fused":
+            # The fused path holds the whole edge list on device by design
+            # (its point is HBM residency); report that honestly.
+            meters.peak_device_graph_bytes = max(
+                meters.peak_device_graph_bytes, float(g.m * self.Be)
+            )
         ctx = _RunContext(
             session=self,
             program=prog,
@@ -873,9 +1170,9 @@ class GraphSession:
             valid=(jnp.arange(g.n_pad) < g.n).reshape(g.P, isz),
             tol=jnp.asarray(plan.tol, jnp.float32),
             K=K,
+            fetcher=fetcher,
         )
         iteration = self._strategies[compiled.choice.strategy]
-        meters = Meters()
         converged_at: list[int | None] = [
             0 if not active[m].any() else None for m in range(K)
         ]
@@ -965,22 +1262,34 @@ _SESSION_LRU = IdentityLRU(size=8)
 
 
 def get_session(
-    graph: DSSSGraph, *, memory_budget: int | None = None, Be: int = 8, Bv: int = 4
+    graph: DSSSGraph,
+    *,
+    memory_budget: int | None = None,
+    residency: str = "auto",
+    Be: int = 8,
+    Bv: int = 4,
 ) -> GraphSession:
     """The session for this graph object, staged at most once (LRU of 8).
 
     Only use this for graph objects the caller keeps alive across calls;
     for a throwaway graph, construct :class:`GraphSession` directly so the
-    staged blocks die with it instead of pinning an LRU slot.
+    staged blocks die with it instead of pinning an LRU slot. Variants
+    (budget/residency/byte sizes) share one set of host buffers and one
+    lazily-staged device mirror.
     """
     slot = _SESSION_LRU.get_or_build(
         graph, (), lambda: {"staged": _StagedGraph(graph), "variants": {}}
     )
-    key = (memory_budget, Be, Bv)
+    key = (memory_budget, residency, Be, Bv)
     session = slot["variants"].get(key)
     if session is None:
         session = GraphSession(
-            graph, memory_budget=memory_budget, Be=Be, Bv=Bv, staged=slot["staged"]
+            graph,
+            memory_budget=memory_budget,
+            residency=residency,
+            Be=Be,
+            Bv=Bv,
+            staged=slot["staged"],
         )
         slot["variants"][key] = session
     return session

@@ -23,6 +23,7 @@ __all__ = [
     "attention",
     "prepare_subshard_operands",
     "prepare_from_subshard",
+    "prepare_from_host_block",
     "E_BLK",
 ]
 
@@ -89,6 +90,25 @@ def prepare_from_subshard(ss, dtype, *, gather_op: str, reduce: str):
     return prepare_subshard_operands(
         ss.src_local, ss.hub_inv, ss.weights, dtype,
         gather_op=gather_op, reduce=reduce,
+    )
+
+
+def prepare_from_host_block(blk: dict, dtype, *, gather_op: str, reduce: str):
+    """Stage kernel operands from a padded host block (the session's
+    'shard file' dict from :meth:`repro.core.dsss.DSSSGraph.host_blocks`).
+
+    The host buffers are bucket-padded for the jnp block primitives; the
+    Pallas kernel pads to ``E_BLK`` with its own identity semantics, so we
+    hand it the unpadded ``e``-edge prefix views (zero-copy slices).
+    """
+    e = blk["e"]
+    return prepare_subshard_operands(
+        blk["src_local"][:e],
+        blk["hub_inv"][:e],
+        None if blk["weights"] is None else blk["weights"][:e],
+        dtype,
+        gather_op=gather_op,
+        reduce=reduce,
     )
 
 

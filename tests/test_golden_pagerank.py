@@ -1,0 +1,51 @@
+"""Golden regression: fixed-seed graph, committed PageRank top-20 ranking.
+
+The ranking below was produced by the SPU reference at seed time and is
+committed as a frozen artifact: every strategy (spu/dpu/mpu/auto), and both
+residency modes, must keep reproducing it. A failure here means an engine
+change silently altered results — not just meters.
+
+Graph: ``rmat(10, edge_factor=8, seed=42)`` densified, P=8 → n=795, m=6716.
+30 PageRank iterations, tol=0. The top-21 scores are separated by ≥9.6e-7,
+an order of magnitude above cross-strategy float32 reduction noise, so the
+ranking is strategy-stable.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ExecutionPlan, GraphSession, PageRank, build_dsss
+from repro.graph.generators import rmat
+from repro.graph.preprocess import degree_and_densify
+
+GOLDEN_TOP20 = [
+    0, 1, 232, 122, 2, 444, 16, 32, 4, 8,
+    63, 263, 234, 71, 48, 18, 24, 10, 64, 5,
+]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = rmat(10, edge_factor=8, seed=42)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    g = build_dsss(el, 8)
+    assert (g.n, g.m) == (795, 6716), "generator changed — regenerate golden"
+    return g
+
+
+@pytest.mark.parametrize("strategy", ["spu", "dpu", "mpu", "auto"])
+def test_top20_ranking_frozen(graph, strategy):
+    budget = 2 * graph.n_pad * PageRank().attr_bytes + 3_000  # forces mpu Q<P
+    sess = GraphSession(
+        graph, memory_budget=budget if strategy != "spu" else None
+    )
+    res = sess.run(ExecutionPlan(PageRank(), strategy=strategy, max_iters=30, tol=0.0))
+    top20 = np.argsort(-res.output, kind="stable")[:20]
+    np.testing.assert_array_equal(top20, GOLDEN_TOP20)
+
+
+@pytest.mark.parametrize("residency", ["device", "host"])
+def test_top20_ranking_frozen_across_residency(graph, residency):
+    sess = GraphSession(graph, memory_budget=10_000, residency=residency)
+    res = sess.run(ExecutionPlan(PageRank(), strategy="auto", max_iters=30, tol=0.0))
+    top20 = np.argsort(-res.output, kind="stable")[:20]
+    np.testing.assert_array_equal(top20, GOLDEN_TOP20)

@@ -1,4 +1,11 @@
-"""End-to-end system behaviour tests (the paper's pipeline, whole-system)."""
+"""End-to-end system behaviour tests (the paper's pipeline, whole-system).
+
+Long-running classes carry ``pytest.mark.slow`` individually (not the whole
+module), so the fast lane (``-m "not slow"``) keeps the cheap end-to-end
+coverage — the pipeline, strategy equivalence, HLO analysis and the
+distributed selftest all finish in seconds; only the 8-device dry-run
+compile (~8 min) is deferred to the slow lane.
+"""
 import subprocess
 import sys
 
@@ -118,6 +125,7 @@ ENTRY %main (p: s32[]) -> s32[] {
         )
 
 
+@pytest.mark.slow
 class TestSmallMeshDryrun:
     def test_train_cell_lowers_on_8_devices(self):
         """The dry-run machinery end-to-end on a small forced-device mesh
