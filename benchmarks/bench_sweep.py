@@ -1,0 +1,200 @@
+"""Per-sweep wall time and dispatch count: per_block vs. packed execution.
+
+The paper's headline claim is raw per-iteration speed; the per-block
+executor pays O(P²) host→XLA round-trips per update sweep, so at realistic
+P the run is dispatch-bound. This benchmark measures, for P ∈ {8, 16, 32}
+(device residency, PageRank):
+
+  * per-sweep wall seconds for both execution modes, and
+  * jitted-primitive dispatches per sweep (counted by wrapping the
+    session's jit entry points — the host round-trips the packed path is
+    designed to eliminate; transfers and un-jitted glue ops are not
+    counted).
+
+It verifies bit-identity between the modes on every configuration and
+writes ``BENCH_sweep.json`` (repo root by default) — the start of the perf
+trajectory; CI runs the ``--smoke`` variant per PR so dispatch-count
+regressions are visible in the artifact.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_sweep.py            # full, writes BENCH_sweep.json
+    PYTHONPATH=src python benchmarks/bench_sweep.py --smoke    # tiny graph, CI artifact
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.core import ExecutionPlan, GraphSession, PageRank, build_dsss  # noqa: E402
+from repro.core import session as session_mod  # noqa: E402
+from repro.graph.generators import erdos_renyi  # noqa: E402
+from repro.graph.preprocess import degree_and_densify  # noqa: E402
+
+# The session's jit entry points — one call == one host-scheduled XLA
+# dispatch in the update loop.
+_PER_BLOCK_PRIMITIVES = [
+    "_block_gather_reduce",
+    "_block_to_hub",
+    "_block_from_hub",
+    "_apply_interval",
+    "_pre_iteration",
+]
+
+
+class DispatchCounter:
+    """Counts calls to the session's jitted primitives while active."""
+
+    def __init__(self):
+        self.count = 0
+        self._saved = {}
+
+    def _wrap(self, fn):
+        def counted(*a, **kw):
+            self.count += 1
+            return fn(*a, **kw)
+
+        return counted
+
+    def __enter__(self):
+        for name in _PER_BLOCK_PRIMITIVES:
+            fn = getattr(session_mod, name)
+            self._saved[name] = fn
+            setattr(session_mod, name, self._wrap(fn))
+        real_jits = session_mod._packed_jits
+        self._saved["_packed_jits"] = real_jits
+
+        def counting_jits(donate):
+            sweep, apply_all = real_jits(donate)
+            return self._wrap(sweep), self._wrap(apply_all)
+
+        session_mod._packed_jits = counting_jits
+        return self
+
+    def __exit__(self, *exc):
+        for name, fn in self._saved.items():
+            setattr(session_mod, name, fn)
+        return False
+
+
+def bench_one(session, strategy, execution, iters):
+    plan = ExecutionPlan(
+        PageRank(), strategy=strategy, max_iters=iters, tol=0.0, execution=execution
+    )
+    session.run(plan)  # warmup: staging + jit compilation
+    with DispatchCounter() as counter:
+        res = session.run(plan)
+    assert res.iterations == iters
+    return {
+        "strategy": strategy,
+        "mode": execution,
+        "per_sweep_seconds": res.meters.wall_seconds / res.iterations,
+        "dispatches_per_sweep": counter.count / res.iterations,
+        "mteps": res.meters.mteps(),
+        "attrs": res.attrs,
+        "meters": res.meters,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--p-values", type=int, nargs="+", default=[8, 16, 32])
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--m", type=int, default=120_000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument(
+        "--strategies", nargs="+", default=["spu", "dpu"],
+        choices=["spu", "dpu", "mpu"],
+    )
+    ap.add_argument(
+        "--out",
+        default=str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"),
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny graph, P=[4], 2 sweeps — the CI artifact variant",
+    )
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.p_values, args.n, args.m, args.iters = [4], 400, 2_400, 2
+
+    src, dst = erdos_renyi(args.n, args.m, seed=args.seed)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    report = {
+        "benchmark": "bench_sweep",
+        "backend": jax.default_backend(),
+        "graph": {
+            "generator": "erdos_renyi",
+            "n": el.n,
+            "m": el.m,
+            "seed": args.seed,
+        },
+        "iters_per_run": args.iters,
+        "results": [],
+        "speedups": [],
+    }
+    for P in args.p_values:
+        g = build_dsss(el, P)
+        sess = GraphSession(g, residency="device")
+        packed = g.packed_sweep()
+        print(
+            f"P={P}: {len(sess.block_keys)} sub-shards, tile_edges="
+            f"{packed.tile_edges}, padded_slots={packed.padded_edge_slots} "
+            f"({packed.padded_edge_slots / max(g.m, 1):.2f}x edges)"
+        )
+        for strategy in args.strategies:
+            rows = {}
+            for execution in ("per_block", "packed"):
+                r = bench_one(sess, strategy, execution, args.iters)
+                rows[execution] = r
+                print(
+                    f"  {strategy:>4} {execution:>9}: "
+                    f"{r['per_sweep_seconds'] * 1e3:8.2f} ms/sweep, "
+                    f"{r['dispatches_per_sweep']:7.1f} dispatches/sweep"
+                )
+            np.testing.assert_array_equal(
+                rows["per_block"].pop("attrs"), rows["packed"].pop("attrs")
+            )
+            m_pb = dataclasses.asdict(rows["per_block"].pop("meters"))
+            m_pk = dataclasses.asdict(rows["packed"].pop("meters"))
+            m_pb.pop("wall_seconds"), m_pk.pop("wall_seconds")
+            assert m_pb == m_pk, "execution modes must meter identically"
+            speedup = (
+                rows["per_block"]["per_sweep_seconds"]
+                / rows["packed"]["per_sweep_seconds"]
+            )
+            dispatch_ratio = (
+                rows["per_block"]["dispatches_per_sweep"]
+                / rows["packed"]["dispatches_per_sweep"]
+            )
+            print(
+                f"  {strategy:>4}   speedup: {speedup:5.1f}x wall, "
+                f"{dispatch_ratio:5.1f}x fewer dispatches "
+                f"(bit-identical, meters identical)"
+            )
+            for execution in ("per_block", "packed"):
+                report["results"].append({"P": P, **rows[execution]})
+            report["speedups"].append(
+                {
+                    "P": P,
+                    "strategy": strategy,
+                    "wall_speedup": speedup,
+                    "dispatch_ratio": dispatch_ratio,
+                }
+            )
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

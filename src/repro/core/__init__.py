@@ -11,7 +11,7 @@
 - :mod:`repro.core.baselines` — TurboGraph-like + GraphChi-like baselines (§III-C)
 - :mod:`repro.core.distributed` — shard_map 2-D partitioned multi-pod engine
 """
-from repro.core.dsss import DSSSGraph, SubShard, build_dsss
+from repro.core.dsss import DSSSGraph, PackedSweep, SubShard, build_dsss
 from repro.core.plan import ExecutionPlan
 from repro.core.session import (
     BatchResult,
@@ -56,6 +56,7 @@ from repro.core.algorithms import (
 
 __all__ = [
     "DSSSGraph",
+    "PackedSweep",
     "SubShard",
     "build_dsss",
     "GraphSession",

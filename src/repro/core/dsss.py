@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.graph.preprocess import EdgeList
 
-__all__ = ["DSSSGraph", "build_dsss", "SubShard", "next_bucket"]
+__all__ = ["DSSSGraph", "PackedSweep", "build_dsss", "SubShard", "next_bucket"]
 
 
 def next_bucket(e: int, minimum: int = 8) -> int:
@@ -60,6 +60,66 @@ class SubShard:
     @property
     def num_unique_dst(self) -> int:
         return int(self.hub_dst.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedSweep:
+    """Tile-packed layout of one full update sweep (every non-empty sub-shard).
+
+    All sub-shards are stacked, in row-major ``(i, j)`` order, into uniform
+    ``(num_tiles, tile_edges)`` arrays — one tile per sub-shard, every tile
+    padded to the size of the largest sub-shard bucket. Uniformity is what
+    lets the executor run the *whole* sweep as a single ``jax.lax.scan``
+    (or a Pallas grid) over the tile axis: one XLA dispatch per sweep
+    instead of one host round-trip per sub-shard.
+
+    Row-major tile order is load-bearing for bit-identity with the
+    per-block executor: every destination interval's accumulator folds its
+    sub-shard contributions in ascending source-interval order, which is
+    exactly the fold order of the SPU schedule *and* of the DPU/MPU
+    two-phase schedules (their per-``j`` order is deferred-direct blocks
+    ``i < Q`` ascending, then hub folds ``i ≥ Q`` ascending — ``i``
+    ascending overall, and a sub-shard's hub partial is bitwise equal to
+    its direct segment-reduce because destination-sorting gives both the
+    same per-destination edge fold order).
+
+    One tile per sub-shard (rather than fixed-size chunks) is what keeps
+    float ``sum`` programs bit-identical: splitting a destination's edge
+    run across tiles would re-associate its partial sums. The cost is
+    padding to the *largest* bucket — ``num_tiles · tile_edges`` edge
+    slots against ``Σ bucket_e``; balanced partitions (the paper's
+    equal-sized intervals) keep the ratio small, heavy skew trades memory
+    for the dispatch win.
+
+    ``hub_inv``/``base_slot``/``u`` carry the hub-window metadata (per-edge
+    local hub slots, the global hub-slot base and unique-destination count
+    of each tile). The compiled scan reduces over ``dst_local`` and the
+    I/O meters are driven from the metadata; the hub fields are staged so
+    a Pallas-grid sweep (the windowed-partial formulation of
+    ``kernels/dsss_spmv.py``) can consume the same layout — no kernel
+    consumer exists yet.
+    """
+
+    keys: tuple  # ((i, j), ...) row-major over non-empty sub-shards
+    tile_edges: int  # T: padded edge capacity of every tile
+    src_local: np.ndarray  # int32 (NT, T) source offsets within interval i
+    dst_local: np.ndarray  # int32 (NT, T) destination offsets within interval j
+    hub_inv: np.ndarray  # int32 (NT, T) edge -> hub slot, local to the tile
+    weights: np.ndarray | None  # float32 (NT, T) or None
+    e_valid: np.ndarray  # int32 (NT,) real edge count per tile
+    src_interval: np.ndarray  # int32 (NT,) i of each tile
+    dst_interval: np.ndarray  # int32 (NT,) j of each tile
+    base_slot: np.ndarray  # int32 (NT,) global hub-slot base (hub_offsets[i, j])
+    u: np.ndarray  # int32 (NT,) unique destinations (hub slots) per tile
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.e_valid.shape[0])
+
+    @property
+    def padded_edge_slots(self) -> int:
+        """Total edge slots the packing allocates (``num_tiles·tile_edges``)."""
+        return self.num_tiles * self.tile_edges
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +217,59 @@ class DSSSGraph:
                 if blk is not None:
                     blocks[(i, j)] = blk
         return blocks
+
+    def packed_sweep(
+        self, host_blocks: dict[tuple[int, int], dict] | None = None
+    ) -> PackedSweep:
+        """Tile-pack every non-empty sub-shard for the compiled sweep path.
+
+        ``host_blocks`` (from :meth:`host_blocks`) can be passed to reuse
+        already-staged padded buffers; otherwise they are built here. Pure
+        numpy — the device upload happens once in
+        ``repro.core.session._StagedGraph``.
+        """
+        if host_blocks is None:
+            host_blocks = self.host_blocks()
+        keys = tuple(sorted(host_blocks))  # row-major (i, j) — see PackedSweep
+        nt = len(keys)
+        T = max(
+            (len(host_blocks[k]["src_local"]) for k in keys), default=8
+        )
+        src_local = np.zeros((nt, T), np.int32)
+        dst_local = np.zeros((nt, T), np.int32)
+        hub_inv = np.zeros((nt, T), np.int32)
+        weights = None if self.weights is None else np.zeros((nt, T), np.float32)
+        e_valid = np.zeros(nt, np.int32)
+        src_iv = np.zeros(nt, np.int32)
+        dst_iv = np.zeros(nt, np.int32)
+        base_slot = np.zeros(nt, np.int32)
+        u = np.zeros(nt, np.int32)
+        for t, (i, j) in enumerate(keys):
+            blk = host_blocks[(i, j)]
+            b = len(blk["src_local"])  # bucket size of this sub-shard
+            src_local[t, :b] = blk["src_local"]
+            dst_local[t, :b] = blk["dst_local"]
+            hub_inv[t, :b] = blk["hub_inv"]
+            if weights is not None:
+                weights[t, :b] = blk["weights"]
+            e_valid[t] = blk["e"]
+            src_iv[t] = i
+            dst_iv[t] = j
+            base_slot[t] = self.hub_offsets[i, j]
+            u[t] = blk["u"]
+        return PackedSweep(
+            keys=keys,
+            tile_edges=T,
+            src_local=src_local,
+            dst_local=dst_local,
+            hub_inv=hub_inv,
+            weights=weights,
+            e_valid=e_valid,
+            src_interval=src_iv,
+            dst_interval=dst_iv,
+            base_slot=base_slot,
+            u=u,
+        )
 
     def total_edge_bytes(self, Be: int) -> int:
         """Model bytes of the whole edge topology (``m·Be``) — the quantity

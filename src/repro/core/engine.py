@@ -40,6 +40,10 @@ class NXGraphEngine:
         modelled (device-staged blocks, seed behaviour) or enforced by
         host-streamed execution. See :class:`GraphSession`. ``None``
         defaults to "auto" (host streaming iff a budget is set).
+      execution: "per_block" | "packed" | "auto" — host-scheduled
+        dispatch-per-sub-shard vs. one compiled scan per update sweep.
+        See :class:`GraphSession`. ``None`` defaults to "auto" ("packed"
+        wherever it applies); results and meters are identical.
       Be: bytes per edge in the I/O model (8 = two int32 ids).
       Bv: bytes per vertex id.
       session: share an existing staged session instead of staging a new
@@ -54,6 +58,7 @@ class NXGraphEngine:
         strategy: str = "auto",
         memory_budget: int | None = None,
         residency: str | None = None,
+        execution: str | None = None,
         Be: int | None = None,
         Bv: int | None = None,
         session: GraphSession | None = None,
@@ -103,10 +108,16 @@ class NXGraphEngine:
         self.program = program
         self.memory_budget = session.memory_budget
         self._strategy = strategy
-        compiled = session.compile(ExecutionPlan(program, strategy=strategy))
+        # Per-plan override: a shared session keeps its own default and
+        # other engines on the same session are unaffected.
+        self._execution = execution
+        compiled = session.compile(
+            ExecutionPlan(program, strategy=strategy, execution=execution)
+        )
         self.params = compiled.params
         self.choice = compiled.choice
         self.resident = compiled.resident
+        self.execution = compiled.execution
 
     # -- staged state (delegated to the shared session) ----------------------
     @property
@@ -137,6 +148,7 @@ class NXGraphEngine:
             strategy=self._strategy,
             max_iters=max_iters,
             tol=tol,
+            execution=self._execution,
             program_kwargs=program_kwargs,
         )
         return self.session.run(plan)

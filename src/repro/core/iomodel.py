@@ -8,7 +8,12 @@ These formulas drive two things:
    B_M, P)`` pick SPU / MPU(Q) / DPU by modelled total I/O.
 2. The **property-test oracle**: the engine's byte meters must reproduce
    these closed forms (tests/test_iomodel_property.py), which is the
-   paper-faithfulness proof of the I/O analysis.
+   paper-faithfulness proof of the I/O analysis. The meters are charged
+   per *schedule event*, not per jit dispatch, so they are independent of
+   the execution mode: the per-block executor charges them at the block
+   fetcher and the packed compiled-sweep executor recomputes the same
+   charges from the packed tile metadata — tests/test_packed_sweep.py
+   pins field-for-field equality between the two.
 
 On TPU the "slow tier" is HBM (single chip) or remote chips (pod); the same
 formulas apply with ``B_M`` = fast-tier budget (VMEM / local HBM).

@@ -81,6 +81,14 @@ class ExecutionPlan:
         ``None`` (inherit), "device", "host" or "auto" (host iff the
         session has a memory budget). See
         :class:`repro.core.session.GraphSession` for the semantics.
+      execution: per-plan override of the session's execution axis —
+        ``None`` (inherit), "per_block", "packed" or "auto". "per_block"
+        is the host-scheduled legacy path (one jit dispatch per
+        sub-shard); "packed" runs each update sweep as one compiled scan
+        over the tile-packed layout (device residency + SPU/DPU/MPU only
+        — it downgrades to "per_block" otherwise); "auto" picks "packed"
+        whenever it applies. Results and modelled meters are identical
+        either way. See :class:`repro.core.session.GraphSession`.
       program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are
         frozen by content; pass a mapping, it is normalized to a sorted
         tuple in ``__post_init__``.
@@ -91,6 +99,7 @@ class ExecutionPlan:
     max_iters: int = 200
     tol: float = 1e-10
     residency: str | None = None
+    execution: str | None = None
     program_kwargs: Any = ()
 
     def __post_init__(self):
@@ -98,6 +107,11 @@ class ExecutionPlan:
             raise ValueError(
                 "residency must be None, 'device', 'host' or 'auto', "
                 f"got {self.residency!r}"
+            )
+        if self.execution not in (None, "per_block", "packed", "auto"):
+            raise ValueError(
+                "execution must be None, 'per_block', 'packed' or 'auto', "
+                f"got {self.execution!r}"
             )
         kw = self.program_kwargs
         if isinstance(kw, Mapping):
@@ -120,4 +134,11 @@ class ExecutionPlan:
 
     def batch_key(self) -> tuple:
         """Plans sharing a batch_key can fuse into one streamed pass."""
-        return (self.program, self.strategy, self.max_iters, self.tol, self.residency)
+        return (
+            self.program,
+            self.strategy,
+            self.max_iters,
+            self.tol,
+            self.residency,
+            self.execution,
+        )

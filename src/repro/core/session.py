@@ -32,6 +32,22 @@ set — the blocks the ``memory_budget`` pins in the fast tier — computed by
 :class:`_BlockFetcher`. Graphs larger than the fast tier run in "host" mode
 with device-held topology bounded by the budget (plus a two-block streaming
 ring), bit-identical to the device-resident run.
+
+Compiled sweeps (the ``execution`` axis): the paper's headline number is
+raw per-iteration speed — its DSSS structure exists so the inner loop is a
+streamlined, conflict-free pass over sorted edge blocks. The per-block
+executor re-enters Python for every sub-shard (O(P²) jit dispatches per
+sweep); with ``execution="packed"`` the session instead stages the
+:class:`repro.core.dsss.PackedSweep` tile layout once and runs the entire
+gather-reduce phase of a sweep as **one** ``jax.lax.scan`` over the tile
+axis, one batched accumulator init, and one batched apply — ~4 dispatches
+per sweep regardless of P. Results are bit-identical to the per-block path
+for all of SPU/DPU/MPU (see :class:`~repro.core.dsss.PackedSweep` for why
+row-major tile order reproduces every schedule's fold order exactly), and
+the modelled byte/edge meters are computed from the packed metadata to be
+field-for-field identical. Packed execution applies under device residency
+only; host-streamed residency keeps the per-block fetcher path (streaming
+is inherently per-block — that is where the bytes move).
 """
 from __future__ import annotations
 
@@ -195,6 +211,10 @@ class CompiledPlan:
     choice: StrategyChoice
     resident: frozenset
     residency: str = "device"
+    # Resolved execution mode: "packed" iff the compiled sweep path will
+    # actually run (device residency + SPU/DPU/MPU schedule), else
+    # "per_block". Never "auto".
+    execution: str = "per_block"
 
 
 # ---------------------------------------------------------------------------
@@ -400,6 +420,151 @@ def _fused_iteration(
         )
 
     return jax.vmap(one)(attrs)
+
+
+# ---------------------------------------------------------------------------
+# Compiled (tile-packed) sweep primitives. One jax.lax.scan over the packed
+# tile axis replaces the per-sub-shard dispatch loop: the whole gather-reduce
+# phase of an update sweep is a single XLA program. Bit-identity with the
+# per-block path holds because (a) tiles are whole sub-shards (no float
+# re-association across tile splits), (b) row-major tile order folds each
+# destination interval in ascending source-interval order — the fold order
+# of SPU and of the DPU/MPU two-phase schedules alike — and (c) masked-off
+# tiles (inactive rows, padding) contribute exact ⊕-identities.
+# ---------------------------------------------------------------------------
+def _stack_interval_aux(aux: dict, P: int, isz: int) -> dict:
+    """Reshape 1-D (n_pad,) aux leaves to (P, isz) interval rows in-trace."""
+    return {
+        k: (v.reshape(P, isz) if getattr(v, "ndim", 0) == 1 else v)
+        for k, v in aux.items()
+    }
+
+
+def _packed_sweep_impl(
+    program: VertexProgram,
+    attrs: jnp.ndarray,  # (K, P, isz) previous attributes (read-only)
+    acc: jnp.ndarray,  # (K, P, isz) running ⊕ accumulators (donatable)
+    aux: dict,  # run-constant aux, (n_pad,) or scalar leaves
+    tiles: dict,  # PackedSweep device arrays, (NT, ...) leaves
+    row_active: jnp.ndarray,  # (P,) bool — sweep's active source intervals
+    has_weights: bool,
+):
+    """The entire gather-reduce phase of one update sweep, compiled once.
+
+    Scans the packed tiles in row-major sub-shard order; each step gathers
+    one tile's source interval, segment-reduces over its destinations and
+    folds the result into that tile's destination-interval accumulator.
+    Tiles whose source interval is inactive this sweep (monotone activity
+    tracking) get ``e_valid = 0``, so they fold exact identities — the
+    compiled equivalent of the per-block schedule skipping the row.
+    """
+    K, P, isz = attrs.shape
+    aux2 = _stack_interval_aux(aux, P, isz)
+
+    def body(carry, tile):
+        si = tile["src_iv"]
+        di = tile["dst_iv"]
+        sl = tile["src_local"]
+        dl = tile["dst_local"]
+        w = tile["weights"] if has_weights else None
+        ev = jnp.where(row_active[si], tile["e_valid"], 0)
+        prev = jax.lax.dynamic_index_in_dim(attrs, si, axis=1, keepdims=False)
+        s_aux = {
+            k: (
+                jax.lax.dynamic_index_in_dim(v, si, axis=0, keepdims=False)[sl]
+                if getattr(v, "ndim", 0) == 2
+                else v
+            )
+            for k, v in aux2.items()
+        }
+        d_aux = (
+            {
+                k: (
+                    jax.lax.dynamic_index_in_dim(v, di, axis=0, keepdims=False)[dl]
+                    if getattr(v, "ndim", 0) == 2
+                    else v
+                )
+                for k, v in aux2.items()
+            }
+            if program.needs_dst_aux
+            else None
+        )
+        acc_j = jax.lax.dynamic_index_in_dim(carry, di, axis=1, keepdims=False)
+
+        def one(pv, aj):
+            vals = pv[sl]
+            contrib = program.gather(vals, w, s_aux, d_aux)
+            ident = reduce_identity(program.reduce, contrib.dtype)
+            mask = jnp.arange(contrib.shape[0]) < ev
+            contrib = jnp.where(mask, contrib, ident)
+            if program.reduce == "sum":
+                red = jax.ops.segment_sum(contrib, dl, num_segments=isz)
+                return jnp.add(aj, red.astype(aj.dtype))
+            if program.reduce == "min":
+                red = jax.ops.segment_min(contrib, dl, num_segments=isz)
+                return jnp.minimum(aj, red.astype(aj.dtype))
+            red = jax.ops.segment_max(contrib, dl, num_segments=isz)
+            return jnp.maximum(aj, red.astype(aj.dtype))
+
+        new_j = jax.vmap(one)(prev, acc_j)
+        return jax.lax.dynamic_update_index_in_dim(carry, new_j, di, axis=1), None
+
+    acc, _ = jax.lax.scan(body, acc, tiles)
+    return acc
+
+
+def _apply_all_impl(
+    program: VertexProgram,
+    old: jnp.ndarray,  # (K, P, isz)
+    acc: jnp.ndarray,  # (K, P, isz) (donatable)
+    aux: dict,
+    globals_: dict,  # (K,)-leading leaves from _pre_iteration
+    valid: jnp.ndarray,  # (P, isz) bool
+    tol: jnp.ndarray,
+):
+    """All P interval applies of a sweep in one batched dispatch.
+
+    Elementwise identical to P ``_apply_interval`` calls. Untouched
+    monotone intervals carry identity accumulators, so their apply is an
+    exact no-op and ``changed`` is False — matching the per-block skip.
+    """
+    K, P, isz = old.shape
+    aux2 = _stack_interval_aux(aux, P, isz)
+    aux_axes = {k: (0 if getattr(v, "ndim", 0) == 2 else None) for k, v in aux2.items()}
+
+    def per_interval(o, a, auxv, v, gl):
+        new = program.apply(o, a, auxv, gl)
+        new = jnp.where(v, new, o)
+        changed = jnp.any(program.changed(o, new, tol) & v)
+        return new, changed
+
+    def per_query(o, a, gl):
+        return jax.vmap(per_interval, in_axes=(0, 0, aux_axes, 0, None))(
+            o, a, aux2, valid, gl
+        )
+
+    return jax.vmap(per_query, in_axes=(0, 0, 0))(old, acc, globals_)
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_jits(donate: bool):
+    """The two packed-sweep executables, with accumulator donation off-CPU.
+
+    Donation lets XLA reuse the ⊕-accumulator buffer across the scan and
+    the apply (the paper's in-place attribute update); the CPU backend
+    does not support donation, so it is keyed off to avoid per-compile
+    warnings there.
+    """
+    donate_kw = {"donate_argnums": (2,)} if donate else {}
+    sweep = jax.jit(
+        _packed_sweep_impl,
+        static_argnames=("program", "has_weights"),
+        **donate_kw,
+    )
+    apply_all = jax.jit(
+        _apply_all_impl, static_argnames=("program",), **donate_kw
+    )
+    return sweep, apply_all
 
 
 # ---------------------------------------------------------------------------
@@ -655,6 +820,133 @@ def _iteration_fused(ctx: _RunContext, attrs, active, meters: Meters):
 
 
 # ---------------------------------------------------------------------------
+# Packed execution: the same SPU/DPU/MPU schedules, one compiled sweep.
+# The numeric pass is strategy-independent (every schedule folds each
+# destination interval in ascending source-interval order — see
+# repro.core.dsss.PackedSweep); what distinguishes the strategies is their
+# slow-tier traffic, which is charged here from the packed metadata with
+# exactly the control flow of the per-block bodies.
+# ---------------------------------------------------------------------------
+def _charge_packed_spu(ctx: _RunContext, rows: list[int], meters: Meters) -> None:
+    """Meter mutations of ``_iteration_spu``, from metadata alone."""
+    sess = ctx.session
+    g = sess.graph
+    host = sess.host_blocks
+    Be = sess.Be
+    for i in rows:
+        for j in range(g.P):
+            if (i, j) not in ctx.block_keys:
+                continue
+            e = host[(i, j)]["e"]
+            if (i, j) not in ctx.resident:
+                meters.bytes_read_edges += e * Be
+            meters.blocks_processed += 1
+            meters.edges_processed += e
+    meters.blocks_skipped += (g.P - len(rows)) * g.P
+
+
+def _charge_packed_two_phase(
+    ctx: _RunContext, rows: list[int], meters: Meters, Q: int
+) -> None:
+    """Meter mutations of ``_iteration_two_phase``, from metadata alone.
+
+    Mirrors the two-phase control flow line for line — phase-1 direct and
+    ToHub charges, deferred phase-2 direct blocks, hub folds, interval
+    load/saves and the documented monotone cold-interval re-read — so the
+    packed run's Meters are field-for-field identical to the per-block
+    run's.
+    """
+    sess, prog = ctx.session, ctx.program
+    g = sess.graph
+    host = sess.host_blocks
+    Be = sess.Be
+    K = ctx.K
+    iv_bytes = g.interval_size * ctx.params.Ba * K
+    hub_bytes = ctx.params.Ba + sess.Bv
+    touched = [False] * g.P
+    hub_u: dict[tuple[int, int], int] = {}
+    # Phase 1 (row-major): direct blocks (j < Q) and ToHub blocks (i >= Q,
+    # j >= Q); cold source intervals load once.
+    for i in rows:
+        if i >= Q:
+            meters.bytes_read_intervals += iv_bytes
+        for j in range(g.P):
+            if (i, j) not in ctx.block_keys or not (j < Q or i >= Q):
+                continue
+            e = host[(i, j)]["e"]
+            if (i, j) not in ctx.resident:
+                meters.bytes_read_edges += e * Be
+            if j >= Q:
+                u = host[(i, j)]["u"]
+                hub_u[(i, j)] = u
+                meters.bytes_written_hubs += u * hub_bytes * K
+            touched[j] = True
+            meters.blocks_processed += 1
+            meters.edges_processed += e
+    meters.blocks_skipped += (g.P - len(rows)) * g.P
+    # Phase 2 (column-major): deferred (i < Q, j >= Q) direct blocks, hub
+    # folds, then the cold-interval apply traffic.
+    for j in range(g.P):
+        if j >= Q:
+            for i in rows:
+                if i < Q and (i, j) in ctx.block_keys:
+                    e = host[(i, j)]["e"]
+                    if (i, j) not in ctx.resident:
+                        meters.bytes_read_edges += e * Be
+                    meters.blocks_processed += 1
+                    meters.edges_processed += e
+                    touched[j] = True
+            for i in rows:
+                u = hub_u.get((i, j))
+                if u is not None:
+                    meters.bytes_read_hubs += u * hub_bytes * K
+        if not touched[j] and prog.monotone:
+            continue
+        if j >= Q and prog.monotone:
+            # Monotone apply re-reads the cold interval's previous
+            # attributes (documented deviation, as in the per-block path).
+            meters.bytes_read_intervals += iv_bytes
+        if j >= Q:
+            meters.bytes_written_intervals += iv_bytes
+    return None
+
+
+def _iteration_packed(ctx: _RunContext, attrs, active, meters: Meters):
+    """One update sweep as ~4 XLA dispatches, for any of SPU/DPU/MPU.
+
+    pre-iteration globals → one accumulator init → one scan over the
+    packed tiles → one batched apply. The per-strategy slow-tier meters
+    are charged from the packed metadata before the compiled pass runs.
+    """
+    sess, prog = ctx.session, ctx.program
+    g = sess.graph
+    K = ctx.K
+    strategy = ctx.choice.strategy
+    rows = _rows_to_process(ctx, active)
+    if strategy == "spu":
+        _charge_packed_spu(ctx, rows, meters)
+    else:
+        _charge_packed_two_phase(
+            ctx, rows, meters, Q=0 if strategy == "dpu" else ctx.choice.Q
+        )
+    tiles = sess._staged.packed_tiles()
+    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    ident = reduce_identity(prog.reduce, prog.dtype)
+    acc = jnp.full((K, g.P, g.interval_size), ident, prog.dtype)
+    row_mask = np.zeros(g.P, dtype=bool)
+    row_mask[rows] = True
+    sweep, apply_all = _packed_jits(jax.default_backend() != "cpu")
+    acc = sweep(
+        prog, attrs, acc, ctx.aux, tiles, jnp.asarray(row_mask),
+        has_weights=sess.has_weights,
+    )
+    new, changed = apply_all(
+        prog, attrs, acc, ctx.aux, globals_, ctx.valid, ctx.tol
+    )
+    return new, np.asarray(changed)
+
+
+# ---------------------------------------------------------------------------
 # The session.
 # ---------------------------------------------------------------------------
 def _device_block(host: dict) -> dict:
@@ -703,6 +995,7 @@ class _StagedGraph:
         self.host_blocks = graph.host_blocks()
         self.block_keys = frozenset(self.host_blocks)
         self._device_blocks: dict[tuple[int, int], dict] | None = None
+        self._packed_tiles: dict | None = None
         self.fused: dict | None = None
         self.kernel_operands: dict[tuple, tuple] = {}
 
@@ -713,6 +1006,30 @@ class _StagedGraph:
                 key: _device_block(host) for key, host in self.host_blocks.items()
             }
         return self._device_blocks
+
+    def packed_tiles(self) -> dict:
+        """Device arrays of the tile-packed sweep layout, staged once.
+
+        The scan carries exactly these leaves per tile (src/dst offsets,
+        weights when present, the valid edge count and the (i, j) interval
+        ids); hub-window metadata (``base_slot``/``u``) stays host-side on
+        the :class:`~repro.core.dsss.PackedSweep` for meter accounting and
+        kernel-path consumers. Packed mode never stages the per-block
+        device mirror — these arrays *are* the device topology.
+        """
+        if self._packed_tiles is None:
+            packed = self.graph.packed_sweep(self.host_blocks)
+            tiles = {
+                "src_local": jnp.asarray(packed.src_local),
+                "dst_local": jnp.asarray(packed.dst_local),
+                "e_valid": jnp.asarray(packed.e_valid),
+                "src_iv": jnp.asarray(packed.src_interval),
+                "dst_iv": jnp.asarray(packed.dst_interval),
+            }
+            if packed.weights is not None:
+                tiles["weights"] = jnp.asarray(packed.weights)
+            self._packed_tiles = tiles
+        return self._packed_tiles
 
 
 class _BlockFetcher:
@@ -848,6 +1165,22 @@ class GraphSession:
           ``"device"`` otherwise (an unlimited budget pins everything,
           making the two modes identical).
 
+      execution: how the SPU/DPU/MPU schedules drive the device.
+
+        * ``"per_block"`` — the host-scheduled legacy path: one jit
+          dispatch per sub-shard through :class:`_BlockFetcher` (O(P²)
+          host round-trips per sweep). Always used for host-streamed
+          residency and for custom/fused strategies.
+        * ``"packed"`` — the compiled sweep path: the
+          :class:`repro.core.dsss.PackedSweep` tile layout is staged once
+          and every update sweep runs as one ``lax.scan`` + one batched
+          apply (~4 dispatches per sweep, independent of P). Bit-identical
+          results and field-for-field identical meters. Applies under
+          device residency with an SPU/DPU/MPU schedule; anything else
+          downgrades to ``"per_block"`` (streaming is inherently
+          per-block; custom schedules own their own loop).
+        * ``"auto"`` (default) — ``"packed"`` wherever it applies.
+
       Be: bytes per edge in the I/O model (8 = two int32 ids; +4 is added
         automatically for weighted graphs).
       Bv: bytes per vertex id.
@@ -872,6 +1205,7 @@ class GraphSession:
         *,
         memory_budget: int | None = None,
         residency: str = "auto",
+        execution: str = "auto",
         Be: int = 8,
         Bv: int = 4,
         staged: _StagedGraph | None = None,
@@ -880,9 +1214,15 @@ class GraphSession:
             raise ValueError(
                 f"residency must be 'device', 'host' or 'auto', got {residency!r}"
             )
+        if execution not in ("per_block", "packed", "auto"):
+            raise ValueError(
+                "execution must be 'per_block', 'packed' or 'auto', "
+                f"got {execution!r}"
+            )
         self.graph = graph
         self.memory_budget = memory_budget
         self.residency = residency
+        self.execution = execution
         self.has_weights = graph.weights is not None
         self.Be = Be + (4 if self.has_weights else 0)
         self.Bv = Bv
@@ -922,6 +1262,28 @@ class GraphSession:
         mode = override or self.residency
         if mode == "auto":
             mode = "host" if self.memory_budget is not None else "device"
+        return mode
+
+    def resolved_execution(
+        self,
+        strategy: str,
+        residency: str,
+        override: str | None = None,
+    ) -> str:
+        """Resolve the execution axis to 'per_block' or 'packed'.
+
+        ``strategy`` must already be resolved (a schedule name, not
+        "auto") and ``residency`` must be 'device' or 'host'. The packed
+        path applies only to the native block schedules under device
+        residency; every other combination — host streaming, the fused
+        fast path, custom registered schedules — runs per-block, even
+        when "packed" was requested explicitly (a forgiving downgrade,
+        like residency="auto": results and meters are identical).
+        """
+        mode = override or self.execution
+        applies = residency == "device" and strategy in ("spu", "dpu", "mpu")
+        if mode == "auto" or (mode == "packed" and not applies):
+            mode = "packed" if applies else "per_block"
         return mode
 
     # -- budget accounting ---------------------------------------------------
@@ -994,16 +1356,23 @@ class GraphSession:
         )
 
     def compile(self, plan: ExecutionPlan) -> CompiledPlan:
-        """Resolve a plan's strategy + residency against this session (cached)."""
-        key = (plan.strategy, plan.program.attr_bytes, plan.residency)
+        """Resolve a plan's strategy + residency + execution (cached)."""
+        key = (
+            plan.strategy, plan.program.attr_bytes, plan.residency, plan.execution
+        )
         compiled = self._compiled.get(key)
         if compiled is None:
             params = self.params_for(plan.program)
+            choice = self._resolve_choice(plan.strategy, params)
+            residency = self.resolved_residency(plan.residency)
             compiled = CompiledPlan(
                 params=params,
-                choice=self._resolve_choice(plan.strategy, params),
+                choice=choice,
                 resident=self._resolve_residency(plan.strategy, params),
-                residency=self.resolved_residency(plan.residency),
+                residency=residency,
+                execution=self.resolved_execution(
+                    choice.strategy, residency, plan.execution
+                ),
             )
             self._compiled[key] = compiled
         return compiled
@@ -1172,7 +1541,10 @@ class GraphSession:
             K=K,
             fetcher=fetcher,
         )
-        iteration = self._strategies[compiled.choice.strategy]
+        if compiled.execution == "packed":
+            iteration = _iteration_packed
+        else:
+            iteration = self._strategies[compiled.choice.strategy]
         converged_at: list[int | None] = [
             0 if not active[m].any() else None for m in range(K)
         ]
@@ -1266,6 +1638,7 @@ def get_session(
     *,
     memory_budget: int | None = None,
     residency: str = "auto",
+    execution: str = "auto",
     Be: int = 8,
     Bv: int = 4,
 ) -> GraphSession:
@@ -1274,19 +1647,20 @@ def get_session(
     Only use this for graph objects the caller keeps alive across calls;
     for a throwaway graph, construct :class:`GraphSession` directly so the
     staged blocks die with it instead of pinning an LRU slot. Variants
-    (budget/residency/byte sizes) share one set of host buffers and one
-    lazily-staged device mirror.
+    (budget/residency/execution/byte sizes) share one set of host buffers,
+    one lazily-staged device mirror and one packed tile layout.
     """
     slot = _SESSION_LRU.get_or_build(
         graph, (), lambda: {"staged": _StagedGraph(graph), "variants": {}}
     )
-    key = (memory_budget, residency, Be, Bv)
+    key = (memory_budget, residency, execution, Be, Bv)
     session = slot["variants"].get(key)
     if session is None:
         session = GraphSession(
             graph,
             memory_budget=memory_budget,
             residency=residency,
+            execution=execution,
             Be=Be,
             Bv=Bv,
             staged=slot["staged"],

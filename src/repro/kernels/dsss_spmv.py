@@ -36,9 +36,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dsss_spmv_block_partials", "E_BLK"]
+__all__ = ["dsss_spmv_block_partials", "E_BLK", "MINMAX_CHUNK"]
 
 E_BLK = 512  # edges per block; also the hub-slot window width W
+
+# min/max reduce chunking: the windowed compare materializes
+# (MINMAX_CHUNK, W) values at a time instead of (E_BLK, W) — peak VMEM for
+# the compare is MINMAX_CHUNK·E_BLK·4 bytes (256 KB at 128×512 fp32) and is
+# independent of E_BLK growth along the edge axis. min/max re-association
+# is exact, so chunking cannot change results.
+MINMAX_CHUNK = 128
+assert E_BLK % MINMAX_CHUNK == 0, "chunked min/max reduce needs E_BLK % chunk == 0"
 
 
 def _identity(reduce: str, dtype):
@@ -69,20 +77,41 @@ def _kernel(
         contrib = (vals + w).astype(contrib_dtype)
     slots = hub_inv_ref[...] - base_ref[0]
     W = out_ref.shape[1]
-    # One-hot over the slot window. Destination-sorted edges guarantee
-    # 0 <= slots < W for all valid edges; identity-padded edges may fall
-    # anywhere and contribute the identity.
-    oh = slots[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
     if reduce == "sum":
+        # One-hot over the slot window. Destination-sorted edges guarantee
+        # 0 <= slots < W for all valid edges; identity-padded edges may
+        # fall anywhere and contribute the identity.
         # MXU path: (1, E) · (E, W).
+        oh = slots[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
         out = jnp.dot(
             contrib[None, :], oh.astype(contrib_dtype), preferred_element_type=jnp.float32
         ).astype(contrib_dtype)
         out_ref[...] = out
     else:
+        # Windowed segmented reduce for min/max, in chunks of MINMAX_CHUNK
+        # edges: the full masked one-hot would materialize O(E_BLK · W)
+        # values per block, which scales quadratically with the edge-block
+        # size and blows VMEM on BFS/SSSP tiles; the chunked compare keeps
+        # peak live values at O(MINMAX_CHUNK · W) while staying VPU-shaped
+        # (min/max re-association is exact, so results are unchanged).
         ident = _identity(reduce, contrib_dtype)
-        masked = jnp.where(oh, contrib[:, None], ident)
-        red = jnp.min(masked, axis=0) if reduce == "min" else jnp.max(masked, axis=0)
+        iota_w = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+        num_chunks = slots.shape[0] // MINMAX_CHUNK
+
+        def chunk(c, red):
+            sl = jax.lax.dynamic_slice_in_dim(slots, c * MINMAX_CHUNK, MINMAX_CHUNK)
+            cb = jax.lax.dynamic_slice_in_dim(contrib, c * MINMAX_CHUNK, MINMAX_CHUNK)
+            masked = jnp.where(sl[:, None] == iota_w, cb[:, None], ident)
+            part = (
+                jnp.min(masked, axis=0) if reduce == "min" else jnp.max(masked, axis=0)
+            )
+            return (
+                jnp.minimum(red, part) if reduce == "min" else jnp.maximum(red, part)
+            )
+
+        red = jax.lax.fori_loop(
+            0, num_chunks, chunk, jnp.full((W,), ident, contrib_dtype)
+        )
         out_ref[...] = red[None, :]
 
 

@@ -62,20 +62,25 @@ def prepare_subshard_operands(
     e = len(src_local)
     e_pad = max(E_BLK, -(-e // E_BLK) * E_BLK)
     pad = e_pad - e
-    if weights is None:
-        w_fill = 1.0 if gather_op == "mul" else 0.0
-        weights = np.full(e, w_fill, np.float64)
     ident_w = _identity_value(reduce, jnp.dtype(dtype)) if gather_op == "add" else 0.0
     src_idx = np.pad(src_local, (0, pad))
     hub_inv = np.pad(
         hub_inv_global, (0, pad), constant_values=hub_inv_global[-1] if e else 0
     )
-    w = np.pad(weights.astype(np.float64), (0, pad), constant_values=ident_w)
+    # Build the padded weight buffer directly in the kernel dtype — no wide
+    # intermediate (a float64 staging copy doubles transient memory on
+    # large sub-shards for no precision gain: the values are cast anyway).
+    w = np.empty(e_pad, np.dtype(jnp.dtype(dtype)))
+    if weights is None:
+        w[:e] = 1.0 if gather_op == "mul" else 0.0
+    else:
+        w[:e] = np.asarray(weights, w.dtype)
+    w[e:] = ident_w
     block_base = hub_inv[::E_BLK].astype(np.int32)
     return (
         jnp.asarray(src_idx, jnp.int32),
         jnp.asarray(hub_inv, jnp.int32),
-        jnp.asarray(w, dtype),
+        jnp.asarray(w),
         jnp.asarray(block_base, jnp.int32),
     )
 
@@ -139,8 +144,6 @@ def subshard_update(
         interpret=interpret,
     )  # (num_blocks, W)
     nb, w = partials.shape
-    #
-
     # Slot-scatter: partial row b covers slots [base_b, base_b + W); fold all
     # rows into the hub vector. O(num_blocks · W) ≪ O(edges) when d > 1.
     slot_ids = (block_base[:, None] + jnp.arange(w)[None, :]).reshape(-1)

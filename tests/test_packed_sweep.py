@@ -1,0 +1,289 @@
+"""Tile-packed compiled sweeps vs. the per-block executor.
+
+The packed path's contract is strict: for every native schedule
+(SPU/DPU/MPU), every program family (sum / min on weighted+unweighted
+graphs) and batched K > 1 runs, it must produce
+
+  * bit-identical attributes and outputs, and
+  * field-for-field identical modelled ``Meters`` (edges, blocks, every
+    byte counter — only ``wall_seconds`` may differ),
+
+while actually running the compiled scan (one ``lax.scan`` + one batched
+apply per sweep) instead of the per-sub-shard dispatch loop. Host-streamed
+residency downgrades to per-block by design — also covered here.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BFS,
+    ExecutionPlan,
+    GraphSession,
+    NXGraphEngine,
+    PageRank,
+    SSSP,
+    build_dsss,
+)
+from repro.core import session as session_mod
+from repro.graph.generators import erdos_renyi, ring
+from repro.graph.preprocess import degree_and_densify
+
+STRATEGIES = ["spu", "dpu", "mpu"]
+
+# (label, program factory, plan kwargs, weighted) — PageRank exercises the
+# float-sum semiring (where re-association would show), BFS the monotone
+# int-min path with activity skipping, SSSP the weighted float-min path.
+PROGRAMS = [
+    ("pagerank", PageRank, dict(max_iters=6, tol=0.0), True),
+    ("bfs", BFS, dict(max_iters=100, program_kwargs={"root": 0}), False),
+    ("sssp", SSSP, dict(max_iters=100, program_kwargs={"root": 0}), True),
+]
+
+
+def _graph(n=150, m=900, seed=0, P=5, weighted=False):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    w = None
+    if weighted:
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.1, 2.0, size=len(src)).astype(np.float32)
+    el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+def _meters_dict(meters):
+    d = dataclasses.asdict(meters)
+    d.pop("wall_seconds")
+    return d
+
+
+def _assert_equivalent(res_pb, res_pk):
+    np.testing.assert_array_equal(res_pb.attrs, res_pk.attrs)
+    assert res_pb.iterations == res_pk.iterations
+    assert res_pb.converged == res_pk.converged
+    assert _meters_dict(res_pb.meters) == _meters_dict(res_pk.meters)
+
+
+@pytest.mark.parametrize("label,prog_cls,kwargs,weighted", PROGRAMS)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_bit_identity_and_meters(label, prog_cls, kwargs, weighted, strategy):
+    g = _graph(seed=3, weighted=weighted)
+    # memory_budget chosen so MPU resolves to a strict 0 < Q < P split for
+    # both attribute widths (Ba=4 min-programs and Ba=8 PageRank), so the
+    # mixed direct+hub two-phase path really runs; residency pinned to
+    # "device" (a budget would otherwise flip the session into host
+    # streaming, where packed doesn't apply).
+    sess = GraphSession(g, memory_budget=720, residency="device")
+    if strategy == "mpu":
+        choice = sess.compile(ExecutionPlan(prog_cls(), strategy="mpu")).choice
+        assert 0 < choice.Q < g.P, "budget must exercise the hub split"
+    pb = sess.run(
+        ExecutionPlan(prog_cls(), strategy=strategy, execution="per_block", **kwargs)
+    )
+    pk = sess.run(
+        ExecutionPlan(prog_cls(), strategy=strategy, execution="packed", **kwargs)
+    )
+    _assert_equivalent(pb, pk)
+    assert pk.meters.edges_processed > 0
+    if label == "pagerank":
+        # Non-monotone: every sweep touches every sub-shard.
+        assert pk.meters.blocks_processed == pk.iterations * len(sess.block_keys)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize(
+    "label,prog_cls,weighted",
+    [("bfs", BFS, False), ("sssp", SSSP, True)],
+)
+def test_batched_k_gt_1(label, prog_cls, weighted, strategy):
+    """K>1 fused batches: one packed scan serves all queries."""
+    g = _graph(seed=7, weighted=weighted)
+    sess = GraphSession(g, residency="device")
+    roots = [0, 11, 29, 63]
+
+    def plans(execution):
+        return [
+            ExecutionPlan(
+                prog_cls(),
+                strategy=strategy,
+                max_iters=100,
+                execution=execution,
+                program_kwargs={"root": r},
+            )
+            for r in roots
+        ]
+
+    b_pb = sess.run_batch(plans("per_block"))
+    b_pk = sess.run_batch(plans("packed"))
+    assert b_pb.fused and b_pk.fused
+    assert b_pb.iterations == b_pk.iterations
+    for r_pb, r_pk in zip(b_pb, b_pk):
+        np.testing.assert_array_equal(r_pb.attrs, r_pk.attrs)
+        np.testing.assert_array_equal(r_pb.output, r_pk.output)
+        assert r_pb.iterations == r_pk.iterations
+    assert _meters_dict(b_pb.meters) == _meters_dict(b_pk.meters)
+
+
+def test_batched_pagerank_shares_edge_stream():
+    """Edge bytes are charged once per sweep under batching, K× for
+    interval/hub state — identically in both execution modes."""
+    g = _graph(seed=9)
+    sess = GraphSession(g, residency="device")
+    plan = ExecutionPlan(
+        PageRank(), strategy="dpu", max_iters=4, tol=0.0, execution="packed"
+    )
+    single = sess.run(plan)
+    batch = sess.run_batch([plan] * 6)
+    assert batch.fused
+    assert batch.meters.bytes_read_edges == single.meters.bytes_read_edges > 0
+    assert batch.meters.bytes_read_hubs == 6 * single.meters.bytes_read_hubs
+
+
+def test_packed_path_actually_runs(monkeypatch):
+    """The packed run must never enter the per-block primitives, and must
+    call the compiled sweep exactly once per update sweep."""
+    g = _graph(seed=5)
+    sess = GraphSession(g, residency="device")
+
+    def boom(*a, **kw):
+        raise AssertionError("per-block primitive dispatched in packed mode")
+
+    monkeypatch.setattr(session_mod, "_block_gather_reduce", boom)
+    monkeypatch.setattr(session_mod, "_block_to_hub", boom)
+    monkeypatch.setattr(session_mod, "_block_from_hub", boom)
+    monkeypatch.setattr(session_mod, "_apply_interval", boom)
+
+    sweeps = []
+    real_jits = session_mod._packed_jits
+
+    def counting_jits(donate):
+        sweep, apply_all = real_jits(donate)
+
+        def counted(*a, **kw):
+            sweeps.append(1)
+            return sweep(*a, **kw)
+
+        return counted, apply_all
+
+    monkeypatch.setattr(session_mod, "_packed_jits", counting_jits)
+    res = sess.run(
+        ExecutionPlan(
+            PageRank(), strategy="spu", max_iters=3, tol=0.0, execution="packed"
+        )
+    )
+    assert res.iterations == 3
+    assert len(sweeps) == 3  # one compiled sweep dispatch per update sweep
+
+
+def test_activity_skipping_matches_per_block():
+    """Monotone activity tracking: packed masks inactive rows to exact
+    identities; block/edge meters must track the per-block skip counts."""
+    el = degree_and_densify(*ring(36))
+    g = build_dsss(el, 6)
+    sess = GraphSession(g, residency="device")
+    for strategy in STRATEGIES:
+        pb = sess.run(
+            ExecutionPlan(
+                BFS(), strategy=strategy, max_iters=50, execution="per_block",
+                program_kwargs={"root": 0},
+            )
+        )
+        pk = sess.run(
+            ExecutionPlan(
+                BFS(), strategy=strategy, max_iters=50, execution="packed",
+                program_kwargs={"root": 0},
+            )
+        )
+        _assert_equivalent(pb, pk)
+        assert pk.meters.blocks_skipped > 0  # the ring really does skip rows
+
+
+def test_host_residency_downgrades_to_per_block():
+    """Streaming is inherently per-block: packed requests under host
+    residency run the fetcher path, bit-identical to device execution."""
+    g = _graph(seed=6)
+    budget = g.total_edge_bytes(8) // 3
+    host = GraphSession(g, memory_budget=budget, residency="host")
+    compiled = host.compile(ExecutionPlan(PageRank(), strategy="spu", execution="packed"))
+    assert compiled.execution == "per_block"
+    dev = GraphSession(g, residency="device")
+    assert (
+        dev.compile(ExecutionPlan(PageRank(), strategy="spu")).execution == "packed"
+    )
+    r_host = host.run(ExecutionPlan(PageRank(), strategy="spu", max_iters=4, tol=0.0))
+    r_dev = dev.run(ExecutionPlan(PageRank(), strategy="spu", max_iters=4, tol=0.0))
+    np.testing.assert_array_equal(r_host.attrs, r_dev.attrs)
+    assert r_host.meters.bytes_h2d > 0  # host mode really streamed
+    assert r_dev.meters.bytes_h2d == 0
+
+
+def test_custom_and_fused_strategies_stay_per_block():
+    import repro.core.baselines  # noqa: F401  (registers turbograph-like)
+
+    g = _graph(seed=8)
+    sess = GraphSession(g, residency="device", execution="packed")
+    assert (
+        sess.compile(ExecutionPlan(PageRank(), strategy="fused")).execution
+        == "per_block"
+    )
+    assert (
+        sess.compile(
+            ExecutionPlan(PageRank(), strategy="turbograph-like")
+        ).execution
+        == "per_block"
+    )
+    # And they still run correctly under a packed-preferring session.
+    ref = sess.run(
+        ExecutionPlan(PageRank(), strategy="spu", max_iters=5, tol=0.0)
+    )
+    fused = sess.run(
+        ExecutionPlan(PageRank(), strategy="fused", max_iters=5, tol=0.0)
+    )
+    np.testing.assert_allclose(fused.attrs, ref.attrs, rtol=1e-6, atol=1e-9)
+
+
+def test_engine_shim_execution_knob():
+    g = _graph(seed=4, weighted=True)
+    sess = GraphSession(g, residency="device")
+    pb = NXGraphEngine(
+        g, PageRank(), strategy="spu", execution="per_block", session=sess
+    )
+    pk = NXGraphEngine(g, PageRank(), strategy="spu", execution="packed", session=sess)
+    assert pb.execution == "per_block" and pk.execution == "packed"
+    r_pb = pb.run(max_iters=5, tol=0.0)
+    r_pk = pk.run(max_iters=5, tol=0.0)
+    _assert_equivalent(r_pb, r_pk)
+
+
+def test_packed_layout_shape_invariants():
+    g = _graph(seed=2, weighted=True)
+    packed = g.packed_sweep()
+    host = g.host_blocks()
+    assert packed.num_tiles == len(host)
+    assert packed.keys == tuple(sorted(host))
+    assert packed.src_local.shape == (packed.num_tiles, packed.tile_edges)
+    assert packed.tile_edges >= max(b["e"] for b in host.values())
+    # Per-tile metadata reproduces the host-block bookkeeping exactly.
+    for t, key in enumerate(packed.keys):
+        blk = host[key]
+        assert packed.e_valid[t] == blk["e"]
+        assert packed.u[t] == blk["u"]
+        assert (packed.src_interval[t], packed.dst_interval[t]) == key
+        e = blk["e"]
+        np.testing.assert_array_equal(packed.src_local[t, :e], blk["src_local"][:e])
+        np.testing.assert_array_equal(packed.dst_local[t, :e], blk["dst_local"][:e])
+        np.testing.assert_array_equal(packed.weights[t, :e], blk["weights"][:e])
+    # base_slot is the global hub-slot prefix sum in row-major key order.
+    np.testing.assert_array_equal(
+        packed.base_slot,
+        [g.hub_offsets[i, j] for (i, j) in packed.keys],
+    )
+
+
+def test_invalid_execution_values_rejected():
+    g = _graph(seed=1)
+    with pytest.raises(ValueError):
+        GraphSession(g, execution="warp")
+    with pytest.raises(ValueError):
+        ExecutionPlan(PageRank(), execution="warp")
