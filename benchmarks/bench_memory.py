@@ -9,7 +9,12 @@ Two sweeps over budgets below (and above) the total staged graph size:
   double-buffered prefetch, so for each budget the row also reports the
   measured-vs-modelled comparison, the raw transfer volume
   (``h2d``, bucket-padded bytes), the calibrated physical bytes/edge, and
-  the peak device-held topology (pinned + 2-block streaming ring).
+  the peak device-held topology (pinned + 2-block streaming ring). This
+  sweep pins ``execution="per_block"`` — it benchmarks the block fetcher
+  specifically; a third sweep covers the packed tile-streaming path
+  (``execution="packed"``, the out-of-core default since adaptive
+  tiling), whose h2d is checked against the ``packed_h2d_bytes`` closed
+  form.
 
 Run: ``PYTHONPATH=src python benchmarks/bench_memory.py``
 (or via ``benchmarks/run.py``). Wall time on this container barely varies
@@ -23,6 +28,7 @@ from repro.core import (
     build_dsss,
     calibrate_edge_bytes,
     compare_measured,
+    packed_h2d_bytes,
 )
 
 from benchmarks._util import row, small_rmat
@@ -41,7 +47,12 @@ def run():
             budget = int(full * frac)
             sess = GraphSession(g, memory_budget=budget, residency=residency)
             res = sess.run(
-                ExecutionPlan(prog, strategy="auto", max_iters=ITERS, tol=0.0)
+                ExecutionPlan(
+                    prog, strategy="auto", max_iters=ITERS, tol=0.0,
+                    # This sweep benchmarks the per-block fetcher; the
+                    # packed streaming path gets its own sweep below.
+                    execution="per_block",
+                )
             )
             per = res.meters.per_iteration()
             choice = res.strategy
@@ -75,6 +86,46 @@ def run():
                     extra,
                 )
             )
+    # Packed tile streaming (the out-of-core default since adaptive
+    # tiling): budget pins a tile prefix, chunks stream on top; measured
+    # h2d must equal the layout closed form exactly.
+    for frac in [0.05, 0.25, 0.5, 1.0, 1.25]:
+        budget = int(full * frac)
+        sess = GraphSession(g, memory_budget=budget, residency="host")
+        res = sess.run(
+            ExecutionPlan(
+                prog, strategy="spu", max_iters=ITERS, tol=0.0,
+                execution="packed",
+            )
+        )
+        per = res.meters.per_iteration()
+        splan = sess.packed_stream_plan("spu", prog.attr_bytes)
+        model_h2d = packed_h2d_bytes(
+            splan.num_tiles - splan.pin_tiles, splan.tile_edges,
+            weighted=sess.has_weights,
+        )
+        pinned_model, _ = sess.pinned_device_bytes()
+        assert per.bytes_h2d == model_h2d, (
+            f"packed h2d {per.bytes_h2d} != closed form {model_h2d} "
+            f"(budget frac {frac}) — streamed leaves and PACKED_SLOT_BYTES "
+            "have drifted"
+        )
+        extra = (
+            f"pin_tiles={splan.pin_tiles}/{splan.num_tiles}"
+            f";chunk_tiles={splan.chunk_tiles}"
+            f";h2d={per.bytes_h2d:.0f}"
+            f";h2d_model={model_h2d:.0f}"
+            f";h2d_exact=True"
+            f";pinned={pinned_model:.0f}"
+            f";peak={res.meters.peak_device_graph_bytes:.0f}"
+        )
+        rows.append(
+            (
+                f"host_packed_budget_{frac:.2f}",
+                res.meters.wall_seconds / ITERS,
+                extra,
+            )
+        )
     return [row(*r) for r in rows]
 
 

@@ -1,25 +1,28 @@
-"""Per-sweep wall time and dispatch count: per_block vs. packed execution.
+"""Per-sweep wall time, dispatch count and padding: per_block vs. packed.
 
 The paper's headline claim is raw per-iteration speed; the per-block
 executor pays O(P²) host→XLA round-trips per update sweep, so at realistic
-P the run is dispatch-bound. This benchmark measures, for P ∈ {8, 16, 32}
-(device residency, PageRank):
+P the run is dispatch-bound. This benchmark measures:
 
-  * per-sweep wall seconds for both execution modes, and
-  * jitted-primitive dispatches per sweep (counted by wrapping the
-    session's jit entry points — the host round-trips the packed path is
-    designed to eliminate; transfers and un-jitted glue ops are not
-    counted).
+* **Uniform section** (Erdős–Rényi, P ∈ {8, 16, 32}, device residency,
+  PageRank): per-sweep wall seconds and jitted-primitive dispatches per
+  sweep for both execution modes (counted by wrapping the session's jit
+  entry points), with bit-identity and meter equality asserted per row.
+* **Power-law section** (Zipf + R-MAT, P ∈ {16, 32} — the skew regime
+  NXgraph §V targets): padded-edge ratio and per-sweep wall of the legacy
+  one-tile-per-sub-shard packing vs. adaptive destination-aligned tiles,
+  and out-of-core (`residency="host"`, budget ≈ half the edge bytes)
+  per-sweep wall + raw h2d volume of packed streaming vs. the per-block
+  fetcher — the downgrade adaptive tiling removed.
 
-It verifies bit-identity between the modes on every configuration and
-writes ``BENCH_sweep.json`` (repo root by default) — the start of the perf
-trajectory; CI runs the ``--smoke`` variant per PR so dispatch-count
-regressions are visible in the artifact.
+Writes ``BENCH_sweep.json`` (repo root by default); CI runs the
+``--smoke`` variant per PR with ``--assert-padding-ratio 1.25`` so both
+dispatch-count and padding regressions fail the build.
 
 Usage::
 
     PYTHONPATH=src python benchmarks/bench_sweep.py            # full, writes BENCH_sweep.json
-    PYTHONPATH=src python benchmarks/bench_sweep.py --smoke    # tiny graph, CI artifact
+    PYTHONPATH=src python benchmarks/bench_sweep.py --smoke    # tiny graphs, CI artifact
 """
 import argparse
 import dataclasses
@@ -35,7 +38,7 @@ import jax  # noqa: E402
 
 from repro.core import ExecutionPlan, GraphSession, PageRank, build_dsss  # noqa: E402
 from repro.core import session as session_mod  # noqa: E402
-from repro.graph.generators import erdos_renyi  # noqa: E402
+from repro.graph.generators import erdos_renyi, rmat, zipf  # noqa: E402
 from repro.graph.preprocess import degree_and_densify  # noqa: E402
 
 # The session's jit entry points — one call == one host-scheduled XLA
@@ -98,48 +101,17 @@ def bench_one(session, strategy, execution, iters):
         "per_sweep_seconds": res.meters.wall_seconds / res.iterations,
         "dispatches_per_sweep": counter.count / res.iterations,
         "mteps": res.meters.mteps(),
+        "h2d_per_sweep": res.meters.bytes_h2d / res.iterations,
         "attrs": res.attrs,
         "meters": res.meters,
     }
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--p-values", type=int, nargs="+", default=[8, 16, 32])
-    ap.add_argument("--n", type=int, default=20_000)
-    ap.add_argument("--m", type=int, default=120_000)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--iters", type=int, default=5)
-    ap.add_argument(
-        "--strategies", nargs="+", default=["spu", "dpu"],
-        choices=["spu", "dpu", "mpu"],
-    )
-    ap.add_argument(
-        "--out",
-        default=str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"),
-    )
-    ap.add_argument(
-        "--smoke", action="store_true",
-        help="tiny graph, P=[4], 2 sweeps — the CI artifact variant",
-    )
-    args = ap.parse_args(argv)
-    if args.smoke:
-        args.p_values, args.n, args.m, args.iters = [4], 400, 2_400, 2
-
+def uniform_section(report, args):
     src, dst = erdos_renyi(args.n, args.m, seed=args.seed)
     el = degree_and_densify(src, dst, drop_self_loops=True)
-    report = {
-        "benchmark": "bench_sweep",
-        "backend": jax.default_backend(),
-        "graph": {
-            "generator": "erdos_renyi",
-            "n": el.n,
-            "m": el.m,
-            "seed": args.seed,
-        },
-        "iters_per_run": args.iters,
-        "results": [],
-        "speedups": [],
+    report["graph"] = {
+        "generator": "erdos_renyi", "n": el.n, "m": el.m, "seed": args.seed,
     }
     for P in args.p_values:
         g = build_dsss(el, P)
@@ -148,7 +120,7 @@ def main(argv=None):
         print(
             f"P={P}: {len(sess.block_keys)} sub-shards, tile_edges="
             f"{packed.tile_edges}, padded_slots={packed.padded_edge_slots} "
-            f"({packed.padded_edge_slots / max(g.m, 1):.2f}x edges)"
+            f"({packed.padding_ratio:.2f}x edges)"
         )
         for strategy in args.strategies:
             rows = {}
@@ -190,6 +162,155 @@ def main(argv=None):
                     "dispatch_ratio": dispatch_ratio,
                 }
             )
+
+
+def powerlaw_section(report, args):
+    """Skewed graphs: old vs adaptive packing, packed-host vs per-block-host."""
+    graphs = []
+    if args.smoke:
+        graphs.append(("zipf", zipf(2000, 14000, alpha=1.9, seed=args.seed)))
+    else:
+        graphs.append(("zipf", zipf(args.n, args.m, alpha=1.9, seed=args.seed)))
+        graphs.append(("rmat", rmat(14, 8, seed=args.seed)))
+    for gen_name, (src, dst) in graphs:
+        el = degree_and_densify(src, dst, drop_self_loops=True)
+        for P in args.pl_p_values:
+            g = build_dsss(el, P)
+            adaptive = g.packed_sweep("adaptive")
+            legacy = g.packed_sweep("subshard")
+            print(
+                f"{gen_name} P={P} (n={el.n}, m={el.m}): padding "
+                f"adaptive={adaptive.padding_ratio:.3f}x "
+                f"(T={adaptive.tile_edges}, NT={adaptive.num_tiles}) vs "
+                f"subshard={legacy.padding_ratio:.3f}x "
+                f"(T={legacy.tile_edges}, NT={legacy.num_tiles})"
+            )
+            row = {
+                "generator": gen_name,
+                "P": P,
+                "n": el.n,
+                "m": el.m,
+                "padding_ratio_adaptive": adaptive.padding_ratio,
+                "padding_ratio_subshard": legacy.padding_ratio,
+                "tile_edges_adaptive": adaptive.tile_edges,
+                "tile_edges_subshard": legacy.tile_edges,
+            }
+            # Device residency: the packing ablation (same compiled path).
+            dev_rows = {}
+            for packing in ("subshard", "adaptive"):
+                sess = GraphSession(g, residency="device", packing=packing)
+                r = bench_one(sess, "spu", "packed", args.iters)
+                dev_rows[packing] = r
+                row[f"device_packed_{packing}_per_sweep_seconds"] = r[
+                    "per_sweep_seconds"
+                ]
+                print(
+                    f"  device packed/{packing:>8}: "
+                    f"{r['per_sweep_seconds'] * 1e3:8.2f} ms/sweep"
+                )
+            np.testing.assert_array_equal(
+                dev_rows["subshard"]["attrs"], dev_rows["adaptive"]["attrs"]
+            )
+            # Out-of-core: budget ≈ attrs + half the edge bytes, SPU.
+            budget = 2 * g.n_pad * 8 + g.total_edge_bytes(8) // 2
+            sess_h = GraphSession(g, memory_budget=budget, residency="host")
+            host_rows = {}
+            for execution in ("per_block", "packed"):
+                r = bench_one(sess_h, "spu", execution, args.host_iters)
+                host_rows[execution] = r
+                row[f"host_{execution}_per_sweep_seconds"] = r["per_sweep_seconds"]
+                row[f"host_{execution}_h2d_per_sweep"] = r["h2d_per_sweep"]
+                print(
+                    f"  host   {execution:>9}: "
+                    f"{r['per_sweep_seconds'] * 1e3:8.2f} ms/sweep, "
+                    f"h2d {r['h2d_per_sweep'] / 1e6:6.2f} MB/sweep, "
+                    f"{r['dispatches_per_sweep']:6.1f} dispatches/sweep"
+                )
+            np.testing.assert_array_equal(
+                host_rows["per_block"]["attrs"], host_rows["packed"]["attrs"]
+            )
+            # Host ≡ device bit-identity, at matching sweep counts (the
+            # device ablation rows above may use a different iters).
+            dev_ref = GraphSession(g, residency="device").run(
+                ExecutionPlan(
+                    PageRank(), strategy="spu", max_iters=args.host_iters,
+                    tol=0.0, execution="packed",
+                )
+            )
+            np.testing.assert_array_equal(
+                host_rows["packed"]["attrs"], dev_ref.attrs
+            )
+            assert (
+                host_rows["per_block"]["meters"].model_dict()
+                == host_rows["packed"]["meters"].model_dict()
+            ), "host execution modes must model-meter identically"
+            row["host_wall_speedup"] = (
+                row["host_per_block_per_sweep_seconds"]
+                / row["host_packed_per_sweep_seconds"]
+            )
+            row["device_packing_wall_speedup"] = (
+                row["device_packed_subshard_per_sweep_seconds"]
+                / row["device_packed_adaptive_per_sweep_seconds"]
+            )
+            print(
+                f"  adaptive vs subshard: {row['device_packing_wall_speedup']:.2f}x; "
+                f"packed-host vs per-block-host: {row['host_wall_speedup']:.2f}x "
+                "(bit-identical, model meters identical)"
+            )
+            report["powerlaw"].append(row)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--p-values", type=int, nargs="+", default=[8, 16, 32])
+    ap.add_argument("--pl-p-values", type=int, nargs="+", default=[16, 32])
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--m", type=int, default=120_000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--host-iters", type=int, default=3)
+    ap.add_argument(
+        "--strategies", nargs="+", default=["spu", "dpu"],
+        choices=["spu", "dpu", "mpu"],
+    )
+    ap.add_argument(
+        "--assert-padding-ratio", type=float, default=None,
+        help="fail (exit 1) if any power-law adaptive padding ratio exceeds this",
+    )
+    ap.add_argument(
+        "--out",
+        default=str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"),
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny graphs, P=[4]/[16], 2 sweeps — the CI artifact variant",
+    )
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.p_values, args.n, args.m, args.iters = [4], 400, 2_400, 2
+        args.pl_p_values, args.host_iters = [16], 2
+
+    report = {
+        "benchmark": "bench_sweep",
+        "backend": jax.default_backend(),
+        "iters_per_run": args.iters,
+        "results": [],
+        "speedups": [],
+        "powerlaw": [],
+    }
+    uniform_section(report, args)
+    powerlaw_section(report, args)
+    if args.assert_padding_ratio is not None:
+        for row in report["powerlaw"]:
+            assert row["padding_ratio_adaptive"] <= args.assert_padding_ratio, (
+                f"{row['generator']} P={row['P']}: adaptive padding "
+                f"{row['padding_ratio_adaptive']:.3f} exceeds the "
+                f"{args.assert_padding_ratio} bound"
+            )
+        print(
+            f"padding-ratio bound {args.assert_padding_ratio} holds on all "
+            f"{len(report['powerlaw'])} power-law configurations"
+        )
     out = pathlib.Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")

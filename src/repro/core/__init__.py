@@ -32,6 +32,7 @@ from repro.core.iomodel import (
     modelled_io,
     mpu_io,
     mpu_q,
+    packed_h2d_bytes,
     select_strategy,
     spu_io,
     turbograph_like_io,

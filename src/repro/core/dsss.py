@@ -24,7 +24,15 @@ import numpy as np
 
 from repro.graph.preprocess import EdgeList
 
-__all__ = ["DSSSGraph", "PackedSweep", "build_dsss", "SubShard", "next_bucket"]
+__all__ = [
+    "DSSSGraph",
+    "PackedSweep",
+    "build_dsss",
+    "SubShard",
+    "next_bucket",
+    "choose_tile_edges",
+    "cut_runs_into_tiles",
+]
 
 
 def next_bucket(e: int, minimum: int = 8) -> int:
@@ -33,6 +41,63 @@ def next_bucket(e: int, minimum: int = 8) -> int:
     while b < e:
         b *= 2
     return b
+
+
+# Smallest tile size the adaptive chooser will consider on non-trivial
+# graphs: one TPU lane row of edges. Smaller tiles can pack marginally
+# tighter on low-skew graphs but fragment the scan into more steps than
+# the padding saved is worth.
+TILE_EDGES_FLOOR = 128
+
+
+def cut_runs_into_tiles(bounds: np.ndarray, tile_edges: int) -> list[tuple[int, int]]:
+    """Greedy destination-aligned cut: pack runs into ``tile_edges`` tiles.
+
+    ``bounds`` is the (num_runs + 1,) array of cumulative run boundaries
+    (edge offsets); returns ``(r0, r1)`` run-index spans, each spanning at
+    most ``tile_edges`` edges, cutting only between runs. Requires
+    ``tile_edges >= max run length`` (else a run is force-placed alone in
+    an overfull tile — callers choose ``tile_edges`` to avoid this).
+    """
+    n_runs = len(bounds) - 1
+    tiles: list[tuple[int, int]] = []
+    r = 0
+    while r < n_runs:
+        limit = bounds[r] + tile_edges
+        k = int(np.searchsorted(bounds, limit, side="right")) - 1
+        k = min(max(k, r + 1), n_runs)
+        tiles.append((r, k))
+        r = k
+    return tiles
+
+
+def choose_tile_edges(run_lengths: np.ndarray) -> int:
+    """Pick the tile size minimising total padded slots for these runs.
+
+    Candidates are powers of two from ``max(TILE_EDGES_FLOOR, bucket(max
+    run))`` — a run must fit one tile, or the cut rule would have to split
+    a destination's fold — up to ``bucket(m)`` (a single tile). Each
+    candidate's exact padded footprint ``num_tiles · T`` is evaluated with
+    the real greedy cut; ties prefer the *smaller* tile (finer granularity
+    for budget pinning and chunked host streaming, at identical padding).
+    This is what bounds the padded-edge ratio on power-law graphs, where
+    the legacy max-sub-shard tile width is hub-degree-bound.
+    """
+    m = int(run_lengths.sum()) if len(run_lengths) else 0
+    if m == 0:
+        return 8
+    max_run = int(run_lengths.max())
+    lo = max(min(TILE_EDGES_FLOOR, next_bucket(m)), next_bucket(max_run))
+    hi = max(lo, next_bucket(m))
+    bounds = np.concatenate([[0], np.cumsum(run_lengths)])
+    best_T, best_slots = lo, None
+    T = lo
+    while T <= hi:
+        slots = len(cut_runs_into_tiles(bounds, T)) * T
+        if best_slots is None or slots < best_slots:
+            best_T, best_slots = T, slots
+        T *= 2
+    return best_T
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,53 +129,93 @@ class SubShard:
 
 @dataclasses.dataclass(frozen=True)
 class PackedSweep:
-    """Tile-packed layout of one full update sweep (every non-empty sub-shard).
+    """Destination-aligned tile packing of one full update sweep.
 
-    All sub-shards are stacked, in row-major ``(i, j)`` order, into uniform
-    ``(num_tiles, tile_edges)`` arrays — one tile per sub-shard, every tile
-    padded to the size of the largest sub-shard bucket. Uniformity is what
-    lets the executor run the *whole* sweep as a single ``jax.lax.scan``
-    (or a Pallas grid) over the tile axis: one XLA dispatch per sweep
-    instead of one host round-trip per sub-shard.
+    The flat DSSS edge array is already the whole sweep in execution
+    order: row-major ``(i, j)`` sub-shards, destination-sorted inside
+    each. This layout cuts that stream into uniform ``(num_tiles,
+    tile_edges)`` windows so the executor can run the entire gather-reduce
+    phase as a single ``jax.lax.scan`` (or stream tile chunks host→device)
+    — one XLA dispatch instead of one host round-trip per sub-shard.
 
-    Row-major tile order is load-bearing for bit-identity with the
-    per-block executor: every destination interval's accumulator folds its
-    sub-shard contributions in ascending source-interval order, which is
-    exactly the fold order of the SPU schedule *and* of the DPU/MPU
-    two-phase schedules (their per-``j`` order is deferred-direct blocks
-    ``i < Q`` ascending, then hub folds ``i ≥ Q`` ascending — ``i``
-    ascending overall, and a sub-shard's hub partial is bitwise equal to
-    its direct segment-reduce because destination-sorting gives both the
-    same per-destination edge fold order).
+    **Cut rule (mode="adaptive"):** tiles are cut *only at destination-run
+    boundaries* — a run being one sub-shard's maximal span of edges
+    sharing a destination, i.e. exactly one hub slot. Large sub-shards
+    therefore split across tiles and small consecutive sub-shards coalesce
+    into shared tiles, but a destination's per-sub-shard edge run is never
+    divided, so its partial ⊕ is computed over the same values in the same
+    order as the per-block executor's segment reduce — bit-identity for
+    float ``sum`` programs is preserved with near-uniform tile occupancy
+    (``padding_ratio`` stays small on power-law graphs instead of being
+    bound by the largest sub-shard). ``tile_edges`` is chosen per graph to
+    minimise total padded slots (see :func:`choose_tile_edges`).
 
-    One tile per sub-shard (rather than fixed-size chunks) is what keeps
-    float ``sum`` programs bit-identical: splitting a destination's edge
-    run across tiles would re-associate its partial sums. The cost is
-    padding to the *largest* bucket — ``num_tiles · tile_edges`` edge
-    slots against ``Σ bucket_e``; balanced partitions (the paper's
-    equal-sized intervals) keep the ratio small, heavy skew trades memory
-    for the dispatch win.
+    **mode="subshard"** reproduces the legacy one-tile-per-sub-shard
+    packing (tiles never cross or split sub-shards, ``tile_edges`` = the
+    largest sub-shard bucket) in the same schema — kept for the padding
+    benchmarks and because it is the only packing whose per-run reduce is
+    also valid for ``src_sorted`` (GraphChi-like) layouts, where a
+    destination's edges are not contiguous and only whole-sub-shard
+    windows group them correctly.
 
-    ``hub_inv``/``base_slot``/``u`` carry the hub-window metadata (per-edge
-    local hub slots, the global hub-slot base and unique-destination count
-    of each tile). The compiled scan reduces over ``dst_local`` and the
-    I/O meters are driven from the metadata; the hub fields are staged so
-    a Pallas-grid sweep (the windowed-partial formulation of
-    ``kernels/dsss_spmv.py``) can consume the same layout — no kernel
-    consumer exists yet.
+    **Execution schema** (what the compiled scan consumes, per tile):
+
+    * ``src`` / ``dst`` — global endpoint ids (vertex id == padded
+      position, since intervals are the contiguous ranges
+      ``[i·interval_size, …)``): the scan gathers attributes and aux
+      directly from the flat ``(n_pad,)`` arrays, so a tile needs no
+      single source/destination interval and coalescing is free.
+    * ``run_local`` — per-edge hub slot *within the tile's slot window*
+      (global hub slot − ``base_slot``): the per-tile segment reduce over
+      ``run_local`` is precisely the ToHub windowed-partial formulation of
+      ``kernels/dsss_spmv.py``, which is why tiles are also valid Pallas
+      kernel inputs (:func:`repro.kernels.ops.prepare_from_packed_tile`).
+    * ``run_dst`` — per run-slot global destination id (``n_pad`` sentinel
+      past ``u``): the FromHub fold scatters the ≤ ``tile_edges`` run
+      partials into the flat accumulator. A coalesced tile that wraps a
+      whole row cycle can hold two runs with the *same* destination (from
+      different source intervals), making the scatter carry duplicate
+      indices; the ascending-``i`` fold order then relies on the scatter
+      applying updates in index order. XLA serialises conflicting scatter
+      updates in order on CPU and TPU — the same assumption every
+      ``jax.ops.segment_*`` fold in this codebase (per-block path
+      included) already makes — but it is implementation-defined on GPU,
+      where float-``sum`` bit-identity would weaken to
+      re-association-level equality in exactly those tiles (min/max are
+      order-free either way).
+    * ``e_valid`` — real edges; trailing padding is masked to exact
+      ⊕-identities.
+
+    Bit-identity with the per-block executor holds because (a) runs are
+    never split, (b) the stream order folds every destination's sub-shard
+    partials in ascending source-interval order — the fold order of SPU
+    *and* of the DPU/MPU two-phase schedules (deferred-direct ``i < Q``
+    ascending, then hub folds ``i ≥ Q`` ascending), and (c) a sub-shard's
+    hub partial is bitwise equal to its direct segment-reduce because
+    destination-sorting gives both the same per-destination fold order.
+
+    ``src_interval`` / ``dst_interval`` / ``base_slot`` / ``row_offset`` /
+    ``u`` are the per-tile metadata (intervals of the first edge, global
+    hub-slot base, offset of the first edge in the flat DSSS edge array,
+    run count) that drive meter recomputation, chunked host streaming and
+    the kernel staging; they stay host-side.
     """
 
-    keys: tuple  # ((i, j), ...) row-major over non-empty sub-shards
+    mode: str  # "adaptive" | "subshard"
+    m: int  # real edges covered (== graph.m)
+    n_pad: int  # padded vertex count (the run_dst scatter sentinel)
     tile_edges: int  # T: padded edge capacity of every tile
-    src_local: np.ndarray  # int32 (NT, T) source offsets within interval i
-    dst_local: np.ndarray  # int32 (NT, T) destination offsets within interval j
-    hub_inv: np.ndarray  # int32 (NT, T) edge -> hub slot, local to the tile
+    src: np.ndarray  # int32 (NT, T) global source ids (0-padded)
+    dst: np.ndarray  # int32 (NT, T) global destination ids (0-padded)
+    run_local: np.ndarray  # int32 (NT, T) edge -> run slot within the tile
+    run_dst: np.ndarray  # int32 (NT, T) run slot -> global dst (n_pad pad)
     weights: np.ndarray | None  # float32 (NT, T) or None
     e_valid: np.ndarray  # int32 (NT,) real edge count per tile
-    src_interval: np.ndarray  # int32 (NT,) i of each tile
-    dst_interval: np.ndarray  # int32 (NT,) j of each tile
-    base_slot: np.ndarray  # int32 (NT,) global hub-slot base (hub_offsets[i, j])
-    u: np.ndarray  # int32 (NT,) unique destinations (hub slots) per tile
+    src_interval: np.ndarray  # int32 (NT,) i of the tile's first edge
+    dst_interval: np.ndarray  # int32 (NT,) j of the tile's first edge
+    base_slot: np.ndarray  # int64 (NT,) global hub slot of the first run
+    u: np.ndarray  # int32 (NT,) runs (unique (sub-shard, dst)) per tile
+    row_offset: np.ndarray  # int64 (NT,) flat edge offset of the first edge
 
     @property
     def num_tiles(self) -> int:
@@ -120,6 +225,11 @@ class PackedSweep:
     def padded_edge_slots(self) -> int:
         """Total edge slots the packing allocates (``num_tiles·tile_edges``)."""
         return self.num_tiles * self.tile_edges
+
+    @property
+    def padding_ratio(self) -> float:
+        """Padded-slots / real-edges — 1.0 is a perfect packing."""
+        return self.padded_edge_slots / max(self.m, 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,57 +328,118 @@ class DSSSGraph:
                     blocks[(i, j)] = blk
         return blocks
 
-    def packed_sweep(
-        self, host_blocks: dict[tuple[int, int], dict] | None = None
-    ) -> PackedSweep:
-        """Tile-pack every non-empty sub-shard for the compiled sweep path.
+    def global_hub_slots(self) -> np.ndarray:
+        """int64 (m,): each edge's *global* hub slot (run id).
 
-        ``host_blocks`` (from :meth:`host_blocks`) can be passed to reuse
-        already-staged padded buffers; otherwise they are built here. Pure
-        numpy — the device upload happens once in
+        ``hub_inv_flat`` is local to its sub-shard; adding the sub-shard's
+        cumulative slot base makes slot ids global and — because slot
+        numbering follows the same row-major, destination-sorted order as
+        the flat edge array — non-decreasing along the edge stream for the
+        DSSS layout (``src_sorted`` graphs scramble them within blocks).
+        """
+        counts = np.diff(
+            np.concatenate([[0], self.offsets[:, 1:].ravel()])
+        )
+        bases = np.repeat(self.hub_offsets[:, :-1].ravel(), counts)
+        return bases + self.hub_inv_flat
+
+    def packed_sweep(self, mode: str = "adaptive") -> PackedSweep:
+        """Tile-pack the whole sweep for the compiled executor (pure numpy).
+
+        ``mode="adaptive"`` (default, DSSS layout only): fixed-size tiles
+        cut at destination-run boundaries, tile size chosen by
+        :func:`choose_tile_edges`. ``mode="subshard"``: the legacy
+        one-tile-per-sub-shard packing (required for ``src_sorted``
+        graphs). Device upload happens once in
         ``repro.core.session._StagedGraph``.
         """
-        if host_blocks is None:
-            host_blocks = self.host_blocks()
-        keys = tuple(sorted(host_blocks))  # row-major (i, j) — see PackedSweep
-        nt = len(keys)
-        T = max(
-            (len(host_blocks[k]["src_local"]) for k in keys), default=8
-        )
-        src_local = np.zeros((nt, T), np.int32)
-        dst_local = np.zeros((nt, T), np.int32)
-        hub_inv = np.zeros((nt, T), np.int32)
+        if mode not in ("adaptive", "subshard"):
+            raise ValueError(f"packing mode must be 'adaptive' or 'subshard', got {mode!r}")
+        if mode == "adaptive" and self.src_sorted:
+            raise ValueError(
+                "adaptive tile packing needs destination-sorted sub-shards; "
+                "src_sorted graphs must use mode='subshard' (a destination's "
+                "edges are not contiguous, so only whole-sub-shard windows "
+                "group its partial reduce correctly)"
+            )
+        m = self.m
+        gslot = self.global_hub_slots()
+        if mode == "adaptive":
+            if m == 0:
+                starts = np.zeros(0, np.int64)
+            else:
+                change = np.ones(m, dtype=bool)
+                change[1:] = gslot[1:] != gslot[:-1]
+                starts = np.flatnonzero(change).astype(np.int64)
+            bounds = np.concatenate([starts, [m]])  # run r spans bounds[r:r+2]
+            run_len = np.diff(bounds)
+            T = choose_tile_edges(run_len)
+            tile_runs = cut_runs_into_tiles(bounds, T)
+        else:
+            # One tile per non-empty sub-shard: forced cuts at block
+            # boundaries, T = the largest sub-shard bucket (legacy packing).
+            blk_bounds = self.offsets[:, 1:].ravel()
+            blk_lo = np.concatenate([[0], blk_bounds[:-1]])
+            nonempty = blk_bounds > blk_lo
+            lo, hi = blk_lo[nonempty], blk_bounds[nonempty]
+            T = next_bucket(int((hi - lo).max()) if len(lo) else 8)
+            # Runs double as blocks here: each tile is one whole block.
+            bounds = None
+            tile_runs = [(int(a), int(b)) for a, b in zip(lo, hi)]
+        nt = len(tile_runs)
+        src = np.zeros((nt, T), np.int32)
+        dst = np.zeros((nt, T), np.int32)
+        run_local = np.zeros((nt, T), np.int32)
+        run_dst = np.full((nt, T), self.n_pad, np.int32)
         weights = None if self.weights is None else np.zeros((nt, T), np.float32)
         e_valid = np.zeros(nt, np.int32)
         src_iv = np.zeros(nt, np.int32)
         dst_iv = np.zeros(nt, np.int32)
-        base_slot = np.zeros(nt, np.int32)
+        base_slot = np.zeros(nt, np.int64)
         u = np.zeros(nt, np.int32)
-        for t, (i, j) in enumerate(keys):
-            blk = host_blocks[(i, j)]
-            b = len(blk["src_local"])  # bucket size of this sub-shard
-            src_local[t, :b] = blk["src_local"]
-            dst_local[t, :b] = blk["dst_local"]
-            hub_inv[t, :b] = blk["hub_inv"]
+        row_offset = np.zeros(nt, np.int64)
+        isz = self.interval_size
+        for t, span in enumerate(tile_runs):
+            if mode == "adaptive":
+                r0, r1 = span  # run index range
+                lo_e, hi_e = int(bounds[r0]), int(bounds[r1])
+                base = int(gslot[lo_e])
+                nu = r1 - r0
+            else:
+                lo_e, hi_e = span  # edge range of one whole block
+                base = int(gslot[lo_e] - self.hub_inv_flat[lo_e])
+                nu = int(self.hub_inv_flat[lo_e:hi_e].max()) + 1
+            e = hi_e - lo_e
+            src[t, :e] = self.src[lo_e:hi_e]
+            dst[t, :e] = self.dst[lo_e:hi_e]
+            run_local[t, :e] = (gslot[lo_e:hi_e] - base).astype(np.int32)
+            # Run slot -> global destination: the destination of any edge in
+            # the run (scatter target of the FromHub fold).
+            run_dst[t, :e][run_local[t, :e]] = dst[t, :e]
             if weights is not None:
-                weights[t, :b] = blk["weights"]
-            e_valid[t] = blk["e"]
-            src_iv[t] = i
-            dst_iv[t] = j
-            base_slot[t] = self.hub_offsets[i, j]
-            u[t] = blk["u"]
+                weights[t, :e] = self.weights[lo_e:hi_e]
+            e_valid[t] = e
+            src_iv[t] = self.src[lo_e] // isz
+            dst_iv[t] = self.dst[lo_e] // isz
+            base_slot[t] = base
+            u[t] = nu
+            row_offset[t] = lo_e
         return PackedSweep(
-            keys=keys,
+            mode=mode,
+            m=m,
+            n_pad=self.n_pad,
             tile_edges=T,
-            src_local=src_local,
-            dst_local=dst_local,
-            hub_inv=hub_inv,
+            src=src,
+            dst=dst,
+            run_local=run_local,
+            run_dst=run_dst,
             weights=weights,
             e_valid=e_valid,
             src_interval=src_iv,
             dst_interval=dst_iv,
             base_slot=base_slot,
             u=u,
+            row_offset=row_offset,
         )
 
     def total_edge_bytes(self, Be: int) -> int:

@@ -41,9 +41,13 @@ class NXGraphEngine:
         host-streamed execution. See :class:`GraphSession`. ``None``
         defaults to "auto" (host streaming iff a budget is set).
       execution: "per_block" | "packed" | "auto" — host-scheduled
-        dispatch-per-sub-shard vs. one compiled scan per update sweep.
-        See :class:`GraphSession`. ``None`` defaults to "auto" ("packed"
-        wherever it applies); results and meters are identical.
+        dispatch-per-sub-shard vs. one compiled scan per update sweep
+        (chunk-streamed under host residency). See :class:`GraphSession`.
+        ``None`` defaults to "auto" ("packed" wherever it applies);
+        results and model meters are identical.
+      packing: "adaptive" | "subshard" | "auto" tile layout for packed
+        execution (see :class:`GraphSession`). ``None`` defaults to
+        "auto".
       Be: bytes per edge in the I/O model (8 = two int32 ids).
       Bv: bytes per vertex id.
       session: share an existing staged session instead of staging a new
@@ -59,6 +63,7 @@ class NXGraphEngine:
         memory_budget: int | None = None,
         residency: str | None = None,
         execution: str | None = None,
+        packing: str | None = None,
         Be: int | None = None,
         Bv: int | None = None,
         session: GraphSession | None = None,
@@ -68,6 +73,7 @@ class NXGraphEngine:
                 graph,
                 memory_budget=memory_budget,
                 residency="auto" if residency is None else residency,
+                packing="auto" if packing is None else packing,
                 Be=8 if Be is None else Be,
                 Bv=4 if Bv is None else Bv,
             )
@@ -102,6 +108,16 @@ class NXGraphEngine:
                 raise ValueError(
                     f"Bv={Bv} conflicts with the shared session's vertex-id "
                     "size; configure Bv on the GraphSession"
+                )
+            if (
+                packing is not None
+                and packing != "auto"
+                and packing != session.packing
+            ):
+                raise ValueError(
+                    f"packing={packing!r} conflicts with the shared session's "
+                    f"tile packing ({session.packing!r}); configure it on the "
+                    "GraphSession"
                 )
         self.session = session
         self.g = graph

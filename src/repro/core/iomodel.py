@@ -35,6 +35,8 @@ __all__ = [
     "IOComparison",
     "compare_measured",
     "calibrate_edge_bytes",
+    "packed_h2d_bytes",
+    "PACKED_SLOT_BYTES",
 ]
 
 
@@ -205,6 +207,31 @@ def compare_measured(
         measured_write=float(per_iteration_meters.bytes_written),
         slack_bytes=float(slack_bytes),
     )
+
+
+# Raw bytes per tile edge slot the packed host-streaming path ships: four
+# int32 leaves (src, dst, run_local, run_dst) — plus float32 weights on
+# weighted graphs and one int32 e_valid scalar per tile.
+PACKED_SLOT_BYTES = 16
+
+
+def packed_h2d_bytes(
+    streamed_tiles: int, tile_edges: int, *, weighted: bool = False
+) -> float:
+    """Closed-form raw host→device bytes per sweep for packed streaming.
+
+    Packed host execution ships every non-pinned tile each sweep — dense
+    index/run leaves, so the volume is a pure function of the layout:
+    ``streamed_tiles · (tile_edges · slot_bytes + 4)``. This is the packed
+    counterpart of the per-block path's bucket-padded block bytes and is
+    asserted to match ``Meters.bytes_h2d`` exactly in
+    tests/test_packed_sweep.py — padding inflation (the adaptive packer's
+    ``padding_ratio``) is therefore also the physical h2d inflation, which
+    is why bounding it matters out-of-core (GraphMP-style semi-external
+    streaming pays for every padded slot on the wire).
+    """
+    per_tile = tile_edges * (PACKED_SLOT_BYTES + (4 if weighted else 0)) + 4
+    return float(streamed_tiles * per_tile)
 
 
 def calibrate_edge_bytes(p: IOParams, meters) -> float:

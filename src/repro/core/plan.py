@@ -85,8 +85,10 @@ class ExecutionPlan:
         ``None`` (inherit), "per_block", "packed" or "auto". "per_block"
         is the host-scheduled legacy path (one jit dispatch per
         sub-shard); "packed" runs each update sweep as one compiled scan
-        over the tile-packed layout (device residency + SPU/DPU/MPU only
-        — it downgrades to "per_block" otherwise); "auto" picks "packed"
+        over the destination-aligned tile layout — under host residency
+        the tile chunks are streamed with double-buffered prefetch, so
+        out-of-core runs stay packed (SPU/DPU/MPU only; fused/custom
+        schedules downgrade to "per_block"); "auto" picks "packed"
         whenever it applies. Results and modelled meters are identical
         either way. See :class:`repro.core.session.GraphSession`.
       program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are

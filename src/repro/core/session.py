@@ -38,16 +38,22 @@ raw per-iteration speed — its DSSS structure exists so the inner loop is a
 streamlined, conflict-free pass over sorted edge blocks. The per-block
 executor re-enters Python for every sub-shard (O(P²) jit dispatches per
 sweep); with ``execution="packed"`` the session instead stages the
-:class:`repro.core.dsss.PackedSweep` tile layout once and runs the entire
-gather-reduce phase of a sweep as **one** ``jax.lax.scan`` over the tile
-axis, one batched accumulator init, and one batched apply — ~4 dispatches
-per sweep regardless of P. Results are bit-identical to the per-block path
-for all of SPU/DPU/MPU (see :class:`~repro.core.dsss.PackedSweep` for why
-row-major tile order reproduces every schedule's fold order exactly), and
-the modelled byte/edge meters are computed from the packed metadata to be
-field-for-field identical. Packed execution applies under device residency
-only; host-streamed residency keeps the per-block fetcher path (streaming
-is inherently per-block — that is where the bytes move).
+:class:`repro.core.dsss.PackedSweep` tile layout once — destination-
+aligned fixed-size tiles cut only at destination-run boundaries, so
+padding stays bounded on power-law graphs instead of being dictated by the
+largest hub-heavy sub-shard — and runs the entire gather-reduce phase of a
+sweep as **one** ``jax.lax.scan`` over the tile axis, one batched
+accumulator init, and one batched apply — ~4 dispatches per sweep
+regardless of P. Results are bit-identical to the per-block path for all
+of SPU/DPU/MPU (see :class:`~repro.core.dsss.PackedSweep` for why the
+run-aligned stream order reproduces every schedule's fold order exactly),
+and the modelled byte/edge meters are computed from the packed metadata to
+be field-for-field identical. Under enforced host residency the packed
+path does not downgrade: the tile axis is chunked and streamed
+host→device with the same double-buffered prefetch discipline as
+:class:`_BlockFetcher` (a budget-pinned tile prefix stays device-resident,
+each streamed chunk charges ``bytes_h2d``), so SPU/DPU/MPU all run packed
+out-of-core.
 """
 from __future__ import annotations
 
@@ -70,13 +76,35 @@ from repro.core.vertex_programs import VertexProgram, reduce_identity
 __all__ = [
     "GraphSession",
     "Meters",
+    "MODEL_METER_FIELDS",
     "Result",
     "BatchResult",
     "CompiledPlan",
+    "PackedStreamPlan",
     "IdentityLRU",
     "get_session",
     "clear_session_cache",
 ]
+
+
+# The *modelled* Meters fields — identical across execution modes and
+# residencies by contract (tests/test_packed_sweep.py, the residency
+# property suite and bench_sweep all compare exactly this set; keeping the
+# one list here is what stops the three from drifting when a field is
+# added). The remaining fields (wall_seconds, bytes_h2d,
+# peak_device_graph_bytes) are physical: they describe whichever data path
+# actually ran.
+MODEL_METER_FIELDS = (
+    "bytes_read_edges",
+    "bytes_read_intervals",
+    "bytes_read_hubs",
+    "bytes_written_hubs",
+    "bytes_written_intervals",
+    "iterations",
+    "blocks_processed",
+    "blocks_skipped",
+    "edges_processed",
+)
 
 
 @dataclasses.dataclass
@@ -111,6 +139,10 @@ class Meters:
     blocks_skipped: int = 0
     edges_processed: int = 0
     wall_seconds: float = 0.0
+
+    def model_dict(self) -> dict:
+        """The modelled fields only (see :data:`MODEL_METER_FIELDS`)."""
+        return {f: getattr(self, f) for f in MODEL_METER_FIELDS}
 
     @property
     def bytes_read(self) -> float:
@@ -212,9 +244,30 @@ class CompiledPlan:
     resident: frozenset
     residency: str = "device"
     # Resolved execution mode: "packed" iff the compiled sweep path will
-    # actually run (device residency + SPU/DPU/MPU schedule), else
+    # actually run (an SPU/DPU/MPU schedule — either residency), else
     # "per_block". Never "auto".
     execution: str = "per_block"
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedStreamPlan:
+    """How packed execution places tiles under enforced host residency.
+
+    ``pin_tiles`` leading tiles stay device-resident (the budget's fast
+    tier, mirroring the per-block resident set: SPU pins the leftover
+    after both attribute copies, DPU/MPU pin nothing — their I/O model
+    streams every edge); the remaining tiles are streamed per sweep in
+    chunks of ``chunk_tiles``, double-buffered, so peak device topology is
+    the pinned prefix plus at most two chunks (``max_chunk_model_bytes``
+    each — the packed counterpart of the per-block two-block slack).
+    """
+
+    pin_tiles: int
+    chunk_tiles: int
+    num_tiles: int
+    tile_edges: int
+    pin_model_bytes: float  # real-edge model bytes of the pinned prefix
+    max_chunk_model_bytes: float  # largest streamed chunk, model units
 
 
 # ---------------------------------------------------------------------------
@@ -425,12 +478,15 @@ def _fused_iteration(
 # ---------------------------------------------------------------------------
 # Compiled (tile-packed) sweep primitives. One jax.lax.scan over the packed
 # tile axis replaces the per-sub-shard dispatch loop: the whole gather-reduce
-# phase of an update sweep is a single XLA program. Bit-identity with the
-# per-block path holds because (a) tiles are whole sub-shards (no float
-# re-association across tile splits), (b) row-major tile order folds each
-# destination interval in ascending source-interval order — the fold order
-# of SPU and of the DPU/MPU two-phase schedules alike — and (c) masked-off
-# tiles (inactive rows, padding) contribute exact ⊕-identities.
+# phase of an update sweep is a single XLA program (or, under host
+# residency, one program per streamed tile chunk). Bit-identity with the
+# per-block path holds because (a) tiles are cut only at destination-run
+# boundaries, so every (sub-shard, destination) partial ⊕ is computed over
+# the same values in the same order as the per-block segment reduce,
+# (b) stream order folds each destination's sub-shard partials in ascending
+# source-interval order — the fold order of SPU and of the DPU/MPU
+# two-phase schedules alike — and (c) padding and inactive-row edges
+# contribute exact ⊕-identities.
 # ---------------------------------------------------------------------------
 def _stack_interval_aux(aux: dict, P: int, isz: int) -> dict:
     """Reshape 1-D (n_pad,) aux leaves to (P, isz) interval rows in-trace."""
@@ -442,75 +498,76 @@ def _stack_interval_aux(aux: dict, P: int, isz: int) -> dict:
 
 def _packed_sweep_impl(
     program: VertexProgram,
-    attrs: jnp.ndarray,  # (K, P, isz) previous attributes (read-only)
-    acc: jnp.ndarray,  # (K, P, isz) running ⊕ accumulators (donatable)
+    attrs_flat: jnp.ndarray,  # (K, n_pad) previous attributes (read-only)
+    acc_flat: jnp.ndarray,  # (K, n_pad) running ⊕ accumulators (donatable)
     aux: dict,  # run-constant aux, (n_pad,) or scalar leaves
     tiles: dict,  # PackedSweep device arrays, (NT, ...) leaves
     row_active: jnp.ndarray,  # (P,) bool — sweep's active source intervals
     has_weights: bool,
 ):
-    """The entire gather-reduce phase of one update sweep, compiled once.
+    """The gather-reduce phase of one update sweep over a tile sequence.
 
-    Scans the packed tiles in row-major sub-shard order; each step gathers
-    one tile's source interval, segment-reduces over its destinations and
-    folds the result into that tile's destination-interval accumulator.
-    Tiles whose source interval is inactive this sweep (monotone activity
-    tracking) get ``e_valid = 0``, so they fold exact identities — the
-    compiled equivalent of the per-block schedule skipping the row.
+    Each scan step processes one destination-aligned tile: gather source
+    attributes/aux by the tile's global ``src`` ids, segment-reduce the
+    contributions by ``run_local`` (the ToHub windowed partial — one
+    segment per (sub-shard, destination) run), then scatter-fold the run
+    partials into the flat accumulator at ``run_dst`` (the FromHub fold).
+    Update order within the scatter is ascending run order, i.e. exactly
+    the schedules' ascending-source-interval fold order.
+
+    Edges past ``e_valid`` (tile padding) and edges whose source interval
+    is inactive this sweep (monotone activity tracking — the (P,) row
+    mask is expanded to a per-vertex mask in-trace, so only P bools cross
+    the host→device boundary per sweep) contribute exact ⊕-identities;
+    padded run slots carry the ``n_pad`` sentinel in ``run_dst`` and are
+    dropped by the scatter. Called once over all tiles under device
+    residency, and once per streamed chunk (same executable, smaller
+    leading axis) under host residency — the scan carry composes exactly.
     """
-    K, P, isz = attrs.shape
-    aux2 = _stack_interval_aux(aux, P, isz)
+    T = tiles["src"].shape[-1]
+    n_pad = attrs_flat.shape[-1]
+    vert_active = jnp.repeat(
+        row_active, n_pad // row_active.shape[0], total_repeat_length=n_pad
+    )
 
     def body(carry, tile):
-        si = tile["src_iv"]
-        di = tile["dst_iv"]
-        sl = tile["src_local"]
-        dl = tile["dst_local"]
+        src = tile["src"]
+        dst = tile["dst"]
+        run = tile["run_local"]
+        run_dst = tile["run_dst"]
         w = tile["weights"] if has_weights else None
-        ev = jnp.where(row_active[si], tile["e_valid"], 0)
-        prev = jax.lax.dynamic_index_in_dim(attrs, si, axis=1, keepdims=False)
+        mask = (jnp.arange(T) < tile["e_valid"]) & vert_active[src]
         s_aux = {
-            k: (
-                jax.lax.dynamic_index_in_dim(v, si, axis=0, keepdims=False)[sl]
-                if getattr(v, "ndim", 0) == 2
-                else v
-            )
-            for k, v in aux2.items()
+            k: (v[src] if getattr(v, "ndim", 0) == 1 else v)
+            for k, v in aux.items()
         }
         d_aux = (
             {
-                k: (
-                    jax.lax.dynamic_index_in_dim(v, di, axis=0, keepdims=False)[dl]
-                    if getattr(v, "ndim", 0) == 2
-                    else v
-                )
-                for k, v in aux2.items()
+                k: (v[dst] if getattr(v, "ndim", 0) == 1 else v)
+                for k, v in aux.items()
             }
             if program.needs_dst_aux
             else None
         )
-        acc_j = jax.lax.dynamic_index_in_dim(carry, di, axis=1, keepdims=False)
 
-        def one(pv, aj):
-            vals = pv[sl]
+        def one(pv, aq):
+            vals = pv[src]
             contrib = program.gather(vals, w, s_aux, d_aux)
             ident = reduce_identity(program.reduce, contrib.dtype)
-            mask = jnp.arange(contrib.shape[0]) < ev
             contrib = jnp.where(mask, contrib, ident)
             if program.reduce == "sum":
-                red = jax.ops.segment_sum(contrib, dl, num_segments=isz)
-                return jnp.add(aj, red.astype(aj.dtype))
+                red = jax.ops.segment_sum(contrib, run, num_segments=T)
+                return aq.at[run_dst].add(red.astype(aq.dtype), mode="drop")
             if program.reduce == "min":
-                red = jax.ops.segment_min(contrib, dl, num_segments=isz)
-                return jnp.minimum(aj, red.astype(aj.dtype))
-            red = jax.ops.segment_max(contrib, dl, num_segments=isz)
-            return jnp.maximum(aj, red.astype(aj.dtype))
+                red = jax.ops.segment_min(contrib, run, num_segments=T)
+                return aq.at[run_dst].min(red.astype(aq.dtype), mode="drop")
+            red = jax.ops.segment_max(contrib, run, num_segments=T)
+            return aq.at[run_dst].max(red.astype(aq.dtype), mode="drop")
 
-        new_j = jax.vmap(one)(prev, acc_j)
-        return jax.lax.dynamic_update_index_in_dim(carry, new_j, di, axis=1), None
+        return jax.vmap(one)(attrs_flat, carry), None
 
-    acc, _ = jax.lax.scan(body, acc, tiles)
-    return acc
+    acc_flat, _ = jax.lax.scan(body, acc_flat, tiles)
+    return acc_flat
 
 
 def _apply_all_impl(
@@ -582,6 +639,7 @@ class _RunContext:
     valid: jnp.ndarray  # (P, isize) bool
     tol: jnp.ndarray
     K: int
+    residency: str = "device"  # resolved placement ("device" | "host")
     fetcher: _BlockFetcher = None  # type: ignore[assignment]
 
     @property
@@ -911,12 +969,89 @@ def _charge_packed_two_phase(
     return None
 
 
+def _packed_host_chunk(packed, lo: int, hi: int, has_weights: bool) -> dict:
+    """Host (numpy) views of tiles [lo, hi) in the streaming leaf schema."""
+    chunk = {
+        "src": packed.src[lo:hi],
+        "dst": packed.dst[lo:hi],
+        "run_local": packed.run_local[lo:hi],
+        "run_dst": packed.run_dst[lo:hi],
+        "e_valid": packed.e_valid[lo:hi],
+    }
+    if has_weights:
+        chunk["weights"] = packed.weights[lo:hi]
+    return chunk
+
+
+def _chunk_nbytes(chunk: dict) -> int:
+    return sum(a.nbytes for a in chunk.values())
+
+
+def _packed_host_sweep(
+    ctx: _RunContext, attrs_flat, acc, row_active, meters: Meters, sweep
+):
+    """Host-resident packed execution: stream tile chunks through the scan.
+
+    The pinned tile prefix (what the memory budget keeps device-resident,
+    see :meth:`GraphSession.packed_stream_plan`) runs first from its staged
+    device arrays; the remaining tiles are cut into fixed chunks and
+    streamed host→device with the same double-buffered discipline as
+    :class:`_BlockFetcher` — while chunk ``c`` computes, chunk ``c+1``'s
+    transfer is already in flight (``jax.device_put`` is async). Each
+    streamed chunk charges its raw padded bytes to ``bytes_h2d`` and its
+    real-edge model bytes to the ``peak_device_graph_bytes`` high-water
+    mark (pinned prefix + at most two in-flight chunks). The *model* byte
+    meters are charged from metadata exactly as under device residency —
+    physical streaming never changes them.
+    """
+    sess, prog = ctx.session, ctx.program
+    packed = sess._staged.packed_host(sess.packing)
+    splan = sess.packed_stream_plan(ctx.choice.strategy, ctx.params.Ba)
+    hw = sess.has_weights
+    pins, pin_model = sess._ensure_packed_pins(splan.pin_tiles)
+    meters.peak_device_graph_bytes = max(
+        meters.peak_device_graph_bytes, pin_model
+    )
+    if pins is not None:
+        acc = sweep(
+            prog, attrs_flat, acc, ctx.aux, pins, row_active, has_weights=hw
+        )
+    nt = packed.num_tiles
+    if splan.pin_tiles >= nt:
+        return acc
+    Be = sess.Be
+    starts = list(range(splan.pin_tiles, nt, splan.chunk_tiles))
+
+    def fetch(idx: int) -> tuple[dict, Any, float]:
+        lo = starts[idx]
+        hi = min(lo + splan.chunk_tiles, nt)
+        host = _packed_host_chunk(packed, lo, hi, hw)
+        model = float(packed.e_valid[lo:hi].sum()) * Be
+        return host, jax.device_put(host), model
+
+    cur = fetch(0)
+    for idx in range(len(starts)):
+        nxt = fetch(idx + 1) if idx + 1 < len(starts) else None
+        host, dev, model = cur
+        meters.bytes_h2d += _chunk_nbytes(host)
+        live = pin_model + model + (nxt[2] if nxt is not None else 0.0)
+        meters.peak_device_graph_bytes = max(
+            meters.peak_device_graph_bytes, live
+        )
+        acc = sweep(
+            prog, attrs_flat, acc, ctx.aux, dev, row_active, has_weights=hw
+        )
+        cur = nxt
+    return acc
+
+
 def _iteration_packed(ctx: _RunContext, attrs, active, meters: Meters):
     """One update sweep as ~4 XLA dispatches, for any of SPU/DPU/MPU.
 
     pre-iteration globals → one accumulator init → one scan over the
-    packed tiles → one batched apply. The per-strategy slow-tier meters
-    are charged from the packed metadata before the compiled pass runs.
+    packed tiles (or one per streamed tile chunk under host residency) →
+    one batched apply. The per-strategy slow-tier meters are charged from
+    the packed metadata before the compiled pass runs.
     """
     sess, prog = ctx.session, ctx.program
     g = sess.graph
@@ -929,17 +1064,23 @@ def _iteration_packed(ctx: _RunContext, attrs, active, meters: Meters):
         _charge_packed_two_phase(
             ctx, rows, meters, Q=0 if strategy == "dpu" else ctx.choice.Q
         )
-    tiles = sess._staged.packed_tiles()
     globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
     ident = reduce_identity(prog.reduce, prog.dtype)
-    acc = jnp.full((K, g.P, g.interval_size), ident, prog.dtype)
+    attrs_flat = attrs.reshape(K, g.n_pad)
+    acc = jnp.full((K, g.n_pad), ident, prog.dtype)
     row_mask = np.zeros(g.P, dtype=bool)
     row_mask[rows] = True
+    row_active = jnp.asarray(row_mask)
     sweep, apply_all = _packed_jits(jax.default_backend() != "cpu")
-    acc = sweep(
-        prog, attrs, acc, ctx.aux, tiles, jnp.asarray(row_mask),
-        has_weights=sess.has_weights,
-    )
+    if ctx.residency == "host":
+        acc = _packed_host_sweep(ctx, attrs_flat, acc, row_active, meters, sweep)
+    else:
+        tiles = sess._staged.packed_tiles(sess.packing)
+        acc = sweep(
+            prog, attrs_flat, acc, ctx.aux, tiles, row_active,
+            has_weights=sess.has_weights,
+        )
+    acc = acc.reshape(K, g.P, g.interval_size)
     new, changed = apply_all(
         prog, attrs, acc, ctx.aux, globals_, ctx.valid, ctx.tol
     )
@@ -995,7 +1136,8 @@ class _StagedGraph:
         self.host_blocks = graph.host_blocks()
         self.block_keys = frozenset(self.host_blocks)
         self._device_blocks: dict[tuple[int, int], dict] | None = None
-        self._packed_tiles: dict | None = None
+        self._packed_host: dict[str, Any] = {}  # packing mode -> PackedSweep
+        self._packed_tiles: dict[str, dict] = {}  # packing mode -> device leaves
         self.fused: dict | None = None
         self.kernel_operands: dict[tuple, tuple] = {}
 
@@ -1007,29 +1149,45 @@ class _StagedGraph:
             }
         return self._device_blocks
 
-    def packed_tiles(self) -> dict:
+    def packed_host(self, mode: str):
+        """The host-side :class:`~repro.core.dsss.PackedSweep`, built once.
+
+        This is the streaming source of truth under host residency (tile
+        chunks are sliced straight out of these numpy arrays) and the
+        metadata source for meters, stream planning and tests.
+        """
+        packed = self._packed_host.get(mode)
+        if packed is None:
+            packed = self.graph.packed_sweep(mode)
+            self._packed_host[mode] = packed
+        return packed
+
+    def packed_tiles(self, mode: str) -> dict:
         """Device arrays of the tile-packed sweep layout, staged once.
 
-        The scan carries exactly these leaves per tile (src/dst offsets,
-        weights when present, the valid edge count and the (i, j) interval
-        ids); hub-window metadata (``base_slot``/``u``) stays host-side on
-        the :class:`~repro.core.dsss.PackedSweep` for meter accounting and
-        kernel-path consumers. Packed mode never stages the per-block
-        device mirror — these arrays *are* the device topology.
+        The scan carries exactly these leaves per tile (global endpoint
+        ids, windowed run slots, the run→destination scatter map, weights
+        when present, and the valid edge count); per-tile metadata
+        (``base_slot``/``u``/``row_offset``/intervals) stays host-side on
+        the :class:`~repro.core.dsss.PackedSweep` for meter accounting,
+        stream planning and kernel-path consumers. Packed device mode
+        never stages the per-block device mirror — these arrays *are* the
+        device topology.
         """
-        if self._packed_tiles is None:
-            packed = self.graph.packed_sweep(self.host_blocks)
+        tiles = self._packed_tiles.get(mode)
+        if tiles is None:
+            packed = self.packed_host(mode)
             tiles = {
-                "src_local": jnp.asarray(packed.src_local),
-                "dst_local": jnp.asarray(packed.dst_local),
+                "src": jnp.asarray(packed.src),
+                "dst": jnp.asarray(packed.dst),
+                "run_local": jnp.asarray(packed.run_local),
+                "run_dst": jnp.asarray(packed.run_dst),
                 "e_valid": jnp.asarray(packed.e_valid),
-                "src_iv": jnp.asarray(packed.src_interval),
-                "dst_iv": jnp.asarray(packed.dst_interval),
             }
             if packed.weights is not None:
                 tiles["weights"] = jnp.asarray(packed.weights)
-            self._packed_tiles = tiles
-        return self._packed_tiles
+            self._packed_tiles[mode] = tiles
+        return tiles
 
 
 class _BlockFetcher:
@@ -1169,17 +1327,28 @@ class GraphSession:
 
         * ``"per_block"`` — the host-scheduled legacy path: one jit
           dispatch per sub-shard through :class:`_BlockFetcher` (O(P²)
-          host round-trips per sweep). Always used for host-streamed
-          residency and for custom/fused strategies.
+          host round-trips per sweep). Always used for custom/fused
+          strategies.
         * ``"packed"`` — the compiled sweep path: the
           :class:`repro.core.dsss.PackedSweep` tile layout is staged once
           and every update sweep runs as one ``lax.scan`` + one batched
-          apply (~4 dispatches per sweep, independent of P). Bit-identical
-          results and field-for-field identical meters. Applies under
-          device residency with an SPU/DPU/MPU schedule; anything else
-          downgrades to ``"per_block"`` (streaming is inherently
-          per-block; custom schedules own their own loop).
+          apply (~4 dispatches per sweep, independent of P). Under host
+          residency the tile stream is chunked and streamed host→device
+          with double-buffered prefetch (see
+          :meth:`packed_stream_plan`) instead of staging — packed
+          execution no longer downgrades out-of-core. Bit-identical
+          results and field-for-field identical *model* meters either
+          way (``bytes_h2d``/``peak_device_graph_bytes`` report the
+          physical transfers of whichever path ran). Custom and fused
+          schedules downgrade to ``"per_block"`` (they own their loop).
         * ``"auto"`` (default) — ``"packed"`` wherever it applies.
+
+      packing: tile layout for the packed path — ``"adaptive"``
+        (destination-aligned fixed-size tiles, chosen per graph to bound
+        padding; the default for DSSS layouts), ``"subshard"`` (legacy
+        one-tile-per-largest-sub-shard; forced for ``src_sorted`` graphs,
+        whose scrambled destination runs only whole-sub-shard windows
+        reduce correctly), or ``"auto"``.
 
       Be: bytes per edge in the I/O model (8 = two int32 ids; +4 is added
         automatically for weighted graphs).
@@ -1206,6 +1375,7 @@ class GraphSession:
         memory_budget: int | None = None,
         residency: str = "auto",
         execution: str = "auto",
+        packing: str = "auto",
         Be: int = 8,
         Bv: int = 4,
         staged: _StagedGraph | None = None,
@@ -1219,10 +1389,28 @@ class GraphSession:
                 "execution must be 'per_block', 'packed' or 'auto', "
                 f"got {execution!r}"
             )
+        if packing not in ("adaptive", "subshard", "auto"):
+            raise ValueError(
+                "packing must be 'adaptive', 'subshard' or 'auto', "
+                f"got {packing!r}"
+            )
         self.graph = graph
         self.memory_budget = memory_budget
         self.residency = residency
         self.execution = execution
+        # Tile-packing layout for the compiled sweep path: "adaptive"
+        # (destination-aligned fixed-size tiles) wherever the DSSS layout
+        # allows it; src_sorted (GraphChi-like) graphs scramble destination
+        # runs inside blocks, so only the whole-sub-shard packing groups
+        # their per-destination reduces correctly.
+        if packing == "auto":
+            packing = "subshard" if graph.src_sorted else "adaptive"
+        elif packing == "adaptive" and graph.src_sorted:
+            raise ValueError(
+                "packing='adaptive' requires destination-sorted sub-shards; "
+                "src_sorted graphs support only packing='subshard'"
+            )
+        self.packing = packing
         self.has_weights = graph.weights is not None
         self.Be = Be + (4 if self.has_weights else 0)
         self.Bv = Bv
@@ -1233,6 +1421,9 @@ class GraphSession:
         self._residency: dict[int, frozenset] = {}  # Ba -> resident set
         self._compiled: dict[tuple, CompiledPlan] = {}
         self._pinned: dict[tuple[int, int], dict] = {}  # host mode device pins
+        # Packed host-mode pins: (pin_tiles, device leaves, model, actual).
+        self._packed_pins: tuple[int, dict | None, float, float] | None = None
+        self._stream_plans: dict[tuple[bool, int], PackedStreamPlan] = {}
 
     @property
     def block_keys(self) -> frozenset:
@@ -1274,25 +1465,30 @@ class GraphSession:
 
         ``strategy`` must already be resolved (a schedule name, not
         "auto") and ``residency`` must be 'device' or 'host'. The packed
-        path applies only to the native block schedules under device
-        residency; every other combination — host streaming, the fused
-        fast path, custom registered schedules — runs per-block, even
-        when "packed" was requested explicitly (a forgiving downgrade,
-        like residency="auto": results and meters are identical).
+        path applies to the native block schedules (SPU/DPU/MPU) under
+        *both* residencies — under "host" the tile chunks are streamed
+        with double-buffered prefetch instead of the per-block fetcher, so
+        out-of-core runs no longer downgrade. The fused fast path and
+        custom registered schedules run per-block even when "packed" was
+        requested explicitly (a forgiving downgrade, like
+        residency="auto": results and meters are identical).
         """
         mode = override or self.execution
-        applies = residency == "device" and strategy in ("spu", "dpu", "mpu")
+        applies = strategy in ("spu", "dpu", "mpu")
         if mode == "auto" or (mode == "packed" and not applies):
             mode = "packed" if applies else "per_block"
         return mode
 
     # -- budget accounting ---------------------------------------------------
     def pinned_device_bytes(self) -> tuple[float, float]:
-        """(model, actual) bytes of the currently device-pinned edge blocks.
+        """(model, actual) bytes of the currently device-pinned topology.
 
-        Model bytes use the I/O-model accounting (``e·Be`` per block, the
+        Covers both pinning mechanisms — per-block pins (per-block host
+        execution) and the packed tile-prefix pins (packed host execution);
+        at most one is populated at a time (each releases the other).
+        Model bytes use the I/O-model accounting (``e·Be`` real edges, the
         same units as ``memory_budget``); actual bytes are the raw padded
-        buffer sizes (bucket padding makes them up to ~2× larger).
+        buffer sizes (bucket/tile padding makes them larger).
         """
         model = float(
             sum(self.host_blocks[k]["e"] * self.Be for k in self._pinned)
@@ -1300,7 +1496,85 @@ class GraphSession:
         actual = float(
             sum(_host_block_nbytes(self.host_blocks[k]) for k in self._pinned)
         )
+        if self._packed_pins is not None:
+            model += self._packed_pins[2]
+            actual += self._packed_pins[3]
         return model, actual
+
+    def packed_stream_plan(self, strategy: str, Ba: int) -> PackedStreamPlan:
+        """Tile placement for packed execution under host residency.
+
+        Mirrors :meth:`_resolve_residency`'s budget semantics at tile
+        granularity: for SPU the budget leftover after both attribute
+        copies (``2·n_pad·Ba``) pins a prefix of the tile stream; DPU/MPU
+        pin no edge topology (their Table II model streams ``m·Be`` every
+        sweep). The streamed remainder is chunked to at most
+        ``min(256 KiB, budget/4)`` of tile data per chunk (never below one
+        tile), so tight budgets stream tile-by-tile while generous ones
+        amortise dispatches — the double buffer keeps ≤ 2 chunks in
+        flight.
+        """
+        pins_apply = strategy == "spu"
+        key = (pins_apply, Ba)
+        plan = self._stream_plans.get(key)
+        if plan is not None:
+            return plan
+        packed = self._staged.packed_host(self.packing)
+        nt, T = packed.num_tiles, packed.tile_edges
+        Be = self.Be
+        cum = np.cumsum(packed.e_valid.astype(np.int64)) * Be
+        if self.memory_budget is None:
+            pin = nt
+        elif pins_apply:
+            leftover = self.memory_budget - 2 * self.graph.n_pad * Ba
+            pin = int(np.searchsorted(cum, leftover, side="right"))
+        else:
+            pin = 0
+        pin_model = float(cum[pin - 1]) if pin else 0.0
+        tile_bytes = max(T * Be, 1)
+        target = 256 * 1024
+        if self.memory_budget is not None:
+            target = min(target, max(self.memory_budget // 4, tile_bytes))
+        chunk = max(1, min(int(target // tile_bytes), max(nt - pin, 1)))
+        max_chunk = 0.0
+        for lo in range(pin, nt, chunk):
+            hi = min(lo + chunk, nt)
+            hi_cum = float(cum[hi - 1])
+            lo_cum = float(cum[lo - 1]) if lo else 0.0
+            max_chunk = max(max_chunk, hi_cum - lo_cum)
+        plan = PackedStreamPlan(
+            pin_tiles=pin,
+            chunk_tiles=chunk,
+            num_tiles=nt,
+            tile_edges=T,
+            pin_model_bytes=pin_model,
+            max_chunk_model_bytes=max_chunk,
+        )
+        self._stream_plans[key] = plan
+        return plan
+
+    def _ensure_packed_pins(self, pin_tiles: int) -> tuple[dict | None, float]:
+        """Device-pin exactly the leading ``pin_tiles`` tiles (host mode).
+
+        Returns ``(device leaves or None, model bytes)``. Like
+        :meth:`_ensure_pinned`, a changed pin count releases the previous
+        device copies first; the per-block pin dict is also released (the
+        two mechanisms must never both occupy the device).
+        """
+        self._pinned.clear()
+        if self._packed_pins is not None and self._packed_pins[0] == pin_tiles:
+            return self._packed_pins[1], self._packed_pins[2]
+        self._packed_pins = None
+        if pin_tiles <= 0:
+            self._packed_pins = (0, None, 0.0, 0.0)
+            return None, 0.0
+        packed = self._staged.packed_host(self.packing)
+        host = _packed_host_chunk(packed, 0, pin_tiles, self.has_weights)
+        dev = jax.device_put(host)
+        model = float(packed.e_valid[:pin_tiles].sum()) * self.Be
+        actual = float(_chunk_nbytes(host))
+        self._packed_pins = (pin_tiles, dev, model, actual)
+        return dev, model
 
     # -- strategy registry ---------------------------------------------------
     @classmethod
@@ -1435,8 +1709,10 @@ class GraphSession:
         Blocks leaving the resident set are released so successive plans
         with different strategies/budgets cannot accumulate device copies
         past the budget; blocks entering it are uploaded once and reused
-        across runs.
+        across runs. Packed tile pins are released for the same reason —
+        only one pinning mechanism may occupy the device at a time.
         """
+        self._packed_pins = None
         for key in [k for k in self._pinned if k not in resident]:
             del self._pinned[key]
         for key in sorted(resident):
@@ -1514,8 +1790,13 @@ class GraphSession:
         active = np.stack([prog.init_active(g, **kw) for kw in kwargs_list])
         aux = prog.make_aux(g, **kwargs_list[0])
         meters = Meters()
+        # Per-block host runs pin the resident set here; packed host runs
+        # pin a tile prefix lazily inside the sweep (the block pins would
+        # double-book the device). Device runs leave pins untouched.
         pinned = (
             self._ensure_pinned(compiled.resident)
+            if compiled.residency == "host" and compiled.execution != "packed"
+            else {}
             if compiled.residency == "host"
             else self._pinned
         )
@@ -1539,6 +1820,7 @@ class GraphSession:
             valid=(jnp.arange(g.n_pad) < g.n).reshape(g.P, isz),
             tol=jnp.asarray(plan.tol, jnp.float32),
             K=K,
+            residency=compiled.residency,
             fetcher=fetcher,
         )
         if compiled.execution == "packed":
@@ -1639,6 +1921,7 @@ def get_session(
     memory_budget: int | None = None,
     residency: str = "auto",
     execution: str = "auto",
+    packing: str = "auto",
     Be: int = 8,
     Bv: int = 4,
 ) -> GraphSession:
@@ -1647,13 +1930,14 @@ def get_session(
     Only use this for graph objects the caller keeps alive across calls;
     for a throwaway graph, construct :class:`GraphSession` directly so the
     staged blocks die with it instead of pinning an LRU slot. Variants
-    (budget/residency/execution/byte sizes) share one set of host buffers,
-    one lazily-staged device mirror and one packed tile layout.
+    (budget/residency/execution/packing/byte sizes) share one set of host
+    buffers, one lazily-staged device mirror and one packed tile layout
+    per packing mode.
     """
     slot = _SESSION_LRU.get_or_build(
         graph, (), lambda: {"staged": _StagedGraph(graph), "variants": {}}
     )
-    key = (memory_budget, residency, execution, Be, Bv)
+    key = (memory_budget, residency, execution, packing, Be, Bv)
     session = slot["variants"].get(key)
     if session is None:
         session = GraphSession(
@@ -1661,6 +1945,7 @@ def get_session(
             memory_budget=memory_budget,
             residency=residency,
             execution=execution,
+            packing=packing,
             Be=Be,
             Bv=Bv,
             staged=slot["staged"],

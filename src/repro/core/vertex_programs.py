@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.identities import INF_DEPTH, reduce_identity
+
 __all__ = [
     "VertexProgram",
     "PageRank",
@@ -34,9 +36,8 @@ __all__ = [
     "MaxLabelForward",
     "ReachBackward",
     "INF_DEPTH",
+    "reduce_identity",
 ]
-
-INF_DEPTH = np.int32(2**30)
 
 
 def _check_root(g, root: int) -> None:
@@ -48,22 +49,8 @@ def _check_root(g, root: int) -> None:
         )
 
 
-def reduce_identity(reduce: str, dtype) -> Any:
-    if reduce == "sum":
-        return jnp.zeros((), dtype)
-    if reduce == "min":
-        return (
-            jnp.array(INF_DEPTH, dtype)
-            if jnp.issubdtype(dtype, jnp.integer)
-            else jnp.array(jnp.inf, dtype)
-        )
-    if reduce == "max":
-        return (
-            jnp.array(-INF_DEPTH, dtype)
-            if jnp.issubdtype(dtype, jnp.integer)
-            else jnp.array(-jnp.inf, dtype)
-        )
-    raise ValueError(f"unknown reduce {reduce!r}")
+# reduce_identity lives in repro.core.identities (shared with the kernel
+# path's padding identities); re-exported here for existing importers.
 
 
 @dataclasses.dataclass(frozen=True)

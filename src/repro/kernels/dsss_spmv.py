@@ -36,7 +36,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dsss_spmv_block_partials", "E_BLK", "MINMAX_CHUNK"]
+from repro.core.identities import padding_identity
+
+__all__ = [
+    "dsss_spmv_block_partials",
+    "default_interpret",
+    "E_BLK",
+    "MINMAX_CHUNK",
+]
 
 E_BLK = 512  # edges per block; also the hub-slot window width W
 
@@ -49,12 +56,15 @@ MINMAX_CHUNK = 128
 assert E_BLK % MINMAX_CHUNK == 0, "chunked min/max reduce needs E_BLK % chunk == 0"
 
 
-def _identity(reduce: str, dtype):
-    if reduce == "sum":
-        return jnp.zeros((), dtype)
-    # ±inf for floats so empty slots match jax.ops.segment_min/max exactly.
-    big = jnp.inf if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max
-    return jnp.array(big if reduce == "min" else -big, dtype)
+def default_interpret() -> bool:
+    """Auto-select Pallas interpret mode: compile on TPU, interpret elsewhere.
+
+    The kernel targets the TPU lowering; on CPU/GPU backends (this
+    container, most CI) only the interpreter can execute it. Callers pass
+    ``interpret=None`` to defer to this probe; an explicit bool always
+    wins (e.g. interpret=True on TPU to debug the kernel itself).
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(
@@ -94,7 +104,7 @@ def _kernel(
         # size and blows VMEM on BFS/SSSP tiles; the chunked compare keeps
         # peak live values at O(MINMAX_CHUNK · W) while staying VPU-shaped
         # (min/max re-association is exact, so results are unchanged).
-        ident = _identity(reduce, contrib_dtype)
+        ident = padding_identity(reduce, contrib_dtype)
         iota_w = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
         num_chunks = slots.shape[0] // MINMAX_CHUNK
 
@@ -115,9 +125,6 @@ def _kernel(
         out_ref[...] = red[None, :]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("gather_op", "reduce", "interpret")
-)
 def dsss_spmv_block_partials(
     src_vals: jax.Array,  # (isize,) float
     src_idx: jax.Array,  # (E_pad,) int32, E_pad % E_BLK == 0
@@ -127,9 +134,28 @@ def dsss_spmv_block_partials(
     *,
     gather_op: str = "mul",
     reduce: str = "sum",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Run the kernel over all edge blocks; returns (num_blocks, W) partials."""
+    """Run the kernel over all edge blocks; returns (num_blocks, W) partials.
+
+    ``interpret=None`` (default) resolves via :func:`default_interpret` —
+    compiled on TPU, interpreted elsewhere.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _block_partials_jit(
+        src_vals, src_idx, hub_inv, weights, block_base,
+        gather_op=gather_op, reduce=reduce, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gather_op", "reduce", "interpret")
+)
+def _block_partials_jit(
+    src_vals, src_idx, hub_inv, weights, block_base,
+    *, gather_op: str, reduce: str, interpret: bool,
+) -> jax.Array:
     e_pad = src_idx.shape[0]
     assert e_pad % E_BLK == 0, f"pad edges to a multiple of {E_BLK}"
     num_blocks = e_pad // E_BLK

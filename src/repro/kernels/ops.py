@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.identities import padding_identity_value
 from repro.kernels import ref as _ref
-from repro.kernels.dsss_spmv import E_BLK, dsss_spmv_block_partials
+from repro.kernels.dsss_spmv import E_BLK, default_interpret, dsss_spmv_block_partials
 from repro.kernels.flash_attention import flash_attention
 
 __all__ = [
@@ -24,19 +25,10 @@ __all__ = [
     "prepare_subshard_operands",
     "prepare_from_subshard",
     "prepare_from_host_block",
+    "prepare_from_packed_tile",
+    "default_interpret",
     "E_BLK",
 ]
-
-
-def _identity_value(reduce: str, dtype) -> float:
-    if reduce == "sum":
-        return 0.0
-    big = (
-        float("inf")
-        if jnp.issubdtype(dtype, jnp.floating)
-        else int(jnp.iinfo(dtype).max)
-    )
-    return big if reduce == "min" else -big
 
 
 def prepare_subshard_operands(
@@ -62,7 +54,11 @@ def prepare_subshard_operands(
     e = len(src_local)
     e_pad = max(E_BLK, -(-e // E_BLK) * E_BLK)
     pad = e_pad - e
-    ident_w = _identity_value(reduce, jnp.dtype(dtype)) if gather_op == "add" else 0.0
+    ident_w = (
+        padding_identity_value(reduce, jnp.dtype(dtype))
+        if gather_op == "add"
+        else 0.0
+    )
     src_idx = np.pad(src_local, (0, pad))
     hub_inv = np.pad(
         hub_inv_global, (0, pad), constant_values=hub_inv_global[-1] if e else 0
@@ -117,9 +113,6 @@ def prepare_from_host_block(blk: dict, dtype, *, gather_op: str, reduce: str):
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_slots", "gather_op", "reduce", "interpret")
-)
 def subshard_update(
     src_vals: jax.Array,  # (isize,)
     src_idx: jax.Array,  # (E_pad,) from prepare_subshard_operands
@@ -130,9 +123,66 @@ def subshard_update(
     *,
     gather_op: str = "mul",
     reduce: str = "sum",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Full sub-shard ToHub on the Pallas kernel; returns (num_slots,) hub."""
+    """Full sub-shard ToHub on the Pallas kernel; returns (num_slots,) hub.
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpreted on every
+    other backend (see :func:`repro.kernels.dsss_spmv.default_interpret`).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _subshard_update_jit(
+        src_vals, src_idx, hub_inv, weights, block_base, num_slots,
+        gather_op=gather_op, reduce=reduce, interpret=interpret,
+    )
+
+
+def prepare_from_packed_tile(packed, t: int, dtype, *, gather_op: str, reduce: str):
+    """Stage kernel operands from one destination-aligned packed tile.
+
+    A :class:`repro.core.dsss.PackedSweep` tile is a valid kernel edge
+    stream by construction: its global hub slots (``base_slot +
+    run_local``) are non-decreasing along the tile, so the windowed
+    one-hot reduce of ``dsss_spmv`` applies unchanged. Tile source
+    indices are *global* padded vertex ids — pass the flat ``(n_pad,)``
+    attribute array as ``src_vals`` (the tile does not belong to a single
+    source interval once sub-shards coalesce).
+    """
+    e = int(packed.e_valid[t])
+    hub_inv_global = (
+        packed.base_slot[t] + packed.run_local[t, :e].astype(np.int64)
+    )
+    # The windowed one-hot reduce is only sound over a non-decreasing slot
+    # stream — true for every adaptive tile and for dst-sorted subshard
+    # tiles, but NOT for a src_sorted graph's scrambled blocks.
+    if e and np.any(np.diff(hub_inv_global) < 0):
+        raise ValueError(
+            f"tile {t} has decreasing hub slots (src_sorted layout?) — "
+            "not a valid windowed kernel stream"
+        )
+    w = None if packed.weights is None else packed.weights[t, :e]
+    return prepare_subshard_operands(
+        packed.src[t, :e], hub_inv_global, w, dtype,
+        gather_op=gather_op, reduce=reduce,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "gather_op", "reduce", "interpret")
+)
+def _subshard_update_jit(
+    src_vals: jax.Array,
+    src_idx: jax.Array,
+    hub_inv: jax.Array,
+    weights: jax.Array,
+    block_base: jax.Array,
+    num_slots: int,
+    *,
+    gather_op: str,
+    reduce: str,
+    interpret: bool,
+) -> jax.Array:
     partials = dsss_spmv_block_partials(
         src_vals,
         src_idx,
@@ -165,15 +215,18 @@ def attention(
     softcap: float | None = None,
     scale: float | None = None,
     use_kernel: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Model-facing attention entry point.
 
     ``use_kernel=False`` (default on this CPU container) runs the jnp
-    reference; ``use_kernel=True`` runs the Pallas flash kernel (TPU target,
-    interpret=True validates it here).
+    reference; ``use_kernel=True`` runs the Pallas flash kernel.
+    ``interpret=None`` auto-selects (compiled on TPU, interpreted
+    elsewhere — the latter validates the kernel on this container).
     """
     if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
         return flash_attention(
             q,
             k,

@@ -1,0 +1,59 @@
+"""Shared PackedSweep layout invariants.
+
+One implementation of the tile-layout contract, used by the deterministic
+suite (tests/test_packed_sweep.py) and the hypothesis property suite
+(tests/test_packed_tiling_property.py) so the two cannot drift when the
+schema changes.
+"""
+import numpy as np
+
+
+def check_layout(g, packed):
+    """Assert every invariant any packing mode must satisfy.
+
+    * Exact coverage: the tiles' real edges are the flat DSSS edge stream,
+      in stream order (``row_offset`` partitions ``[0, m)``).
+    * Run integrity: global hub slots partition tile-contiguously — no
+      (sub-shard, destination) run is ever split across tiles — and
+      ``run_local`` reproduces the windowed global slots.
+    * ``run_dst`` maps every real run to its global destination and every
+      padded slot to the ``n_pad`` drop sentinel.
+    * Per-tile interval metadata matches the first edge.
+    """
+    e_valid = packed.e_valid
+    srcs = np.concatenate(
+        [packed.src[t, :e] for t, e in enumerate(e_valid)]
+    ) if packed.num_tiles else np.zeros(0, np.int32)
+    dsts = np.concatenate(
+        [packed.dst[t, :e] for t, e in enumerate(e_valid)]
+    ) if packed.num_tiles else np.zeros(0, np.int32)
+    np.testing.assert_array_equal(srcs, g.src)
+    np.testing.assert_array_equal(dsts, g.dst)
+    if packed.weights is not None:
+        ws = np.concatenate([packed.weights[t, :e] for t, e in enumerate(e_valid)])
+        np.testing.assert_array_equal(ws, g.weights)
+    assert int(e_valid.sum()) == g.m == packed.m
+    np.testing.assert_array_equal(
+        packed.row_offset, np.concatenate([[0], np.cumsum(e_valid)[:-1]])
+    )
+    np.testing.assert_array_equal(
+        packed.base_slot[1:], packed.base_slot[:-1] + packed.u[:-1]
+    )
+    if packed.num_tiles:
+        assert packed.base_slot[0] == 0
+        assert packed.base_slot[-1] + packed.u[-1] == g.hub_offsets[-1, -1]
+    gslot = g.global_hub_slots()
+    isz = g.interval_size
+    for t, e in enumerate(e_valid):
+        lo = packed.row_offset[t]
+        np.testing.assert_array_equal(
+            packed.run_local[t, :e].astype(np.int64) + packed.base_slot[t],
+            gslot[lo : lo + e],
+        )
+        assert packed.run_local[t, :e].max(initial=0) < packed.u[t]
+        np.testing.assert_array_equal(
+            packed.run_dst[t, packed.run_local[t, :e]], packed.dst[t, :e]
+        )
+        assert (packed.run_dst[t, packed.u[t] :] == g.n_pad).all()
+        i, j = packed.src_interval[t], packed.dst_interval[t]
+        assert i == packed.src[t, 0] // isz and j == packed.dst[t, 0] // isz

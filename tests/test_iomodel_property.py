@@ -96,7 +96,11 @@ class TestMeasuredMetersMatchClosedForms:
         )
         assert cmp.within_slack, cmp
         assert per.bytes_written == 0.0
-        # Real streaming: physical transfers happen iff model bytes charged.
+        # Real streaming (packed host path): physical transfers happen iff
+        # the budget's pinned tile prefix does not cover the whole graph —
+        # which coincides with the model charging edge reads at all.
+        splan = sess.packed_stream_plan("spu", Ba)
+        assert (per.bytes_h2d > 0) == (splan.pin_tiles < splan.num_tiles)
         assert (per.bytes_h2d > 0) == (per.bytes_read_edges > 0)
 
     @settings(max_examples=8, deadline=None)

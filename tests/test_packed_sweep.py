@@ -2,15 +2,22 @@
 
 The packed path's contract is strict: for every native schedule
 (SPU/DPU/MPU), every program family (sum / min on weighted+unweighted
-graphs) and batched K > 1 runs, it must produce
+graphs), both residencies (device-staged and host-streamed) and batched
+K > 1 runs, it must produce
 
   * bit-identical attributes and outputs, and
-  * field-for-field identical modelled ``Meters`` (edges, blocks, every
-    byte counter — only ``wall_seconds`` may differ),
+  * field-for-field identical *model* ``Meters`` (edges, blocks, every
+    modelled byte counter) — the physical fields (``wall_seconds``,
+    ``bytes_h2d``, ``peak_device_graph_bytes``) describe whichever data
+    path actually ran and are compared only where the paths coincide,
 
 while actually running the compiled scan (one ``lax.scan`` + one batched
-apply per sweep) instead of the per-sub-shard dispatch loop. Host-streamed
-residency downgrades to per-block by design — also covered here.
+apply per sweep on device; one scan per streamed tile chunk under host
+residency) instead of the per-sub-shard dispatch loop. Since the adaptive
+destination-aligned tiling, host residency no longer downgrades packed
+execution — also covered here, along with the layout invariants of
+:class:`repro.core.dsss.PackedSweep` and the padding bound on power-law
+graphs.
 """
 import dataclasses
 
@@ -27,10 +34,11 @@ from repro.core import (
     build_dsss,
 )
 from repro.core import session as session_mod
-from repro.graph.generators import erdos_renyi, ring
+from repro.graph.generators import erdos_renyi, ring, zipf
 from repro.graph.preprocess import degree_and_densify
 
 STRATEGIES = ["spu", "dpu", "mpu"]
+RESIDENCIES = ["device", "host"]
 
 # (label, program factory, plan kwargs, weighted) — PageRank exercises the
 # float-sum semiring (where re-association would show), BFS the monotone
@@ -40,6 +48,11 @@ PROGRAMS = [
     ("bfs", BFS, dict(max_iters=100, program_kwargs={"root": 0}), False),
     ("sssp", SSSP, dict(max_iters=100, program_kwargs={"root": 0}), True),
 ]
+
+# Modelled meter fields — must be identical across execution modes AND
+# residencies. The remaining fields (bytes_h2d, peak_device_graph_bytes,
+# wall_seconds) are physical: they report what the chosen data path did.
+MODEL_FIELDS = session_mod.MODEL_METER_FIELDS
 
 
 def _graph(n=150, m=900, seed=0, P=5, weighted=False):
@@ -52,29 +65,39 @@ def _graph(n=150, m=900, seed=0, P=5, weighted=False):
     return build_dsss(el, P)
 
 
-def _meters_dict(meters):
+def _meters_dict(meters, model_only=False):
     d = dataclasses.asdict(meters)
     d.pop("wall_seconds")
+    if model_only:
+        d = {k: v for k, v in d.items() if k in MODEL_FIELDS}
     return d
 
 
-def _assert_equivalent(res_pb, res_pk):
+def _assert_equivalent(res_pb, res_pk, model_only=False):
     np.testing.assert_array_equal(res_pb.attrs, res_pk.attrs)
     assert res_pb.iterations == res_pk.iterations
     assert res_pb.converged == res_pk.converged
-    assert _meters_dict(res_pb.meters) == _meters_dict(res_pk.meters)
+    assert _meters_dict(res_pb.meters, model_only) == _meters_dict(
+        res_pk.meters, model_only
+    )
+
+
+def _session(g, residency):
+    # memory_budget chosen so MPU resolves to a strict 0 < Q < P split for
+    # both attribute widths (Ba=4 min-programs and Ba=8 PageRank), so the
+    # mixed direct+hub two-phase path really runs. Under "host" the same
+    # budget also forces real streaming (it is far below the graph bytes).
+    return GraphSession(g, memory_budget=720, residency=residency)
 
 
 @pytest.mark.parametrize("label,prog_cls,kwargs,weighted", PROGRAMS)
 @pytest.mark.parametrize("strategy", STRATEGIES)
-def test_bit_identity_and_meters(label, prog_cls, kwargs, weighted, strategy):
+@pytest.mark.parametrize("residency", RESIDENCIES)
+def test_bit_identity_and_meters(
+    label, prog_cls, kwargs, weighted, strategy, residency
+):
     g = _graph(seed=3, weighted=weighted)
-    # memory_budget chosen so MPU resolves to a strict 0 < Q < P split for
-    # both attribute widths (Ba=4 min-programs and Ba=8 PageRank), so the
-    # mixed direct+hub two-phase path really runs; residency pinned to
-    # "device" (a budget would otherwise flip the session into host
-    # streaming, where packed doesn't apply).
-    sess = GraphSession(g, memory_budget=720, residency="device")
+    sess = _session(g, residency)
     if strategy == "mpu":
         choice = sess.compile(ExecutionPlan(prog_cls(), strategy="mpu")).choice
         assert 0 < choice.Q < g.P, "budget must exercise the hub split"
@@ -84,22 +107,28 @@ def test_bit_identity_and_meters(label, prog_cls, kwargs, weighted, strategy):
     pk = sess.run(
         ExecutionPlan(prog_cls(), strategy=strategy, execution="packed", **kwargs)
     )
-    _assert_equivalent(pb, pk)
+    # Model meters agree always; the physical fields additionally agree
+    # under device residency (neither path streams: h2d 0, peak = total).
+    _assert_equivalent(pb, pk, model_only=(residency == "host"))
     assert pk.meters.edges_processed > 0
+    if residency == "host":
+        assert pb.meters.bytes_h2d > 0 and pk.meters.bytes_h2d > 0
     if label == "pagerank":
         # Non-monotone: every sweep touches every sub-shard.
         assert pk.meters.blocks_processed == pk.iterations * len(sess.block_keys)
 
 
+@pytest.mark.parametrize("residency", RESIDENCIES)
 @pytest.mark.parametrize("strategy", STRATEGIES)
 @pytest.mark.parametrize(
     "label,prog_cls,weighted",
     [("bfs", BFS, False), ("sssp", SSSP, True)],
 )
-def test_batched_k_gt_1(label, prog_cls, weighted, strategy):
+def test_batched_k_gt_1(label, prog_cls, weighted, strategy, residency):
     """K>1 fused batches: one packed scan serves all queries."""
     g = _graph(seed=7, weighted=weighted)
-    sess = GraphSession(g, residency="device")
+    budget = g.total_edge_bytes(8) // 3 if residency == "host" else None
+    sess = GraphSession(g, memory_budget=budget, residency=residency)
     roots = [0, 11, 29, 63]
 
     def plans(execution):
@@ -122,7 +151,9 @@ def test_batched_k_gt_1(label, prog_cls, weighted, strategy):
         np.testing.assert_array_equal(r_pb.attrs, r_pk.attrs)
         np.testing.assert_array_equal(r_pb.output, r_pk.output)
         assert r_pb.iterations == r_pk.iterations
-    assert _meters_dict(b_pb.meters) == _meters_dict(b_pk.meters)
+    assert _meters_dict(b_pb.meters, model_only=True) == _meters_dict(
+        b_pk.meters, model_only=True
+    )
 
 
 def test_batched_pagerank_shares_edge_stream():
@@ -140,11 +171,14 @@ def test_batched_pagerank_shares_edge_stream():
     assert batch.meters.bytes_read_hubs == 6 * single.meters.bytes_read_hubs
 
 
-def test_packed_path_actually_runs(monkeypatch):
-    """The packed run must never enter the per-block primitives, and must
-    call the compiled sweep exactly once per update sweep."""
+@pytest.mark.parametrize("residency", RESIDENCIES)
+def test_packed_path_actually_runs(monkeypatch, residency):
+    """The packed run must never enter the per-block primitives; on device
+    it calls the compiled sweep exactly once per update sweep, streaming
+    calls it once per tile chunk."""
     g = _graph(seed=5)
-    sess = GraphSession(g, residency="device")
+    budget = g.total_edge_bytes(8) // 2 if residency == "host" else None
+    sess = GraphSession(g, memory_budget=budget, residency=residency)
 
     def boom(*a, **kw):
         raise AssertionError("per-block primitive dispatched in packed mode")
@@ -173,7 +207,10 @@ def test_packed_path_actually_runs(monkeypatch):
         )
     )
     assert res.iterations == 3
-    assert len(sweeps) == 3  # one compiled sweep dispatch per update sweep
+    if residency == "device":
+        assert len(sweeps) == 3  # one compiled sweep dispatch per update sweep
+    else:
+        assert len(sweeps) >= 3  # ≥ one chunk per sweep, no per-block entry
 
 
 def test_activity_skipping_matches_per_block():
@@ -199,23 +236,49 @@ def test_activity_skipping_matches_per_block():
         assert pk.meters.blocks_skipped > 0  # the ring really does skip rows
 
 
-def test_host_residency_downgrades_to_per_block():
-    """Streaming is inherently per-block: packed requests under host
-    residency run the fetcher path, bit-identical to device execution."""
+def test_host_residency_runs_packed():
+    """Since adaptive tiling, packed execution streams out-of-core instead
+    of downgrading: auto resolves to packed under host residency, results
+    are bit-identical to device residency, and the budget pins a tile
+    prefix within the leftover while chunks stream on top."""
     g = _graph(seed=6)
-    budget = g.total_edge_bytes(8) // 3
+    budget = 2 * g.n_pad * 8 + g.total_edge_bytes(8) // 2
     host = GraphSession(g, memory_budget=budget, residency="host")
-    compiled = host.compile(ExecutionPlan(PageRank(), strategy="spu", execution="packed"))
-    assert compiled.execution == "per_block"
+    compiled = host.compile(ExecutionPlan(PageRank(), strategy="spu"))
+    assert compiled.residency == "host" and compiled.execution == "packed"
     dev = GraphSession(g, residency="device")
-    assert (
-        dev.compile(ExecutionPlan(PageRank(), strategy="spu")).execution == "packed"
-    )
     r_host = host.run(ExecutionPlan(PageRank(), strategy="spu", max_iters=4, tol=0.0))
     r_dev = dev.run(ExecutionPlan(PageRank(), strategy="spu", max_iters=4, tol=0.0))
     np.testing.assert_array_equal(r_host.attrs, r_dev.attrs)
     assert r_host.meters.bytes_h2d > 0  # host mode really streamed
     assert r_dev.meters.bytes_h2d == 0
+    # Budget accounting: pinned tile prefix fits the leftover, and the
+    # peak adds at most the two-chunk streaming ring on top.
+    splan = host.packed_stream_plan("spu", PageRank().attr_bytes)
+    pinned_model, _ = host.pinned_device_bytes()
+    assert pinned_model == splan.pin_model_bytes
+    assert pinned_model + 2 * g.n_pad * 8 <= budget
+    assert (
+        r_host.meters.peak_device_graph_bytes
+        <= pinned_model + 2 * splan.max_chunk_model_bytes
+    )
+    # Physical stream volume is a closed form of the layout: every
+    # non-pinned tile ships its dense leaves once per sweep.
+    from repro.core import packed_h2d_bytes
+
+    assert r_host.meters.bytes_h2d == r_host.iterations * packed_h2d_bytes(
+        splan.num_tiles - splan.pin_tiles, splan.tile_edges
+    )
+
+
+def test_full_budget_host_packed_streams_nothing():
+    g = _graph(seed=2)
+    total = 2 * g.n_pad * 8 + g.total_edge_bytes(8)
+    sess = GraphSession(g, memory_budget=2 * total, residency="host")
+    res = sess.run(ExecutionPlan(PageRank(), strategy="spu", max_iters=3, tol=0.0))
+    assert res.meters.bytes_h2d == 0.0
+    assert res.meters.bytes_read_edges == 0.0
+    assert sess.pinned_device_bytes()[0] == g.m * sess.Be
 
 
 def test_custom_and_fused_strategies_stay_per_block():
@@ -254,36 +317,112 @@ def test_engine_shim_execution_knob():
     r_pb = pb.run(max_iters=5, tol=0.0)
     r_pk = pk.run(max_iters=5, tol=0.0)
     _assert_equivalent(r_pb, r_pk)
+    with pytest.raises(ValueError, match="packing"):
+        NXGraphEngine(g, PageRank(), packing="subshard", session=sess)
 
 
-def test_packed_layout_shape_invariants():
+def test_packed_layout_invariants_adaptive_and_subshard():
+    from _layout_checks import check_layout
+
     g = _graph(seed=2, weighted=True)
-    packed = g.packed_sweep()
+    for mode in ("adaptive", "subshard"):
+        packed = g.packed_sweep(mode)
+        check_layout(g, packed)
+    # Subshard mode reproduces the per-block bookkeeping exactly.
+    old = g.packed_sweep("subshard")
     host = g.host_blocks()
-    assert packed.num_tiles == len(host)
-    assert packed.keys == tuple(sorted(host))
-    assert packed.src_local.shape == (packed.num_tiles, packed.tile_edges)
-    assert packed.tile_edges >= max(b["e"] for b in host.values())
-    # Per-tile metadata reproduces the host-block bookkeeping exactly.
-    for t, key in enumerate(packed.keys):
+    assert old.num_tiles == len(host)
+    for t, key in enumerate(sorted(host)):
         blk = host[key]
-        assert packed.e_valid[t] == blk["e"]
-        assert packed.u[t] == blk["u"]
-        assert (packed.src_interval[t], packed.dst_interval[t]) == key
-        e = blk["e"]
-        np.testing.assert_array_equal(packed.src_local[t, :e], blk["src_local"][:e])
-        np.testing.assert_array_equal(packed.dst_local[t, :e], blk["dst_local"][:e])
-        np.testing.assert_array_equal(packed.weights[t, :e], blk["weights"][:e])
-    # base_slot is the global hub-slot prefix sum in row-major key order.
-    np.testing.assert_array_equal(
-        packed.base_slot,
-        [g.hub_offsets[i, j] for (i, j) in packed.keys],
+        assert old.e_valid[t] == blk["e"]
+        assert old.u[t] == blk["u"]
+        assert (old.src_interval[t], old.dst_interval[t]) == key
+        assert old.base_slot[t] == g.hub_offsets[key]
+
+
+def test_adaptive_padding_bounded_on_power_law():
+    """The acceptance bound: on a Zipf-degree graph at P=32 the adaptive
+    packing pads ≤ 1.25× while the legacy sub-shard tiles are hub-bound."""
+    el = degree_and_densify(*zipf(6000, 40000, alpha=1.9, seed=0), drop_self_loops=True)
+    g = build_dsss(el, 32)
+    from _layout_checks import check_layout
+
+    adaptive = g.packed_sweep("adaptive")
+    legacy = g.packed_sweep("subshard")
+    assert adaptive.padding_ratio <= 1.25, adaptive.padding_ratio
+    assert legacy.padding_ratio > adaptive.padding_ratio
+    check_layout(g, adaptive)
+
+
+def test_src_sorted_requires_subshard_packing():
+    el = degree_and_densify(*erdos_renyi(80, 400, seed=1), drop_self_loops=True)
+    g = build_dsss(el, 4, src_sorted=True)
+    with pytest.raises(ValueError, match="src_sorted"):
+        g.packed_sweep("adaptive")
+    with pytest.raises(ValueError, match="adaptive"):
+        GraphSession(g, packing="adaptive")
+    sess = GraphSession(g)  # auto → subshard
+    assert sess.packing == "subshard"
+    pb = sess.run(
+        ExecutionPlan(PageRank(), strategy="spu", max_iters=4, tol=0.0,
+                      execution="per_block")
     )
+    pk = sess.run(
+        ExecutionPlan(PageRank(), strategy="spu", max_iters=4, tol=0.0,
+                      execution="packed")
+    )
+    _assert_equivalent(pb, pk)
+
+
+def test_kernel_operands_from_packed_tile():
+    """Tiles are valid Pallas kernel streams: staging one through
+    ops.prepare_from_packed_tile and running the windowed sub-shard update
+    reproduces the reference per-slot reduction over global hub slots."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import prepare_from_packed_tile, subshard_update
+
+    g = _graph(n=80, m=400, seed=11, P=3, weighted=True)
+    packed = g.packed_sweep("adaptive")
+    gslot = g.global_hub_slots()
+    num_slots = int(g.hub_offsets[-1, -1])
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(0.1, 1.0, size=g.n_pad).astype(np.float32)
+    for t in range(packed.num_tiles):
+        operands = prepare_from_packed_tile(
+            packed, t, jnp.float32, gather_op="mul", reduce="sum"
+        )
+        hub = subshard_update(
+            jnp.asarray(vals), *operands, num_slots=num_slots,
+            gather_op="mul", reduce="sum",
+        )
+        lo = int(packed.row_offset[t])
+        hi = lo + int(packed.e_valid[t])
+        ref = np.zeros(num_slots, np.float32)
+        np.add.at(
+            ref, gslot[lo:hi], vals[g.src[lo:hi]] * g.weights[lo:hi]
+        )
+        sl = slice(int(packed.base_slot[t]), int(packed.base_slot[t] + packed.u[t]))
+        np.testing.assert_allclose(np.asarray(hub)[sl], ref[sl], rtol=1e-5)
+    # src_sorted blocks scramble the slot stream — staging must refuse
+    # rather than silently compute wrong windowed partials.
+    el = degree_and_densify(*erdos_renyi(80, 400, seed=11), drop_self_loops=True)
+    gs = build_dsss(el, 3, src_sorted=True)
+    ps = gs.packed_sweep("subshard")
+    raised = 0
+    for t in range(ps.num_tiles):
+        try:
+            prepare_from_packed_tile(ps, t, jnp.float32, gather_op="mul", reduce="sum")
+        except ValueError:
+            raised += 1
+    assert raised > 0
 
 
 def test_invalid_execution_values_rejected():
     g = _graph(seed=1)
     with pytest.raises(ValueError):
         GraphSession(g, execution="warp")
+    with pytest.raises(ValueError):
+        GraphSession(g, packing="diagonal")
     with pytest.raises(ValueError):
         ExecutionPlan(PageRank(), execution="warp")

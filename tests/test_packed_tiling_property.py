@@ -1,0 +1,86 @@
+"""Property tests for adaptive destination-aligned tile packing.
+
+The layout contract of :meth:`repro.core.dsss.DSSSGraph.packed_sweep`
+(mode="adaptive") that the compiled-sweep bit-identity proof rests on:
+
+1. **Exact coverage** — every edge of the flat DSSS stream appears in
+   exactly one tile, in stream order (tiles are windows: ``row_offset``
+   partitions ``[0, m)``).
+2. **Run integrity** — a (sub-shard, destination) run is never split
+   across tiles: global hub slots partition tile-contiguously
+   (``base_slot`` advances by exactly ``u`` per tile), so every per-run
+   partial ⊕ folds the same values in the same order as the per-block
+   segment reduce.
+3. **Bounded padding** — on Zipf-degree (power-law) graphs of realistic
+   size the padded-edge ratio stays ≤ 1.25×, where the legacy
+   one-tile-per-sub-shard packing is bound by the largest hub-heavy
+   sub-shard.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from _layout_checks import check_layout
+from repro.core import build_dsss
+from repro.core.dsss import choose_tile_edges, cut_runs_into_tiles
+from repro.graph.generators import zipf
+from repro.graph.preprocess import degree_and_densify
+
+
+def _zipf_graph(n, m, alpha, seed, P):
+    el = degree_and_densify(*zipf(n, m, alpha=alpha, seed=seed), drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+class TestAdaptiveTiling:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 50),
+        n=st.integers(50, 400),
+        P=st.integers(1, 8),
+        alpha=st.floats(1.2, 2.4),
+    )
+    def test_layout_contract_holds_on_generated_graphs(
+        self, seed, n, P, alpha
+    ):
+        """The shared invariant suite (exact coverage in stream order, no
+        destination run ever split across tiles, run_dst fold map, interval
+        metadata — see tests/_layout_checks.py) on hypothesis-generated
+        Zipf graphs across the whole parameter space."""
+        g = _zipf_graph(n, 6 * n, alpha, seed, P)
+        check_layout(g, g.packed_sweep("adaptive"))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 30),
+        alpha=st.floats(1.5, 2.2),
+        P=st.sampled_from([16, 32]),
+    )
+    def test_padding_ratio_bounded_on_zipf(self, seed, alpha, P):
+        # Realistic power-law regime (the acceptance bound's domain):
+        # enough edges that tile granularity amortises across sub-shards.
+        g = _zipf_graph(4000, 30000, alpha, seed, P)
+        pk = g.packed_sweep("adaptive")
+        assert pk.padding_ratio <= 1.25, (
+            f"padding {pk.padding_ratio:.3f} > 1.25 "
+            f"(T={pk.tile_edges}, NT={pk.num_tiles}, m={g.m})"
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 100),
+        num_runs=st.integers(1, 200),
+    )
+    def test_greedy_cut_respects_capacity_and_order(self, seed, num_runs):
+        rng = np.random.default_rng(seed)
+        run_len = rng.integers(1, 40, size=num_runs)
+        T = choose_tile_edges(run_len)
+        assert T >= int(run_len.max())
+        bounds = np.concatenate([[0], np.cumsum(run_len)])
+        tiles = cut_runs_into_tiles(bounds, T)
+        # Tiles partition the run sequence in order...
+        assert tiles[0][0] == 0 and tiles[-1][1] == num_runs
+        for (a0, a1), (b0, b1) in zip(tiles, tiles[1:]):
+            assert a1 == b0 and a0 < a1
+        # ...and each stays within capacity.
+        for r0, r1 in tiles:
+            assert bounds[r1] - bounds[r0] <= T

@@ -6,11 +6,16 @@ Contract under test (see ``core/session.py``):
    attributes to device-resident execution, for PageRank / BFS / WCC,
    across strategies and budgets forcing 0%, partial and 100% edge
    residency. The modelled byte meters are also identical: under "host"
-   they coincide with the real transfers instead of being simulated.
+   the edge charges coincide with real transfers instead of being
+   simulated.
 2. **Budget enforcement** — with ``memory_budget`` below the total staged
    bytes, the persistently device-pinned topology plus both attribute
-   copies stays ≤ budget (staged-block accounting), and the transient
-   streaming ring adds at most two blocks on top of the pinned set.
+   copies stays ≤ budget (staged accounting), and the transient
+   streaming ring adds at most two *stream units* on top of the pinned
+   set — two sub-shard blocks for per-block execution, two tile chunks
+   (``PackedStreamPlan.max_chunk_model_bytes``) for the packed compiled
+   path, which since adaptive tiling no longer downgrades under host
+   residency and is what these sessions run by default.
 """
 import numpy as np
 import pytest
@@ -27,17 +32,7 @@ from repro.core import (
 from repro.graph.generators import erdos_renyi
 from repro.graph.preprocess import degree_and_densify
 
-MODELLED_FIELDS = [
-    "bytes_read_edges",
-    "bytes_read_intervals",
-    "bytes_read_hubs",
-    "bytes_written_hubs",
-    "bytes_written_intervals",
-    "iterations",
-    "blocks_processed",
-    "blocks_skipped",
-    "edges_processed",
-]
+from repro.core.session import MODEL_METER_FIELDS as MODELLED_FIELDS
 
 PROGRAMS = {
     "pagerank": lambda: (PageRank(), {}, 6, 0.0),
@@ -86,10 +81,20 @@ class TestHostDeviceBitIdentity:
         assert host.converged == dev.converged
         for field in MODELLED_FIELDS:
             assert getattr(host.meters, field) == getattr(dev.meters, field), field
-        # Device mode simulates the slow tier; host mode performs it.
+        # Device mode simulates the slow tier; host mode performs it. The
+        # default (packed) host path streams its non-pinned tile suffix
+        # every sweep, so physical transfers happen iff the budget's tile
+        # prefix does not cover the graph.
         assert dev.meters.bytes_h2d == 0.0
-        streamed = host.meters.bytes_read_edges > 0
-        assert (host.meters.bytes_h2d > 0) == streamed
+        host_sess = GraphSession(g, memory_budget=budget, residency="host")
+        compiled = host_sess.compile(plan)
+        assert compiled.execution == "packed"
+        splan = host_sess.packed_stream_plan(
+            compiled.choice.strategy, prog.attr_bytes
+        )
+        assert (host.meters.bytes_h2d > 0) == (
+            splan.pin_tiles < splan.num_tiles
+        )
 
     def test_unlimited_budget_bit_identical_to_budgeted_host(self):
         """The acceptance identity: budget below staged bytes, results equal
@@ -145,11 +150,15 @@ class TestBudgetEnforcement:
         res = sess.run(ExecutionPlan(prog, strategy="spu", max_iters=2, tol=0.0))
         pinned_model, pinned_actual = sess.pinned_device_bytes()
         if pinned_model > 0:
-            # Staged-block accounting: persistent residency honors B_M.
+            # Staged accounting: persistent residency honors B_M.
             assert pinned_model + 2 * g.n_pad * Ba <= budget
-        max_block = max(h["e"] for h in sess.host_blocks.values()) * sess.Be
-        # Transient streaming ring: at most current + prefetched on top.
-        assert res.meters.peak_device_graph_bytes <= pinned_model + 2 * max_block
+        # Transient streaming ring: at most current + prefetched stream
+        # units (tile chunks for the default packed path) on top.
+        splan = sess.packed_stream_plan("spu", Ba)
+        assert (
+            res.meters.peak_device_graph_bytes
+            <= pinned_model + 2 * splan.max_chunk_model_bytes
+        )
 
     def test_zero_budget_streams_everything_every_sweep(self):
         g = _graph(seed=5, P=4)
@@ -170,9 +179,8 @@ class TestBudgetEnforcement:
 
     def test_device_peak_below_budget_with_headroom(self):
         """The acceptance inequality end-to-end: peak device graph bytes +
-        both attribute copies ≤ budget, on a budget with streaming headroom
-        (the two-block ring must fit in the slack the block-granular
-        residency picker leaves)."""
+        both attribute copies ≤ budget + the documented two-stream-unit
+        slack, on a genuinely out-of-core budget."""
         g = _graph(seed=7, P=4, n=200, m=1200)
         prog = PageRank()
         Ba = prog.attr_bytes
@@ -180,11 +188,30 @@ class TestBudgetEnforcement:
         budget = int(total * 0.6)
         sess = GraphSession(g, memory_budget=budget, residency="host")
         res = sess.run(ExecutionPlan(prog, strategy="spu", max_iters=3, tol=0.0))
-        max_block = max(h["e"] for h in sess.host_blocks.values()) * sess.Be
+        splan = sess.packed_stream_plan("spu", Ba)
         assert budget < total  # genuinely out-of-core
         assert (
             res.meters.peak_device_graph_bytes + 2 * g.n_pad * Ba
-            <= budget + 2 * max_block
+            <= budget + 2 * splan.max_chunk_model_bytes
+        )
+
+    def test_per_block_ring_still_bounded(self):
+        """The legacy per-block streaming path keeps its two-block ring."""
+        g = _graph(seed=9, P=4, n=200, m=1200)
+        prog = PageRank()
+        budget = _budget(g, 0.5)
+        sess = GraphSession(g, memory_budget=budget, residency="host")
+        res = sess.run(
+            ExecutionPlan(
+                prog, strategy="spu", max_iters=2, tol=0.0,
+                execution="per_block",
+            )
+        )
+        pinned_model, _ = sess.pinned_device_bytes()
+        max_block = max(h["e"] for h in sess.host_blocks.values()) * sess.Be
+        assert res.meters.bytes_h2d > 0
+        assert (
+            res.meters.peak_device_graph_bytes <= pinned_model + 2 * max_block
         )
 
     def test_pinned_blocks_released_when_strategy_changes(self):
