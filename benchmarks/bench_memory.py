@@ -16,11 +16,28 @@ Two sweeps over budgets below (and above) the total staged graph size:
   tiling), whose h2d is checked against the ``packed_h2d_bytes`` closed
   form.
 
-Run: ``PYTHONPATH=src python benchmarks/bench_memory.py``
-(or via ``benchmarks/run.py``). Wall time on this container barely varies
-with the budget (host→device is a memcpy, not a disk); the reproduced
-claim is the traffic/selection curve, now backed by performed transfers.
+A fourth sweep covers the *disk* tier: the graph is first built into a
+``.dsss`` container by the bounded-RAM external-memory pipeline
+(``repro.storage.build`` — its allocation ledger is asserted against the
+chunk budget right here), then opened with ``GraphSession.open`` and run
+under ``residency="disk"`` across device budgets in both execution
+modes. Measured ``bytes_disk_read`` must equal the ``disk_read_bytes`` /
+``packed_disk_bytes`` closed forms *exactly* for every row — that
+assertion is what CI's bench-smoke job runs.
+
+Run: ``PYTHONPATH=src python benchmarks/bench_memory.py [--smoke]
+[--out BENCH_storage.json]`` (or via ``benchmarks/run.py``). Wall time on
+this container barely varies with the budget (host→device is a memcpy,
+not a disk); the reproduced claim is the traffic/selection curve, now
+backed by performed transfers.
 """
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+
 from repro.core import (
     ExecutionPlan,
     GraphSession,
@@ -28,17 +45,22 @@ from repro.core import (
     build_dsss,
     calibrate_edge_bytes,
     compare_measured,
+    disk_read_bytes,
+    packed_disk_bytes,
     packed_h2d_bytes,
 )
+from repro.core.session import _host_block_nbytes
+from repro.storage import build_dsss_file
 
 from benchmarks._util import row, small_rmat
 
 ITERS = 2
 
 
-def run():
-    el = small_rmat(13, 16)
-    g = build_dsss(el, 16)
+def run(smoke: bool = False, payload: dict | None = None):
+    el = small_rmat(10 if smoke else 13, 16)
+    P = 8 if smoke else 16
+    g = build_dsss(el, P)
     prog = PageRank()
     full = 2 * g.n_pad * prog.attr_bytes + g.total_edge_bytes(8)
     rows = []
@@ -126,11 +148,125 @@ def run():
                 extra,
             )
         )
+    # Disk tier (paper §IV streamlined disk access): external-memory build
+    # into a .dsss container, then disk-residency sweeps whose measured
+    # bytes_disk_read must equal the closed forms exactly.
+    build_budget = 1 << 20
+    tmpdir = tempfile.mkdtemp(prefix="bench-dsss-")
+    disk_rows = []
+    try:
+        path = os.path.join(tmpdir, "bench.dsss")
+
+        def chunks():
+            step = 1 << 15
+            for lo in range(0, el.m, step):
+                yield el.src[lo : lo + step], el.dst[lo : lo + step]
+
+        stats = build_dsss_file(chunks, path, P, chunk_budget=build_budget)
+        assert stats.peak_edge_bytes <= 2.05 * build_budget, (
+            f"external build peak {stats.peak_edge_bytes} exceeds 2x the "
+            f"chunk budget {build_budget} — the bounded-memory contract broke"
+        )
+        rows.append(
+            (
+                "disk_build",
+                0.0,
+                f"m={stats.m};peak_edge_bytes={stats.peak_edge_bytes}"
+                f";budget={stats.chunk_budget};tiles={stats.num_tiles}"
+                f"x{stats.tile_edges};file_bytes={os.path.getsize(path)}",
+            )
+        )
+        if payload is not None:
+            payload["build"] = dataclasses.asdict(stats)
+            payload["file_bytes"] = os.path.getsize(path)
+        host_budget = int(full * 0.25)  # partial RAM cache: disk tier is hot
+        for frac in [0.05, 0.25, 1.0]:
+            budget = int(full * frac)
+            for execution in ("per_block", "packed"):
+                sess = GraphSession.open(
+                    path,
+                    memory_budget=budget,
+                    host_memory_budget=host_budget,
+                    verify=(frac == 0.05 and execution == "per_block"),
+                )
+                plan = ExecutionPlan(
+                    prog, strategy="auto", max_iters=ITERS, tol=0.0,
+                    execution=execution,
+                )
+                res = sess.run(plan)
+                per = res.meters.per_iteration()
+                compiled = sess.compile(plan)
+                if execution == "per_block":
+                    nbytes = {
+                        k: _host_block_nbytes(h)
+                        for k, h in sess.host_blocks.items()
+                    }
+                    model_disk = disk_read_bytes(
+                        nbytes, compiled.resident, compiled.host_cached
+                    )
+                    placement = f"host_cached={len(compiled.host_cached)}"
+                else:
+                    splan = sess.packed_stream_plan(
+                        compiled.choice.strategy, compiled.params.Ba
+                    )
+                    model_disk = packed_disk_bytes(
+                        splan.num_tiles - splan.pin_tiles - splan.host_tiles,
+                        splan.tile_edges,
+                        weighted=sess.has_weights,
+                    )
+                    placement = (
+                        f"pin_tiles={splan.pin_tiles}"
+                        f";host_tiles={splan.host_tiles}"
+                        f"/{splan.num_tiles}"
+                    )
+                assert per.bytes_disk_read == model_disk, (
+                    f"disk {execution} frac {frac}: measured "
+                    f"{per.bytes_disk_read} != closed form {model_disk}"
+                )
+                extra = (
+                    f"strategy={compiled.choice.strategy}"
+                    f";disk_read={per.bytes_disk_read:.0f}"
+                    f";disk_model={model_disk:.0f};disk_exact=True"
+                    f";h2d={per.bytes_h2d:.0f};{placement}"
+                    f";peak={res.meters.peak_device_graph_bytes:.0f}"
+                )
+                name = f"disk_{execution}_budget_{frac:.2f}"
+                disk_rows.append(
+                    {
+                        "name": name,
+                        "strategy": compiled.choice.strategy,
+                        "seconds_per_iter": res.meters.wall_seconds / ITERS,
+                        "bytes_disk_read_per_iter": per.bytes_disk_read,
+                        "disk_model_bytes": model_disk,
+                        "bytes_h2d_per_iter": per.bytes_h2d,
+                        "peak_device_graph_bytes":
+                            res.meters.peak_device_graph_bytes,
+                    }
+                )
+                rows.append((name, res.meters.wall_seconds / ITERS, extra))
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
+    if payload is not None:
+        payload["graph"] = {"n": g.n, "m": g.m, "P": g.P, "smoke": smoke}
+        payload["disk_rows"] = disk_rows
+        payload["rows"] = [row(*r) for r in rows]
     return [row(*r) for r in rows]
 
 
 def main():
-    print("\n".join(run()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller graph (CI bench-smoke lane)")
+    ap.add_argument("--out", default=None,
+                    help="write the disk-tier results as JSON")
+    args = ap.parse_args()
+    payload: dict = {}
+    lines = run(smoke=args.smoke, payload=payload)
+    print("\n".join(lines))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -28,10 +28,12 @@ from repro.core.iomodel import (
     StrategyChoice,
     calibrate_edge_bytes,
     compare_measured,
+    disk_read_bytes,
     dpu_io,
     modelled_io,
     mpu_io,
     mpu_q,
+    packed_disk_bytes,
     packed_h2d_bytes,
     select_strategy,
     spu_io,
@@ -78,6 +80,9 @@ __all__ = [
     "modelled_io",
     "compare_measured",
     "calibrate_edge_bytes",
+    "disk_read_bytes",
+    "packed_disk_bytes",
+    "packed_h2d_bytes",
     "select_strategy",
     "turbograph_like_io",
     "VertexProgram",

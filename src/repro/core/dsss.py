@@ -32,6 +32,7 @@ __all__ = [
     "next_bucket",
     "choose_tile_edges",
     "cut_runs_into_tiles",
+    "tile_candidates",
 ]
 
 
@@ -71,32 +72,47 @@ def cut_runs_into_tiles(bounds: np.ndarray, tile_edges: int) -> list[tuple[int, 
     return tiles
 
 
+def tile_candidates(m: int, max_run: int) -> list[int]:
+    """Power-of-two tile sizes the adaptive chooser considers.
+
+    From ``max(TILE_EDGES_FLOOR, bucket(max_run))`` — a run must fit one
+    tile, or the cut rule would have to split a destination's fold — up to
+    ``bucket(m)`` (a single tile). Shared with the external-memory builder
+    (``repro.storage.build``), whose streaming greedy counters must pick
+    the exact tile size :func:`choose_tile_edges` would, so a stored graph
+    is layout-identical to an in-memory :meth:`DSSSGraph.packed_sweep`.
+    """
+    if m == 0:
+        return [8]
+    lo = max(min(TILE_EDGES_FLOOR, next_bucket(m)), next_bucket(max_run))
+    hi = max(lo, next_bucket(m))
+    out = []
+    T = lo
+    while T <= hi:
+        out.append(T)
+        T *= 2
+    return out
+
+
 def choose_tile_edges(run_lengths: np.ndarray) -> int:
     """Pick the tile size minimising total padded slots for these runs.
 
-    Candidates are powers of two from ``max(TILE_EDGES_FLOOR, bucket(max
-    run))`` — a run must fit one tile, or the cut rule would have to split
-    a destination's fold — up to ``bucket(m)`` (a single tile). Each
-    candidate's exact padded footprint ``num_tiles · T`` is evaluated with
-    the real greedy cut; ties prefer the *smaller* tile (finer granularity
-    for budget pinning and chunked host streaming, at identical padding).
-    This is what bounds the padded-edge ratio on power-law graphs, where
-    the legacy max-sub-shard tile width is hub-degree-bound.
+    Candidates come from :func:`tile_candidates`. Each candidate's exact
+    padded footprint ``num_tiles · T`` is evaluated with the real greedy
+    cut; ties prefer the *smaller* tile (finer granularity for budget
+    pinning and chunked host streaming, at identical padding). This is
+    what bounds the padded-edge ratio on power-law graphs, where the
+    legacy max-sub-shard tile width is hub-degree-bound.
     """
     m = int(run_lengths.sum()) if len(run_lengths) else 0
     if m == 0:
         return 8
-    max_run = int(run_lengths.max())
-    lo = max(min(TILE_EDGES_FLOOR, next_bucket(m)), next_bucket(max_run))
-    hi = max(lo, next_bucket(m))
     bounds = np.concatenate([[0], np.cumsum(run_lengths)])
-    best_T, best_slots = lo, None
-    T = lo
-    while T <= hi:
+    best_T, best_slots = None, None
+    for T in tile_candidates(m, int(run_lengths.max())):
         slots = len(cut_runs_into_tiles(bounds, T)) * T
         if best_slots is None or slots < best_slots:
             best_T, best_slots = T, slots
-        T *= 2
     return best_T
 
 

@@ -36,9 +36,11 @@ class NXGraphEngine:
         custom strategy. "auto" applies the paper's adaptive selection
         from ``memory_budget``.
       memory_budget: bytes of fast-tier memory (B_M). ``None`` = unlimited.
-      residency: "device" | "host" | "auto" — whether the budget is merely
-        modelled (device-staged blocks, seed behaviour) or enforced by
-        host-streamed execution. See :class:`GraphSession`. ``None``
+      residency: "device" | "host" | "disk" | "auto" — whether the budget
+        is merely modelled (device-staged blocks, seed behaviour) or
+        enforced by host- or disk-streamed execution ("disk" needs a
+        disk-backed shared ``session`` opened via
+        :meth:`GraphSession.open`). See :class:`GraphSession`. ``None``
         defaults to "auto" (host streaming iff a budget is set).
       execution: "per_block" | "packed" | "auto" — host-scheduled
         dispatch-per-sub-shard vs. one compiled scan per update sweep

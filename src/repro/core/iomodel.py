@@ -36,6 +36,8 @@ __all__ = [
     "compare_measured",
     "calibrate_edge_bytes",
     "packed_h2d_bytes",
+    "packed_disk_bytes",
+    "disk_read_bytes",
     "PACKED_SLOT_BYTES",
 ]
 
@@ -234,6 +236,46 @@ def packed_h2d_bytes(
     return float(streamed_tiles * per_tile)
 
 
+def packed_disk_bytes(
+    streamed_tiles: int, tile_edges: int, *, weighted: bool = False
+) -> float:
+    """Closed-form disk-tier bytes per sweep for packed disk streaming.
+
+    Under ``residency="disk"`` the packed executor ships the same dense
+    tile leaves as the host path, but sourced from the mmap'd ``.dsss``
+    tile section, so the per-sweep disk volume is the same pure function
+    of the layout as :func:`packed_h2d_bytes` — over only the tiles that
+    are neither device-pinned nor RAM-cached
+    (``num_tiles − pin_tiles − host_tiles`` of the session's
+    :class:`~repro.core.session.PackedStreamPlan`). Asserted to match
+    ``Meters.bytes_disk_read`` exactly in tests and the storage
+    benchmark.
+    """
+    return packed_h2d_bytes(streamed_tiles, tile_edges, weighted=weighted)
+
+
+def disk_read_bytes(
+    block_nbytes, resident, host_cached
+) -> float:
+    """Closed-form per-sweep disk reads of the per-block disk executor.
+
+    ``block_nbytes`` maps sub-shard key → raw bytes of its padded block
+    arrays (the mmap'd segments the fetch touches); a full sweep fetches
+    every block exactly once, and only blocks that are neither
+    device-pinned (``resident``) nor RAM-cached (``host_cached``) hit the
+    disk tier. Monotone programs that skip inactive source intervals
+    read correspondingly less — the oracle holds exactly for
+    non-monotone programs (PageRank), which is what the tests pin.
+    """
+    return float(
+        sum(
+            b
+            for k, b in block_nbytes.items()
+            if k not in resident and k not in host_cached
+        )
+    )
+
+
 def calibrate_edge_bytes(p: IOParams, meters) -> float:
     """Physical bytes per modelled edge byte, from actual transfers.
 
@@ -249,19 +291,55 @@ def calibrate_edge_bytes(p: IOParams, meters) -> float:
     return float(p.Be) * meters.bytes_h2d / meters.bytes_read_edges
 
 
-def select_strategy(p: IOParams, B_M: int | None) -> StrategyChoice:
+def select_strategy(
+    p: IOParams, B_M: int | None, *, host_B_M: int | None = None
+) -> StrategyChoice:
     """Adaptive selection (paper abstract / §III-B).
 
     SPU whenever both ping-pong interval copies fit; otherwise MPU with the
     largest feasible Q (which degenerates to DPU at Q == 0). MPU's modelled
     I/O is monotone in Q, so no search is needed.
+
+    ``host_B_M`` extends the two-level model to the three-tier
+    disk/host/device hierarchy of ``residency="disk"`` (the session
+    passes ``host_memory_budget`` here for disk-backed compiles):
+    ``B_M`` remains the fast-tier (device) budget that drives the
+    SPU/MPU/DPU split, and ``host_B_M`` is the mid-tier (host RAM)
+    budget. Edge topology that fits neither the device pins nor the host
+    cache re-streams from disk every sweep, adding
+    ``max(0, m·Be − device_pinned − host_B_M)`` to the modelled read — a
+    strategy-independent-shaped term except that SPU's device pins (its
+    budget leftover after both *padded* attribute copies, ``2·n_pad·Ba``,
+    matching ``GraphSession._resolve_residency``) also shelter edges
+    from the disk tier. Like SPU residency itself, the enforcement is
+    block-granular, so the continuous term here may undershoot the
+    enforced traffic by up to one (largest) sub-shard — the same
+    documented slack as :class:`IOComparison`.
     """
     if B_M is None:
-        # No budget given: everything fits (this container's engine default).
-        return StrategyChoice("spu", p.P, 0.0, 0.0)
-    if B_M >= 2 * p.P * -(-p.n // p.P) * p.Ba:  # 2 · n_pad · Ba
+        choice = StrategyChoice("spu", p.P, 0.0, 0.0)
+    elif B_M >= 2 * p.P * -(-p.n // p.P) * p.Ba:  # 2 · n_pad · Ba
         r, w = spu_io(p, B_M)
-        return StrategyChoice("spu", p.P, r, w)
-    Q = mpu_q(p, B_M)
-    r, w = mpu_io(p, B_M)
-    return StrategyChoice("dpu" if Q == 0 else "mpu", Q, r, w)
+        choice = StrategyChoice("spu", p.P, r, w)
+    else:
+        Q = mpu_q(p, B_M)
+        r, w = mpu_io(p, B_M)
+        choice = StrategyChoice("dpu" if Q == 0 else "mpu", Q, r, w)
+    if host_B_M is not None:
+        if choice.strategy == "spu":
+            n_pad = p.P * -(-p.n // p.P)
+            pinned = (
+                p.m * p.Be
+                if B_M is None
+                else max(0, B_M - 2 * n_pad * p.Ba)
+            )
+        else:
+            pinned = 0
+        disk = max(0.0, p.m * p.Be - min(pinned, p.m * p.Be) - host_B_M)
+        choice = StrategyChoice(
+            choice.strategy,
+            choice.Q,
+            choice.modelled_read + disk,
+            choice.modelled_write,
+        )
+    return choice

@@ -78,8 +78,10 @@ class ExecutionPlan:
       max_iters: update-sweep budget.
       tol: convergence tolerance handed to ``program.changed``.
       residency: per-plan override of the session's residency axis —
-        ``None`` (inherit), "device", "host" or "auto" (host iff the
-        session has a memory budget). See
+        ``None`` (inherit), "device", "host", "disk" (disk-backed
+        sessions only — blocks/tiles stream from the mmap'd ``.dsss``
+        store) or "auto" (disk for disk-backed sessions, else host iff
+        the session has a memory budget). See
         :class:`repro.core.session.GraphSession` for the semantics.
       execution: per-plan override of the session's execution axis —
         ``None`` (inherit), "per_block", "packed" or "auto". "per_block"
@@ -105,9 +107,9 @@ class ExecutionPlan:
     program_kwargs: Any = ()
 
     def __post_init__(self):
-        if self.residency not in (None, "device", "host", "auto"):
+        if self.residency not in (None, "device", "host", "disk", "auto"):
             raise ValueError(
-                "residency must be None, 'device', 'host' or 'auto', "
+                "residency must be None, 'device', 'host', 'disk' or 'auto', "
                 f"got {self.residency!r}"
             )
         if self.execution not in (None, "per_block", "packed", "auto"):

@@ -54,6 +54,20 @@ host→device with the same double-buffered prefetch discipline as
 :class:`_BlockFetcher` (a budget-pinned tile prefix stays device-resident,
 each streamed chunk charges ``bytes_h2d``), so SPU/DPU/MPU all run packed
 out-of-core.
+
+The third tier (paper §IV, the actual *disk*): a graph stored as a
+``.dsss`` container (:mod:`repro.storage`) opens with
+:meth:`GraphSession.open` into ``residency="disk"`` — the host-side
+block buffers and packed tile arrays become read-only **mmap views of
+the file**, so nothing edge-scale is resident in host RAM either. The
+same streaming machinery (block fetcher / packed chunk streamer) then
+moves data disk→device; each mmap fetch of a block or tile chunk that is
+neither device-pinned (``memory_budget``) nor RAM-cached
+(``host_memory_budget``, the mid tier of the three-level budget)
+additionally charges ``Meters.bytes_disk_read`` — checked against the
+``disk_read_bytes`` / ``packed_disk_bytes`` closed forms in
+:mod:`repro.core.iomodel`. Results stay bit-identical and the model
+meters field-identical across all three residencies.
 """
 from __future__ import annotations
 
@@ -69,7 +83,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dsss import DSSSGraph
-from repro.core.iomodel import IOParams, StrategyChoice, mpu_q, select_strategy
+from repro.core.iomodel import (
+    IOParams,
+    PACKED_SLOT_BYTES,
+    StrategyChoice,
+    mpu_q,
+    select_strategy,
+)
 from repro.core.plan import ExecutionPlan
 from repro.core.vertex_programs import VertexProgram, reduce_identity
 
@@ -125,6 +145,15 @@ class Meters:
       prefetch ring). Under ``residency="device"`` this is the whole
       graph; under ``"host"`` it is bounded by the memory budget plus
       the documented two-block streaming slack.
+    * ``bytes_disk_read``: raw bytes fetched from the mmap'd ``.dsss``
+      tier under ``residency="disk"`` — charged at the mmap-fetch layer
+      whenever a streamed block / tile chunk is neither device-pinned
+      nor host-RAM-cached (the ``host_memory_budget`` mid tier). It
+      models cold-cache streaming: the OS page cache may physically
+      absorb re-reads, but the meter charges each per-sweep fetch, which
+      is what the ``disk_read_bytes`` / ``packed_disk_bytes`` closed
+      forms (repro.core.iomodel) predict exactly. Zero under the other
+      residencies.
     """
 
     bytes_read_edges: float = 0.0
@@ -133,6 +162,7 @@ class Meters:
     bytes_written_hubs: float = 0.0
     bytes_written_intervals: float = 0.0
     bytes_h2d: float = 0.0
+    bytes_disk_read: float = 0.0
     peak_device_graph_bytes: float = 0.0
     iterations: int = 0
     blocks_processed: int = 0
@@ -166,6 +196,7 @@ class Meters:
             "bytes_written_hubs",
             "bytes_written_intervals",
             "bytes_h2d",
+            "bytes_disk_read",
         ):
             setattr(out, f, getattr(self, f) / k)
         return out
@@ -231,18 +262,23 @@ class BatchResult:
 class CompiledPlan:
     """A plan resolved against one session: strategy + residency, no state.
 
-    ``residency`` is the *resolved* placement mode ("device" or "host" —
-    never "auto"); ``resident`` is the set of sub-shard keys the memory
-    budget pins in the fast tier. Under "host" the resident set is
-    enforced (those blocks are device-pinned, the rest are streamed from
-    host buffers per sweep); under "device" every block stays on device
-    and the same resident set drives the modelled byte meters only.
+    ``residency`` is the *resolved* placement mode ("device", "host" or
+    "disk" — never "auto"); ``resident`` is the set of sub-shard keys the
+    memory budget pins in the fast tier. Under "host"/"disk" the
+    resident set is enforced (those blocks are device-pinned, the rest
+    are streamed per sweep — from pinned host buffers or from the mmap'd
+    store); under "device" every block stays on device and the same
+    resident set drives the modelled byte meters only. ``host_cached``
+    is the disk tier's mid level: the sub-shards the
+    ``host_memory_budget`` keeps materialized in host RAM, whose fetches
+    do not charge ``bytes_disk_read`` (empty except under "disk").
     """
 
     params: IOParams
     choice: StrategyChoice
     resident: frozenset
     residency: str = "device"
+    host_cached: frozenset = frozenset()
     # Resolved execution mode: "packed" iff the compiled sweep path will
     # actually run (an SPU/DPU/MPU schedule — either residency), else
     # "per_block". Never "auto".
@@ -260,6 +296,13 @@ class PackedStreamPlan:
     chunks of ``chunk_tiles``, double-buffered, so peak device topology is
     the pinned prefix plus at most two chunks (``max_chunk_model_bytes``
     each — the packed counterpart of the per-block two-block slack).
+
+    ``host_tiles`` is the disk tier's mid level (0 except for
+    disk-backed sessions): the chunk-aligned count of tiles immediately
+    after the pinned prefix that the ``host_memory_budget`` keeps
+    materialized in host RAM — streaming those chunks charges
+    ``bytes_h2d`` but not ``bytes_disk_read``; everything past
+    ``pin_tiles + host_tiles`` re-reads from the mmap'd store each sweep.
     """
 
     pin_tiles: int
@@ -268,6 +311,7 @@ class PackedStreamPlan:
     tile_edges: int
     pin_model_bytes: float  # real-edge model bytes of the pinned prefix
     max_chunk_model_bytes: float  # largest streamed chunk, model units
+    host_tiles: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -1003,11 +1047,20 @@ def _packed_host_sweep(
     mark (pinned prefix + at most two in-flight chunks). The *model* byte
     meters are charged from metadata exactly as under device residency —
     physical streaming never changes them.
+
+    ``residency="disk"`` runs the same loop over mmap-backed tile arrays:
+    chunks inside the ``host_memory_budget``-cached window (the plan's
+    ``host_tiles``) are served from materialized RAM copies, every other
+    chunk is sliced straight out of the file and additionally charges its
+    raw bytes to ``bytes_disk_read`` — the ``packed_disk_bytes`` closed
+    form.
     """
     sess, prog = ctx.session, ctx.program
     packed = sess._staged.packed_host(sess.packing)
     splan = sess.packed_stream_plan(ctx.choice.strategy, ctx.params.Ba)
     hw = sess.has_weights
+    disk = ctx.residency == "disk"
+    cache_end = splan.pin_tiles + splan.host_tiles
     pins, pin_model = sess._ensure_packed_pins(splan.pin_tiles)
     meters.peak_device_graph_bytes = max(
         meters.peak_device_graph_bytes, pin_model
@@ -1022,18 +1075,24 @@ def _packed_host_sweep(
     Be = sess.Be
     starts = list(range(splan.pin_tiles, nt, splan.chunk_tiles))
 
-    def fetch(idx: int) -> tuple[dict, Any, float]:
+    def fetch(idx: int) -> tuple[dict, Any, float, bool]:
         lo = starts[idx]
         hi = min(lo + splan.chunk_tiles, nt)
-        host = _packed_host_chunk(packed, lo, hi, hw)
+        cached = disk and hi <= cache_end
+        if cached:
+            host = sess._packed_ram_chunk(lo, hi)
+        else:
+            host = _packed_host_chunk(packed, lo, hi, hw)
         model = float(packed.e_valid[lo:hi].sum()) * Be
-        return host, jax.device_put(host), model
+        return host, jax.device_put(host), model, cached
 
     cur = fetch(0)
     for idx in range(len(starts)):
         nxt = fetch(idx + 1) if idx + 1 < len(starts) else None
-        host, dev, model = cur
+        host, dev, model, cached = cur
         meters.bytes_h2d += _chunk_nbytes(host)
+        if disk and not cached:
+            meters.bytes_disk_read += _chunk_nbytes(host)
         live = pin_model + model + (nxt[2] if nxt is not None else 0.0)
         meters.peak_device_graph_bytes = max(
             meters.peak_device_graph_bytes, live
@@ -1072,7 +1131,7 @@ def _iteration_packed(ctx: _RunContext, attrs, active, meters: Meters):
     row_mask[rows] = True
     row_active = jnp.asarray(row_mask)
     sweep, apply_all = _packed_jits(jax.default_backend() != "cpu")
-    if ctx.residency == "host":
+    if ctx.residency in ("host", "disk"):
         acc = _packed_host_sweep(ctx, attrs_flat, acc, row_active, meters, sweep)
     else:
         tiles = sess._staged.packed_tiles(sess.packing)
@@ -1129,11 +1188,21 @@ class _StagedGraph:
     files — are built eagerly once; the full *device* mirror is staged
     lazily, only when a device-resident session first needs it, so
     host-streamed sessions never upload the whole graph.
+
+    A disk-backed staging (``store`` given — a
+    :class:`repro.storage.format.DSSSStore`) takes this one tier lower:
+    the host block dict and the packed sweep become read-only **mmap
+    views** of the ``.dsss`` file's block/tile segments, so building the
+    staging allocates nothing edge-scale and the fetch layer pages data
+    in straight from disk.
     """
 
-    def __init__(self, graph: DSSSGraph):
+    def __init__(self, graph: DSSSGraph, store=None):
         self.graph = graph
-        self.host_blocks = graph.host_blocks()
+        self.store = store
+        self.host_blocks = (
+            store.host_blocks() if store is not None else graph.host_blocks()
+        )
         self.block_keys = frozenset(self.host_blocks)
         self._device_blocks: dict[tuple[int, int], dict] | None = None
         self._packed_host: dict[str, Any] = {}  # packing mode -> PackedSweep
@@ -1154,11 +1223,19 @@ class _StagedGraph:
 
         This is the streaming source of truth under host residency (tile
         chunks are sliced straight out of these numpy arrays) and the
-        metadata source for meters, stream planning and tests.
+        metadata source for meters, stream planning and tests. Disk-backed
+        stagings return the store's mmap'd tile section when its packing
+        mode matches (a stored graph skips repacking); other modes fall
+        back to an in-memory repack of the (mmap-backed) flat arrays.
         """
         packed = self._packed_host.get(mode)
         if packed is None:
-            packed = self.graph.packed_sweep(mode)
+            if self.store is not None:
+                stored = self.store.packed()
+                if stored is not None and stored.mode == mode:
+                    packed = stored
+            if packed is None:
+                packed = self.graph.packed_sweep(mode)
             self._packed_host[mode] = packed
         return packed
 
@@ -1206,6 +1283,14 @@ class _BlockFetcher:
       t+1's transfer is already in flight (``jax.device_put`` is async).
       The charge is the same ``e·Be`` — it now *is* the transfer — and
       ``bytes_h2d`` additionally records the raw padded bytes shipped.
+    * ``residency="disk"``: identical streaming discipline, but the host
+      buffers are mmap views of the ``.dsss`` store. A fetch of a block
+      that is neither device-pinned nor in the ``host_memory_budget``'s
+      RAM cache touches the file and charges its raw padded bytes to
+      ``bytes_disk_read`` at this — the mmap-fetch — layer; RAM-cached
+      blocks are served from materialized copies free of disk charge.
+      The model meters are charged exactly as under "host", so the
+      modelled contract is residency-invariant.
 
     The streaming ring holds at most one prefetched block beyond the one
     in use, so peak device topology bytes stay ≤ resident + 2 blocks.
@@ -1220,7 +1305,9 @@ class _BlockFetcher:
     ):
         self._session = session
         self._resident = compiled.resident
-        self._host_mode = compiled.residency == "host"
+        self._host_mode = compiled.residency in ("host", "disk")
+        self._disk_mode = compiled.residency == "disk"
+        self._host_cached = compiled.host_cached
         self._meters = meters
         self._pinned = pinned
         self._ring: dict[tuple[int, int], dict] = {}
@@ -1258,10 +1345,21 @@ class _BlockFetcher:
             self._prefetch(order[0])
         return self._next
 
+    def _host_source(self, key: tuple[int, int]) -> dict:
+        """The host-side buffers a streamed fetch ships — and the disk
+        charge, levied exactly where the mmap pages are touched."""
+        if self._disk_mode:
+            if key in self._host_cached:
+                return self._session._host_cache_block(key)
+            host = self._session._staged.host_blocks[key]
+            self._meters.bytes_disk_read += _host_block_nbytes(host)
+            return host
+        return self._session._staged.host_blocks[key]
+
     def _prefetch(self, key: tuple[int, int]) -> None:
         if key in self._pinned or key in self._ring:
             return
-        host = self._session._staged.host_blocks[key]
+        host = self._host_source(key)
         self._ring[key] = _device_block(host)
         self._meters.bytes_h2d += _host_block_nbytes(host)
 
@@ -1279,7 +1377,7 @@ class _BlockFetcher:
             return blk
         blk = self._ring.pop(key, None)
         if blk is None:  # cold start / out-of-order access
-            host = self._session._staged.host_blocks[key]
+            host = self._host_source(key)
             blk = _device_block(host)
             self._meters.bytes_h2d += _host_block_nbytes(host)
         if self._pos < len(self._order):
@@ -1319,9 +1417,21 @@ class GraphSession:
           fast-tier resident; their slow-tier traffic under DPU/MPU
           remains modelled, as in the paper. The ``"fused"`` strategy is
           the explicitly device-resident fast path and ignores residency.
-        * ``"auto"`` — ``"host"`` when a ``memory_budget`` is set,
-          ``"device"`` otherwise (an unlimited budget pins everything,
-          making the two modes identical).
+        * ``"disk"`` — the third tier (disk-backed sessions only; open
+          one with :meth:`GraphSession.open`): host blocks and packed
+          tiles are mmap views of a ``.dsss`` store, streamed
+          disk→device by the same machinery as ``"host"``. The
+          three-level budget applies: ``memory_budget`` pins device
+          topology exactly as under "host", ``host_memory_budget``
+          bounds a RAM cache of blocks / tile chunks (in streaming
+          order, after the device pins; ``None`` caches everything), and
+          every fetch outside both charges ``Meters.bytes_disk_read`` at
+          the mmap layer. Results are bit-identical and the model meters
+          field-identical to the other residencies.
+        * ``"auto"`` — ``"disk"`` for disk-backed sessions; otherwise
+          ``"host"`` when a ``memory_budget`` is set, ``"device"``
+          otherwise (an unlimited budget pins everything, making the two
+          modes identical).
 
       execution: how the SPU/DPU/MPU schedules drive the device.
 
@@ -1379,10 +1489,12 @@ class GraphSession:
         Be: int = 8,
         Bv: int = 4,
         staged: _StagedGraph | None = None,
+        host_memory_budget: int | None = None,
     ):
-        if residency not in ("device", "host", "auto"):
+        if residency not in ("device", "host", "disk", "auto"):
             raise ValueError(
-                f"residency must be 'device', 'host' or 'auto', got {residency!r}"
+                "residency must be 'device', 'host', 'disk' or 'auto', "
+                f"got {residency!r}"
             )
         if execution not in ("per_block", "packed", "auto"):
             raise ValueError(
@@ -1418,12 +1530,79 @@ class GraphSession:
         if staged is not None and staged.graph is not graph:
             raise ValueError("staged arrays belong to a different graph")
         self._staged = staged if staged is not None else _StagedGraph(graph)
+        self._store = self._staged.store
+        if residency == "disk" and self._store is None:
+            raise ValueError(
+                "residency='disk' requires a disk-backed session — open the "
+                "graph from a .dsss container with GraphSession.open(path) "
+                "(see repro.storage)"
+            )
+        if host_memory_budget is not None and self._store is None:
+            raise ValueError(
+                "host_memory_budget is the disk tier's RAM-cache bound and "
+                "only applies to disk-backed sessions (GraphSession.open); "
+                "in-memory sessions are bounded by memory_budget alone"
+            )
+        self.host_memory_budget = host_memory_budget
         self._residency: dict[int, frozenset] = {}  # Ba -> resident set
         self._compiled: dict[tuple, CompiledPlan] = {}
         self._pinned: dict[tuple[int, int], dict] = {}  # host mode device pins
         # Packed host-mode pins: (pin_tiles, device leaves, model, actual).
         self._packed_pins: tuple[int, dict | None, float, float] | None = None
         self._stream_plans: dict[tuple[bool, int], PackedStreamPlan] = {}
+        # Disk-tier RAM caches (the host_memory_budget mid tier): blocks /
+        # packed tile chunks materialized out of the mmap'd store, bounded
+        # by _resolve_host_cache / PackedStreamPlan.host_tiles.
+        self._host_cache: dict[tuple[int, int], dict] = {}
+        self._packed_ram: dict[tuple[int, int], dict] = {}
+
+    @classmethod
+    def open(
+        cls,
+        path: str,
+        *,
+        memory_budget: int | None = None,
+        host_memory_budget: int | None = None,
+        residency: str = "auto",
+        execution: str = "auto",
+        packing: str = "auto",
+        Be: int = 8,
+        Bv: int = 4,
+        verify: bool = True,
+    ) -> "GraphSession":
+        """Open a ``.dsss`` container as a disk-backed session.
+
+        The graph, its padded sub-shard blocks and its stored packed tile
+        layout all become mmap views of the file — nothing edge-scale is
+        materialized in host RAM, and ``residency`` defaults (via
+        ``"auto"``) to ``"disk"``: sweeps stream blocks / tile chunks
+        disk→device under the three-level
+        ``memory_budget`` / ``host_memory_budget`` hierarchy.
+        ``verify=True`` (default) checks every segment checksum first — a
+        truncated or bit-flipped file fails loudly instead of computing
+        garbage; pass ``verify=False`` to skip the full-file read for
+        very large graphs.
+        """
+        from repro.storage.format import open_dsss
+
+        store = open_dsss(path, verify=verify)
+        graph = store.graph()
+        return cls(
+            graph,
+            memory_budget=memory_budget,
+            residency=residency,
+            execution=execution,
+            packing=packing,
+            Be=Be,
+            Bv=Bv,
+            staged=_StagedGraph(graph, store=store),
+            host_memory_budget=host_memory_budget,
+        )
+
+    @property
+    def store(self):
+        """The backing :class:`repro.storage.format.DSSSStore` (or None)."""
+        return self._store
 
     @property
     def block_keys(self) -> frozenset:
@@ -1440,19 +1619,28 @@ class GraphSession:
         """Back-compat staged-block view.
 
         Under ``"device"``/``"auto"``-without-budget residency this is the
-        all-on-device dict (staged once); under enforced ``"host"``
-        residency it is the host dict — returning the device mirror here
-        would silently stage the whole graph and break the budget.
+        all-on-device dict (staged once); under enforced ``"host"`` or
+        ``"disk"`` residency it is the host-side dict (numpy buffers or
+        mmap views) — returning the device mirror here would silently
+        stage the whole graph and break the budget.
         """
-        if self.resolved_residency() == "host":
+        if self.resolved_residency() in ("host", "disk"):
             return self._staged.host_blocks
         return self._staged.device_blocks()
 
     def resolved_residency(self, override: str | None = None) -> str:
-        """Resolve the session/plan residency axis to 'device' or 'host'."""
+        """Resolve the residency axis to 'device', 'host' or 'disk'."""
         mode = override or self.residency
         if mode == "auto":
-            mode = "host" if self.memory_budget is not None else "device"
+            if self._store is not None:
+                mode = "disk"
+            else:
+                mode = "host" if self.memory_budget is not None else "device"
+        if mode == "disk" and self._store is None:
+            raise ValueError(
+                "residency='disk' requires a disk-backed session — open the "
+                "graph with GraphSession.open(path)"
+            )
         return mode
 
     def resolved_execution(
@@ -1542,6 +1730,23 @@ class GraphSession:
             hi_cum = float(cum[hi - 1])
             lo_cum = float(cum[lo - 1]) if lo else 0.0
             max_chunk = max(max_chunk, hi_cum - lo_cum)
+        # Disk tier's mid level: whole streamed chunks, in order, that the
+        # host_memory_budget keeps materialized in RAM (chunk-aligned so a
+        # chunk is either fully cached or fully mmap-streamed).
+        host_tiles = 0
+        if self._store is not None:
+            if self.host_memory_budget is None:
+                host_tiles = nt - pin
+            else:
+                per_edge = PACKED_SLOT_BYTES + (4 if self.has_weights else 0)
+                leftover = self.host_memory_budget
+                for lo in range(pin, nt, chunk):
+                    hi = min(lo + chunk, nt)
+                    raw = (hi - lo) * (T * per_edge + 4)
+                    if leftover < raw:
+                        break
+                    leftover -= raw
+                    host_tiles += hi - lo
         plan = PackedStreamPlan(
             pin_tiles=pin,
             chunk_tiles=chunk,
@@ -1549,6 +1754,7 @@ class GraphSession:
             tile_edges=T,
             pin_model_bytes=pin_model,
             max_chunk_model_bytes=max_chunk,
+            host_tiles=host_tiles,
         )
         self._stream_plans[key] = plan
         return plan
@@ -1647,13 +1853,27 @@ class GraphSession:
                 execution=self.resolved_execution(
                     choice.strategy, residency, plan.execution
                 ),
+                host_cached=(
+                    self._resolve_host_cache(plan.strategy, params)
+                    if residency == "disk"
+                    else frozenset()
+                ),
             )
             self._compiled[key] = compiled
         return compiled
 
     def _resolve_choice(self, strategy: str, params: IOParams) -> StrategyChoice:
         if strategy == "auto":
-            return select_strategy(params, self.memory_budget)
+            # Disk-backed sessions select over the three-tier model: the
+            # host_memory_budget mid tier adds the modelled disk re-stream
+            # term to each candidate's read (see select_strategy).
+            return select_strategy(
+                params,
+                self.memory_budget,
+                host_B_M=(
+                    self.host_memory_budget if self._store is not None else None
+                ),
+            )
         if strategy in ("spu", "dpu", "mpu", "fused"):
             Q = self.graph.P
             if strategy == "dpu":
@@ -1702,6 +1922,58 @@ class GraphSession:
             resident = frozenset(picked)
         self._residency[params.Ba] = resident
         return resident
+
+    def _resolve_host_cache(self, strategy: str, params: IOParams) -> frozenset:
+        """The mid tier of the three-level budget (disk residency only).
+
+        Which sub-shards the ``host_memory_budget`` keeps materialized in
+        host RAM, picked in the schedules' row-major streaming order over
+        the blocks the device budget did *not* pin, costed at their raw
+        padded-buffer bytes (what the RAM copy actually occupies).
+        ``host_memory_budget=None`` caches everything — the unlimited
+        default mirrors ``memory_budget`` semantics. Fetches of cached
+        blocks charge no ``bytes_disk_read``; with both budgets bounded,
+        per-sweep disk traffic is exactly the ``disk_read_bytes`` closed
+        form over the remaining blocks.
+        """
+        if self._store is None:
+            return frozenset()
+        resident = self._resolve_residency(strategy, params)
+        host = self.host_blocks
+        if self.host_memory_budget is None:
+            return frozenset(k for k in host if k not in resident)
+        picked = set()
+        leftover = self.host_memory_budget
+        for key in sorted(host):  # row-major, as the schedules stream
+            if key in resident:
+                continue
+            cost = _host_block_nbytes(host[key])
+            if leftover >= cost:
+                picked.add(key)
+                leftover -= cost
+        return frozenset(picked)
+
+    def _host_cache_block(self, key: tuple[int, int]) -> dict:
+        """RAM-materialized copy of one mmap-backed block (built once)."""
+        blk = self._host_cache.get(key)
+        if blk is None:
+            host = self._staged.host_blocks[key]
+            blk = {
+                k: (np.array(v) if isinstance(v, np.ndarray) else v)
+                for k, v in host.items()
+            }
+            self._host_cache[key] = blk
+        return blk
+
+    def _packed_ram_chunk(self, lo: int, hi: int) -> dict:
+        """RAM-materialized copy of one mmap-backed tile chunk (built once)."""
+        chunk = self._packed_ram.get((lo, hi))
+        if chunk is None:
+            packed = self._staged.packed_host(self.packing)
+            view = _packed_host_chunk(packed, lo, hi, self.has_weights)
+            chunk = {k: np.array(v) for k, v in view.items()}
+            self._packed_ram[(lo, hi)] = chunk
+        return chunk
 
     def _ensure_pinned(self, resident: frozenset) -> dict[tuple[int, int], dict]:
         """Device-pin exactly the resident set (host residency only).
@@ -1790,14 +2062,16 @@ class GraphSession:
         active = np.stack([prog.init_active(g, **kw) for kw in kwargs_list])
         aux = prog.make_aux(g, **kwargs_list[0])
         meters = Meters()
-        # Per-block host runs pin the resident set here; packed host runs
-        # pin a tile prefix lazily inside the sweep (the block pins would
-        # double-book the device). Device runs leave pins untouched.
+        # Per-block host/disk runs pin the resident set here; packed
+        # host/disk runs pin a tile prefix lazily inside the sweep (the
+        # block pins would double-book the device). Device runs leave
+        # pins untouched.
+        streamed = compiled.residency in ("host", "disk")
         pinned = (
             self._ensure_pinned(compiled.resident)
-            if compiled.residency == "host" and compiled.execution != "packed"
+            if streamed and compiled.execution != "packed"
             else {}
-            if compiled.residency == "host"
+            if streamed
             else self._pinned
         )
         fetcher = _BlockFetcher(self, compiled, meters, pinned)

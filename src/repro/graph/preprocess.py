@@ -13,7 +13,12 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["EdgeList", "degree_and_densify"]
+__all__ = [
+    "EdgeList",
+    "degree_and_densify",
+    "merge_unique_ids",
+    "map_to_dense",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +101,33 @@ class EdgeList:
             id_to_index=self.id_to_index,
             weights=w2,
         )
+
+
+def merge_unique_ids(acc: np.ndarray, *chunks: np.ndarray) -> np.ndarray:
+    """Fold edge-chunk endpoints into a sorted unique id array.
+
+    The chunked (external-memory) counterpart of ``np.unique`` over all
+    endpoints in :func:`degree_and_densify`: calling this per streamed
+    chunk accumulates exactly the dense-id mapping the one-shot pass
+    computes, with peak memory O(vertices + chunk), never O(edges).
+    """
+    parts = [acc] + [np.asarray(c, dtype=np.int64).reshape(-1) for c in chunks]
+    return np.unique(np.concatenate(parts))
+
+
+def map_to_dense(id_to_index: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Raw indices -> dense ids against a sorted mapping (validated).
+
+    Same contract as :meth:`EdgeList.index_to_id` but as a free function
+    over an explicit mapping array, so the streaming build pipeline can
+    map chunks before the :class:`EdgeList` exists.
+    """
+    values = np.asarray(values, dtype=np.int64)
+    pos = np.searchsorted(id_to_index, values)
+    pos = np.clip(pos, 0, max(len(id_to_index) - 1, 0))
+    if len(id_to_index) == 0 or not np.all(id_to_index[pos] == values):
+        raise KeyError("index not present in the accumulated id mapping")
+    return pos.astype(np.int32)
 
 
 def degree_and_densify(

@@ -1,0 +1,34 @@
+"""repro.storage — the on-disk DSSS tier.
+
+A versioned, memory-mappable ``.dsss`` container (:mod:`repro.storage.
+format`), an external-memory build pipeline that produces it in bounded
+RAM (:mod:`repro.storage.build`), and a CLI
+(``python -m repro.storage build|info|verify``). Opened stores plug into
+the execution engine as the third residency tier:
+``GraphSession.open(path)`` / ``residency="disk"`` stream sub-shard
+blocks and packed tile chunks disk→device through the existing
+double-buffered prefetch machinery.
+"""
+from repro.storage.build import BuildStats, build_dsss_file, build_from_text
+from repro.storage.format import (
+    ChecksumError,
+    DSSSStore,
+    FormatError,
+    open_dsss,
+    store_info,
+    verify_dsss,
+    write_dsss,
+)
+
+__all__ = [
+    "BuildStats",
+    "build_dsss_file",
+    "build_from_text",
+    "ChecksumError",
+    "DSSSStore",
+    "FormatError",
+    "open_dsss",
+    "store_info",
+    "verify_dsss",
+    "write_dsss",
+]

@@ -1,0 +1,127 @@
+"""Graph text/binary I/O edge cases.
+
+The chunked streaming text reader (comments, blank lines, CRLF, weights
+column, configurable dtype, chunk boundaries) and the dtype-preservation
+contract of ``save_edges`` / ``save_edgelist`` round-trips.
+"""
+import numpy as np
+import pytest
+
+from repro.graph.io import (
+    iter_text_edges,
+    load_edgelist,
+    load_edges,
+    load_text_edges,
+    save_edgelist,
+    save_edges,
+)
+from repro.graph.preprocess import EdgeList, degree_and_densify
+
+
+class TestTextReader:
+    def _write(self, path, payload: bytes):
+        with open(path, "wb") as f:
+            f.write(payload)
+        return str(path)
+
+    def test_comments_blanks_crlf_and_extra_columns(self, tmp_path):
+        p = self._write(
+            tmp_path / "e.txt",
+            b"# header comment\r\n"
+            b"1 2 0.5 extra tokens ignored\r\n"
+            b"\r\n"
+            b"   # indented comment\n"
+            b"3\t4\t1.5\n"
+            b"5 6 2.5",  # no trailing newline
+        )
+        src, dst = load_text_edges(p)
+        np.testing.assert_array_equal(src, [1, 3, 5])
+        np.testing.assert_array_equal(dst, [2, 4, 6])
+        assert src.dtype == np.int64
+
+    def test_weights_column_and_dtype(self, tmp_path):
+        p = self._write(tmp_path / "w.txt", b"1 2 0.5\n3 4 1.5\n")
+        src, dst, w = load_text_edges(p, weights=True, dtype=np.int32)
+        assert src.dtype == np.int32 and w.dtype == np.float32
+        np.testing.assert_allclose(w, [0.5, 1.5])
+
+    def test_chunk_boundaries_cover_everything(self, tmp_path):
+        lines = b"".join(b"%d %d\n" % (i, i + 1) for i in range(107))
+        p = self._write(tmp_path / "c.txt", b"# head\n" + lines)
+        chunks = list(iter_text_edges(p, chunk_edges=10))
+        assert all(len(c[0]) <= 10 for c in chunks)
+        src = np.concatenate([c[0] for c in chunks])
+        dst = np.concatenate([c[1] for c in chunks])
+        np.testing.assert_array_equal(src, np.arange(107))
+        np.testing.assert_array_equal(dst, np.arange(107) + 1)
+        # the one-shot loader agrees regardless of chunking
+        s2, d2 = load_text_edges(p, chunk_edges=3)
+        np.testing.assert_array_equal(s2, src)
+        np.testing.assert_array_equal(d2, dst)
+
+    def test_malformed_line_raises(self, tmp_path):
+        p = self._write(tmp_path / "bad.txt", b"1 2\nonly_one_token\n")
+        with pytest.raises(ValueError, match="malformed"):
+            load_text_edges(p)
+        p2 = self._write(tmp_path / "bad2.txt", b"1 2\n3 4\n")
+        with pytest.raises(ValueError, match="malformed"):
+            load_text_edges(p2, weights=True)  # missing third column
+
+    def test_comment_only_file_is_empty(self, tmp_path):
+        p = self._write(tmp_path / "empty.txt", b"# nothing\n\n# here\n")
+        src, dst = load_text_edges(p)
+        assert len(src) == 0 and len(dst) == 0
+        assert src.dtype == np.int64
+        assert list(iter_text_edges(p)) == []
+
+
+class TestDtypePreservation:
+    @pytest.mark.parametrize(
+        "id_dtype,w_dtype",
+        [
+            (np.int32, np.float32),
+            (np.int64, np.float64),
+            (np.uint16, np.float16),
+        ],
+    )
+    def test_save_edges_roundtrip(self, tmp_path, id_dtype, w_dtype):
+        src = np.array([1, 2, 3], dtype=id_dtype)
+        dst = np.array([4, 5, 6], dtype=id_dtype)
+        w = np.array([0.5, 1.5, 2.5], dtype=w_dtype)
+        p = str(tmp_path / "edges.npz")
+        save_edges(p, src, dst, w)
+        s2, d2, w2 = load_edges(p)
+        for a, b in ((src, s2), (dst, d2), (w, w2)):
+            np.testing.assert_array_equal(a, b)
+            assert a.dtype == b.dtype, (a.dtype, b.dtype)
+
+    def test_save_edgelist_preserves_attr_dtypes(self, tmp_path):
+        el = degree_and_densify(
+            np.array([0, 1, 7]), np.array([1, 7, 0]),
+        )
+        # a hand-built EdgeList with non-default weight dtype must not be
+        # silently upcast/downcast through the container
+        el64 = EdgeList(
+            src=el.src, dst=el.dst, n=el.n,
+            out_degree=el.out_degree, in_degree=el.in_degree,
+            id_to_index=el.id_to_index,
+            weights=np.array([1.0, 2.0, 3.0], dtype=np.float64),
+        )
+        p = str(tmp_path / "el.npz")
+        save_edgelist(p, el64)
+        back = load_edgelist(p)
+        assert back.weights.dtype == np.float64
+        assert back.src.dtype == el.src.dtype == np.int32
+        assert back.id_to_index.dtype == np.int64
+        assert back.out_degree.dtype == np.int32
+        np.testing.assert_array_equal(back.src, el.src)
+        np.testing.assert_array_equal(back.weights, el64.weights)
+        assert back.n == el.n
+
+    def test_unweighted_edgelist_roundtrip(self, tmp_path):
+        el = degree_and_densify(np.array([0, 5]), np.array([5, 9]))
+        p = str(tmp_path / "el0.npz")
+        save_edgelist(p, el)
+        back = load_edgelist(p)
+        assert back.weights is None
+        np.testing.assert_array_equal(back.in_degree, el.in_degree)

@@ -1,0 +1,354 @@
+"""The on-disk DSSS store and the disk residency tier.
+
+Covers the repro.storage contract end to end without hypothesis (the
+randomized layout-equivalence sweep lives in
+tests/test_storage_property.py):
+
+* write → open round-trips every engine-facing artifact (graph arrays,
+  padded host blocks, the stored PackedSweep) as zero-copy mmap views;
+* the external-memory build produces a layout-identical container —
+  including through the bounded k-way merge path — while its allocation
+  ledger stays within ~2× the chunk budget;
+* ``residency="disk"`` is bit-identical to device/host with
+  field-identical model meters, and ``Meters.bytes_disk_read`` matches
+  the ``disk_read_bytes`` / ``packed_disk_bytes`` closed forms exactly
+  under the three-level budget;
+* corruption (bit flip, truncation) fails checksums instead of computing
+  garbage; the CLI builds, describes and verifies containers.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BFS,
+    ExecutionPlan,
+    GraphSession,
+    PageRank,
+    build_dsss,
+    disk_read_bytes,
+    packed_disk_bytes,
+)
+from repro.core.session import MODEL_METER_FIELDS, _host_block_nbytes
+from repro.graph.generators import erdos_renyi
+from repro.graph.preprocess import degree_and_densify
+from repro.storage import (
+    ChecksumError,
+    FormatError,
+    build_dsss_file,
+    open_dsss,
+    verify_dsss,
+    write_dsss,
+)
+from repro.storage.__main__ import main as storage_cli
+
+
+def _raw_edges(n=150, m=900, seed=3, weighted=True, with_dirt=True):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    if with_dirt:  # duplicates + self loops must round through identically
+        src = np.concatenate([src, src[:40], np.arange(8)])
+        dst = np.concatenate([dst, dst[:40], np.arange(8)])
+    w = None
+    if weighted:
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.1, 2.0, size=len(src)).astype(np.float32)
+    return src, dst, w
+
+
+def _graph(P=5, **kw):
+    src, dst, w = _raw_edges(**kw)
+    el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+def assert_store_matches_graph(store, g):
+    """Layout-for-layout: store views ≡ in-memory arrays (values + dtypes)."""
+    g2 = store.graph()
+    assert (g2.n, g2.m, g2.P, g2.interval_size) == (g.n, g.m, g.P, g.interval_size)
+    assert g2.src_sorted == g.src_sorted
+    for f in (
+        "src", "dst", "weights", "offsets", "out_degree", "in_degree",
+        "hub_dst_flat", "hub_inv_flat", "hub_offsets",
+    ):
+        a, b = getattr(g, f), getattr(g2, f)
+        if a is None:
+            assert b is None, f
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=f)
+        assert np.asarray(a).dtype == np.asarray(b).dtype, f
+    np.testing.assert_array_equal(
+        np.asarray(g.edgelist.id_to_index), np.asarray(g2.edgelist.id_to_index)
+    )
+    hb, hb2 = g.host_blocks(), store.host_blocks()
+    assert set(hb) == set(hb2)
+    for k in hb:
+        for leaf in ("src_local", "dst_local", "hub_inv", "hub_dst", "weights"):
+            if hb[k][leaf] is None:
+                assert hb2[k][leaf] is None
+                continue
+            np.testing.assert_array_equal(
+                hb[k][leaf], hb2[k][leaf], err_msg=f"{k}:{leaf}"
+            )
+            assert hb[k][leaf].dtype == hb2[k][leaf].dtype
+        for sc in ("e", "u", "u_bucket"):
+            assert hb[k][sc] == hb2[k][sc], (k, sc)
+    pk, pk2 = g.packed_sweep("adaptive"), store.packed()
+    for f in dataclasses.fields(pk):
+        a, b = getattr(pk, f.name), getattr(pk2, f.name)
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, np.asarray(b), err_msg=f.name)
+            assert a.dtype == np.asarray(b).dtype, f.name
+        elif a is None:
+            assert b is None, f.name
+        else:
+            assert a == b, f.name
+
+
+class TestContainer:
+    def test_write_open_roundtrip(self, tmp_path):
+        g = _graph()
+        store = write_dsss(g, str(tmp_path / "g.dsss"))
+        assert_store_matches_graph(store, g)
+        # mmap promise: the big views are file-backed, not RAM copies
+        assert isinstance(store.array("src"), np.memmap)
+        blk = next(iter(store.host_blocks().values()))
+        assert isinstance(blk["src_local"].base, np.memmap) or isinstance(
+            blk["src_local"], np.memmap
+        )
+
+    def test_unweighted_and_single_interval(self, tmp_path):
+        g = _graph(P=1, weighted=False)
+        store = write_dsss(g, str(tmp_path / "p1.dsss"))
+        assert_store_matches_graph(store, g)
+
+    def test_verify_detects_bit_flip(self, tmp_path):
+        g = _graph(weighted=False)
+        path = str(tmp_path / "g.dsss")
+        store = write_dsss(g, path)
+        seg = store.segments["p_src"]
+        with open(path, "r+b") as f:
+            f.seek(seg.offset + 3)
+            byte = f.read(1)
+            f.seek(seg.offset + 3)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        with pytest.raises(ChecksumError, match="p_src"):
+            verify_dsss(path)
+        # the default session open verifies — corruption cannot reach
+        # execution as garbage results
+        with pytest.raises(ChecksumError):
+            GraphSession.open(path)
+
+    def test_truncation_fails_loudly(self, tmp_path):
+        g = _graph(weighted=False)
+        path = str(tmp_path / "g.dsss")
+        write_dsss(g, path)
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size - 64)
+        with pytest.raises(FormatError):
+            open_dsss(path)
+
+
+class TestExternalBuild:
+    def _chunks(self, src, dst, w, step=97):
+        def factory():
+            for lo in range(0, len(src), step):
+                if w is None:
+                    yield src[lo : lo + step], dst[lo : lo + step]
+                else:
+                    yield (
+                        src[lo : lo + step],
+                        dst[lo : lo + step],
+                        w[lo : lo + step],
+                    )
+
+        return factory
+
+    @pytest.mark.parametrize("weighted", [False, True])
+    def test_matches_in_memory_pipeline(self, tmp_path, weighted):
+        src, dst, w = _raw_edges(weighted=weighted)
+        el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+        g = build_dsss(el, 5)
+        out = str(tmp_path / "ext.dsss")
+        stats = build_dsss_file(
+            self._chunks(src, dst, w), out, 5,
+            chunk_budget=1 << 20, drop_self_loops=True,
+        )
+        assert stats.m == g.m and stats.n == g.n
+        assert_store_matches_graph(open_dsss(out, verify=True), g)
+
+    def test_streamed_merge_path_identical(self, tmp_path):
+        # A budget far below every bucket forces the k-way heapq merge.
+        src, dst, w = _raw_edges(weighted=True)
+        el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+        g = build_dsss(el, 2)
+        out = str(tmp_path / "ext_stream.dsss")
+        stats = build_dsss_file(
+            self._chunks(src, dst, w), out, 2,
+            chunk_budget=4096, drop_self_loops=True,
+        )
+        assert stats.streamed_buckets > 0, "tiny budget must exercise the merge"
+        assert_store_matches_graph(open_dsss(out, verify=True), g)
+
+    def test_bounded_memory_contract(self, tmp_path):
+        # An edge list an order of magnitude past the chunk budget: the
+        # ledger's peak resident edge-array bytes must stay ~within 2x.
+        rng = np.random.default_rng(0)
+        n, m = 3000, 60_000
+        src = rng.integers(0, n, size=m)
+        dst = rng.integers(0, n, size=m)
+        budget = 96 * 1024
+        raw_bytes = src.nbytes + dst.nbytes
+        assert raw_bytes > 5 * budget, "the input must dwarf the budget"
+        out = str(tmp_path / "big.dsss")
+        stats = build_dsss_file(
+            self._chunks(src, dst, None, step=20_000), out, 8,
+            chunk_budget=budget, drop_self_loops=True,
+        )
+        assert stats.peak_edge_bytes <= 2.05 * budget, (
+            f"peak {stats.peak_edge_bytes} exceeds 2x chunk budget {budget}"
+        )
+        verify_dsss(out)  # and the result is a sound container
+        el = degree_and_densify(src, dst, drop_self_loops=True)
+        assert_store_matches_graph(open_dsss(out), build_dsss(el, 8))
+
+
+class TestCLI:
+    def test_build_info_verify(self, tmp_path, capsys):
+        src, dst, _ = _raw_edges(weighted=False, with_dirt=False)
+        txt = tmp_path / "edges.txt"
+        with open(txt, "w") as f:
+            f.write("# snap-style header\n")
+            for a, b in zip(src, dst):
+                f.write(f"{a} {b}\n")
+        out = str(tmp_path / "cli.dsss")
+        assert storage_cli(["build", str(txt), out, "--P", "4",
+                            "--drop-self-loops"]) == 0
+        assert storage_cli(["info", out]) == 0
+        assert storage_cli(["verify", out]) == 0
+        printed = capsys.readouterr().out
+        assert "OK" in printed and "segments" in printed
+        # layout equals the in-memory pipeline over the same text input
+        el = degree_and_densify(src, dst, drop_self_loops=True)
+        assert_store_matches_graph(open_dsss(out), build_dsss(el, 4))
+        # corrupt -> verify exits non-zero
+        store = open_dsss(out)
+        seg = store.segments["src"]
+        with open(out, "r+b") as f:
+            f.seek(seg.offset)
+            f.write(b"\xff\xff\xff\xff")
+        assert storage_cli(["verify", out]) == 1
+
+
+# Shared staging for the residency matrix (module-scoped: the store and
+# sessions are read-only across tests).
+@pytest.fixture(scope="module")
+def staged(tmp_path_factory):
+    g = _graph()
+    path = str(tmp_path_factory.mktemp("store") / "g.dsss")
+    write_dsss(g, path)
+    return g, path
+
+
+BUDGET = 720  # forces streaming + a strict 0 < Q < P MPU split (see
+# tests/test_packed_sweep.py) for both attribute widths
+HOST_BUDGET = 3000  # partial host cache: some blocks/chunks hit disk
+
+
+def _model(meters):
+    d = dataclasses.asdict(meters)
+    return {k: v for k, v in d.items() if k in MODEL_METER_FIELDS}
+
+
+class TestDiskResidency:
+    @pytest.mark.parametrize("strategy", ["spu", "dpu", "mpu"])
+    @pytest.mark.parametrize("execution", ["per_block", "packed"])
+    def test_bit_identity_and_closed_form(self, staged, strategy, execution):
+        g, path = staged
+        plan = ExecutionPlan(
+            PageRank(), strategy=strategy, max_iters=4, tol=0.0,
+            execution=execution,
+        )
+        dev = GraphSession(g, memory_budget=BUDGET, residency="device").run(plan)
+        host = GraphSession(g, memory_budget=BUDGET, residency="host").run(plan)
+        sess = GraphSession.open(
+            path, memory_budget=BUDGET, host_memory_budget=HOST_BUDGET,
+        )
+        assert sess.resolved_residency() == "disk"
+        disk = sess.run(plan)
+        np.testing.assert_array_equal(dev.attrs, disk.attrs)
+        np.testing.assert_array_equal(host.attrs, disk.attrs)
+        assert _model(dev.meters) == _model(host.meters) == _model(disk.meters)
+        # physical: disk ships the same bytes to the device as host mode
+        assert host.meters.bytes_h2d == disk.meters.bytes_h2d
+        assert dev.meters.bytes_disk_read == 0
+        assert host.meters.bytes_disk_read == 0
+        # ... and its disk traffic matches the closed form exactly
+        compiled = sess.compile(plan)
+        iters = disk.meters.iterations
+        if execution == "per_block":
+            nbytes = {
+                k: _host_block_nbytes(h) for k, h in sess.host_blocks.items()
+            }
+            expect = disk_read_bytes(
+                nbytes, compiled.resident, compiled.host_cached
+            )
+        else:
+            splan = sess.packed_stream_plan(
+                compiled.choice.strategy, compiled.params.Ba
+            )
+            expect = packed_disk_bytes(
+                splan.num_tiles - splan.pin_tiles - splan.host_tiles,
+                splan.tile_edges,
+                weighted=sess.has_weights,
+            )
+        assert disk.meters.bytes_disk_read == expect * iters
+        assert disk.meters.bytes_disk_read > 0
+
+    def test_unlimited_host_cache_absorbs_disk_traffic(self, staged):
+        _, path = staged
+        sess = GraphSession.open(path, memory_budget=BUDGET)
+        res = sess.run(
+            ExecutionPlan(
+                PageRank(), strategy="dpu", max_iters=2, tol=0.0,
+                execution="per_block",
+            )
+        )
+        assert res.meters.bytes_disk_read == 0
+        assert res.meters.bytes_h2d > 0  # still streamed host->device
+
+    def test_monotone_program_on_disk(self, staged):
+        g, path = staged
+        plan = ExecutionPlan(
+            BFS(), strategy="mpu", max_iters=100,
+            program_kwargs={"root": 0},
+        )
+        host = GraphSession(g, memory_budget=BUDGET, residency="host").run(plan)
+        disk = GraphSession.open(
+            path, memory_budget=BUDGET, host_memory_budget=0
+        ).run(plan)
+        np.testing.assert_array_equal(host.attrs, disk.attrs)
+        assert _model(host.meters) == _model(disk.meters)
+        assert disk.meters.bytes_disk_read > 0
+
+    def test_disk_requires_store(self, staged):
+        g, path = staged
+        with pytest.raises(ValueError, match="disk"):
+            GraphSession(g, residency="disk")
+        sess = GraphSession(g)
+        with pytest.raises(ValueError, match="disk"):
+            sess.run(ExecutionPlan(PageRank(), max_iters=1, residency="disk"))
+
+    def test_disk_session_supports_other_residencies(self, staged):
+        g, path = staged
+        sess = GraphSession.open(path, memory_budget=BUDGET)
+        plan = ExecutionPlan(
+            PageRank(), strategy="spu", max_iters=2, tol=0.0,
+            residency="host", execution="per_block",
+        )
+        ref = GraphSession(g, memory_budget=BUDGET, residency="host").run(plan)
+        got = sess.run(plan)
+        np.testing.assert_array_equal(ref.attrs, got.attrs)
+        assert got.meters.bytes_disk_read == 0  # host override: no disk charge
