@@ -35,8 +35,14 @@ import argparse
 import dataclasses
 import json
 import os
+import pathlib
 import shutil
+import sys
 import tempfile
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))  # so `benchmarks._util` resolves as a script
+sys.path.insert(0, str(_ROOT / "src"))
 
 from repro.core import (
     ExecutionPlan,

@@ -1,0 +1,159 @@
+"""Serving throughput: sequential point queries vs the micro-batcher.
+
+NXgraph's streamed sweeps make concurrent point queries (BFS
+reachability, SSSP distances, personalized PageRank) an obvious batching
+target: K compatible queries fused into one :meth:`GraphSession.run_batch`
+pass read the topology once instead of K times, so the win grows with the
+edge-to-attribute ratio. This benchmark quantifies that for the serving
+subsystem:
+
+* **sequential** — K solo ``session.run(plan)`` calls, the no-server
+  baseline (also what a ``max_batch=1`` server degenerates to);
+* **served** — the same K requests through :class:`GraphServer`
+  (``max_batch=K``), which buckets them by ``plan.batch_key()`` and
+  dispatches one fused batch.
+
+Both paths are warmed first so compile time is excluded; results are
+asserted bit-identical before any timing is trusted. Sweeps K ∈ {1, 4, 16}
+over BFS and PageRank under streamed host residency (constrained budget —
+the serving regime) and reports per-K speedup, QPS and batch occupancy.
+
+Run: ``PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+[--out BENCH_serving.json] [--assert-speedup X]`` (or via
+``benchmarks/run.py``). ``--assert-speedup`` fails the run when the
+largest-K batched throughput is below X× sequential — CI's bench-smoke
+lane runs with 1.2, the committed full run clears 2x.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))  # so `benchmarks._util` resolves as a script
+sys.path.insert(0, str(_ROOT / "src"))
+
+from repro.core import BFS, ExecutionPlan, PageRank, build_dsss  # noqa: E402
+from repro.serving import GraphServer, QueryRequest, SessionPool  # noqa: E402
+
+from benchmarks._util import small_rmat  # noqa: E402
+
+KS = (1, 4, 16)
+
+
+def _plans(program, k, n):
+    if isinstance(program, PageRank):
+        # K identical whole-graph analytic queries (PageRank takes no
+        # Initialize kwargs) — the repeated-dashboard-query case; fusion
+        # still reads the streamed topology once for all K.
+        return [
+            ExecutionPlan(program, strategy="spu", max_iters=3, tol=0.0)
+            for _ in range(k)
+        ]
+    return [
+        ExecutionPlan(
+            program, strategy="spu", max_iters=n + 1,
+            program_kwargs={"root": r},
+        )
+        for r in range(k)
+    ]
+
+
+def run(smoke: bool = False, payload: dict | None = None):
+    el = small_rmat(10 if smoke else 13, 16)
+    g = build_dsss(el, 8 if smoke else 16)
+    budget = int(g.total_edge_bytes(8) * 0.25)  # streamed: serving regime
+    iters = 2 if smoke else 3
+    pool = SessionPool()
+    pool.register("g", g, memory_budget=budget, residency="host")
+    session = pool.session("g")
+    rows = []
+    lines = []
+    for program, name in ((BFS(), "bfs"), (PageRank(), "pagerank")):
+        for k in KS:
+            plans = _plans(program, k, g.n)
+            # Warm both paths (jit compile for solo and fused shapes) and
+            # check the served results match the solo ones bit-for-bit —
+            # a throughput number for wrong answers is worthless.
+            solo = [session.run(p) for p in plans]
+            server = GraphServer(pool, max_batch=k, max_wait_ms=2.0)
+            served = server.serve([QueryRequest("g", p) for p in plans])
+            for s, q in zip(solo, served):
+                np.testing.assert_array_equal(s.attrs, q.result.attrs)
+
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                for p in plans:
+                    session.run(p)
+            seq_s = (time.perf_counter() - t0) / iters
+
+            server = GraphServer(pool, max_batch=k, max_wait_ms=2.0)
+            reqs = [QueryRequest("g", p) for p in plans]
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                server.serve(reqs)
+            batch_s = (time.perf_counter() - t0) / iters
+            st = server.stats()
+
+            speedup = seq_s / batch_s
+            rows.append(
+                {
+                    "program": name,
+                    "k": k,
+                    "seq_seconds": seq_s,
+                    "batch_seconds": batch_s,
+                    "speedup": speedup,
+                    "seq_qps": k / seq_s,
+                    "batch_qps": k / batch_s,
+                    "mean_occupancy": st.mean_occupancy,
+                    "fused_batches": st.fused_batches,
+                    "batches": st.batches,
+                    "mean_queue_s": st.mean_queue_s,
+                    "mean_run_s": st.mean_run_s,
+                }
+            )
+            lines.append(
+                f"{name}_k{k},seq={seq_s*1e3:.1f}ms,batch={batch_s*1e3:.1f}ms,"
+                f"speedup={speedup:.2f}x,qps={k/batch_s:.1f},"
+                f"occupancy={st.mean_occupancy:.1f}"
+            )
+    if payload is not None:
+        payload["graph"] = {
+            "n": g.n, "m": g.m, "P": g.P, "smoke": smoke,
+            "memory_budget": budget, "residency": "host",
+        }
+        payload["rows"] = rows
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller graph (CI bench-smoke lane)")
+    ap.add_argument("--out", default=None, help="write results as JSON")
+    ap.add_argument("--assert-speedup", type=float, default=None,
+                    help="fail unless batched >= X times sequential at max K")
+    args = ap.parse_args()
+    payload: dict = {}
+    lines = run(smoke=args.smoke, payload=payload)
+    print("\n".join(lines))
+    if args.assert_speedup is not None:
+        rows = payload["rows"]
+        best = max(r["speedup"] for r in rows if r["k"] == max(KS))
+        assert best >= args.assert_speedup, (
+            f"batched serving speedup {best:.2f}x at K={max(KS)} is below "
+            f"the required {args.assert_speedup}x — micro-batching has "
+            "stopped amortizing the streamed topology"
+        )
+        print(f"speedup gate passed: {best:.2f}x >= {args.assert_speedup}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ SUITES = [
     ("fig11_scalability", "benchmarks.bench_scalability"),
     ("fig12_algorithms", "benchmarks.bench_algorithms"),
     ("tables56_fig6_systems", "benchmarks.bench_pagerank_systems"),
+    ("serving", "benchmarks.bench_serving"),
     ("lm_step", "benchmarks.bench_lm_step"),
 ]
 

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import Model
-from repro.serving import Request, ServeEngine
+from repro.serving.llm_demo import Request, ServeEngine
 
 
 def main():

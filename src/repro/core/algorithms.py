@@ -51,8 +51,22 @@ def _as_graph(g: EdgeList | DSSSGraph, P: int) -> DSSSGraph:
     return _DSSS_LRU.get_or_build(g, (P,), lambda: build_dsss(g, P))
 
 
-def _session(g, P: int, memory_budget: int | None) -> GraphSession:
-    return get_session(_as_graph(g, P), memory_budget=memory_budget)
+def _session(
+    g,
+    P: int,
+    memory_budget: int | None,
+    residency: str = "auto",
+    execution: str = "auto",
+) -> GraphSession:
+    # Every axis flows into get_session's variant key, so drivers called
+    # with different residency/execution knobs never wrongly share (or
+    # spuriously duplicate) a pooled session.
+    return get_session(
+        _as_graph(g, P),
+        memory_budget=memory_budget,
+        residency=residency,
+        execution=execution,
+    )
 
 
 def pagerank(
@@ -64,8 +78,10 @@ def pagerank(
     tol: float = 0.0,
     strategy: str = "auto",
     memory_budget: int | None = None,
+    residency: str = "auto",
+    execution: str = "auto",
 ) -> Result:
-    sess = _session(g, P, memory_budget)
+    sess = _session(g, P, memory_budget, residency, execution)
     # tol=0 → fixed iteration count (paper runs 10 PageRank iterations).
     return sess.run(
         ExecutionPlan(
@@ -81,8 +97,10 @@ def bfs(
     P: int = 8,
     strategy: str = "auto",
     memory_budget: int | None = None,
+    residency: str = "auto",
+    execution: str = "auto",
 ) -> Result:
-    sess = _session(g, P, memory_budget)
+    sess = _session(g, P, memory_budget, residency, execution)
     return sess.run(
         ExecutionPlan(
             BFS(),
@@ -100,14 +118,23 @@ def multi_bfs(
     P: int = 8,
     strategy: str = "auto",
     memory_budget: int | None = None,
+    residency: str = "auto",
+    execution: str = "auto",
+    server=None,
 ) -> BatchResult:
     """BFS from K sources in one batched pass over the edge blocks.
 
     All K depth frontiers advance together: each sub-shard is streamed once
     per sweep (``meters.bytes_read_edges`` is the single-query cost, not
     K×) while the vmapped block primitives update K attribute states.
+
+    With ``server=`` (a :class:`repro.serving.GraphServer`) the K sources
+    are submitted as individual point queries instead: they flow through
+    the server's queue and dynamic micro-batcher — which fuses them back
+    onto ``run_batch`` — and return the same ``BatchResult`` shape, with
+    identical per-query results.
     """
-    sess = _session(g, P, memory_budget)
+    sess = _session(g, P, memory_budget, residency, execution)
     plans = [
         ExecutionPlan(
             BFS(),
@@ -117,6 +144,14 @@ def multi_bfs(
         )
         for r in sources
     ]
+    if server is not None:
+        return server.serve_plans(
+            sess.graph,
+            plans,
+            memory_budget=memory_budget,
+            residency=residency,
+            execution=execution,
+        )
     return sess.run_batch(plans)
 
 
@@ -148,8 +183,10 @@ def sssp(
     P: int = 8,
     strategy: str = "auto",
     memory_budget: int | None = None,
+    residency: str = "auto",
+    execution: str = "auto",
 ) -> Result:
-    sess = _session(g, P, memory_budget)
+    sess = _session(g, P, memory_budget, residency, execution)
     return sess.run(
         ExecutionPlan(
             SSSP(),
@@ -167,9 +204,16 @@ def multi_sssp(
     P: int = 8,
     strategy: str = "auto",
     memory_budget: int | None = None,
+    residency: str = "auto",
+    execution: str = "auto",
+    server=None,
 ) -> BatchResult:
-    """Weighted shortest paths from K sources, one streamed pass (batched)."""
-    sess = _session(g, P, memory_budget)
+    """Weighted shortest paths from K sources, one streamed pass (batched).
+
+    ``server=`` routes the K sources through the serving micro-batcher
+    (see :func:`multi_bfs`).
+    """
+    sess = _session(g, P, memory_budget, residency, execution)
     plans = [
         ExecutionPlan(
             SSSP(),
@@ -179,6 +223,14 @@ def multi_sssp(
         )
         for r in sources
     ]
+    if server is not None:
+        return server.serve_plans(
+            sess.graph,
+            plans,
+            memory_budget=memory_budget,
+            residency=residency,
+            execution=execution,
+        )
     return sess.run_batch(plans)
 
 

@@ -137,7 +137,19 @@ class ExecutionPlan:
         return dataclasses.replace(self, program_kwargs=merged)
 
     def batch_key(self) -> tuple:
-        """Plans sharing a batch_key can fuse into one streamed pass."""
+        """Plans sharing a batch_key can fuse into one streamed pass.
+
+        This is the grouping key of both :meth:`GraphSession.run_batch`
+        and the serving micro-batcher
+        (:class:`repro.serving.server.GraphServer` buckets queued requests
+        by ``(graph, batch_key())``): program, strategy, iteration limits
+        and the residency/execution axes must agree — Initialize kwargs
+        (BFS roots, SSSP sources, seeds) may differ. It is a *necessary*
+        condition; fusion additionally requires identical aux arrays,
+        which ``run_batch`` re-verifies before fusing (and falls back to
+        sequential execution when violated, e.g. two PageRank programs
+        frozen with different damping).
+        """
         return (
             self.program,
             self.strategy,
@@ -146,3 +158,7 @@ class ExecutionPlan:
             self.residency,
             self.execution,
         )
+
+    def compatible_with(self, other: "ExecutionPlan") -> bool:
+        """True iff the two plans may fuse into one streamed pass."""
+        return self.batch_key() == other.batch_key()

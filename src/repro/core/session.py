@@ -1668,6 +1668,29 @@ class GraphSession:
         return mode
 
     # -- budget accounting ---------------------------------------------------
+    def staged_host_bytes(self) -> int:
+        """Raw host RAM the staged graph currently occupies (pool accounting).
+
+        In-memory sessions: the padded numpy 'shard files' — the dominant
+        per-graph staging cost a :class:`repro.serving.pool.SessionPool`
+        charges against its capacity. Disk-backed sessions: the mmap views
+        cost nothing resident, so only the materialized RAM caches (the
+        ``host_memory_budget`` mid tier) count — the figure grows as
+        cached blocks / tile chunks are first touched.
+        """
+        if self._store is not None:
+            total = sum(
+                _host_block_nbytes(b) for b in self._host_cache.values()
+            )
+            total += sum(
+                sum(a.nbytes for a in chunk.values())
+                for chunk in self._packed_ram.values()
+            )
+            return int(total)
+        return int(
+            sum(_host_block_nbytes(b) for b in self.host_blocks.values())
+        )
+
     def pinned_device_bytes(self) -> tuple[float, float]:
         """(model, actual) bytes of the currently device-pinned topology.
 
@@ -2193,6 +2216,7 @@ def get_session(
     graph: DSSSGraph,
     *,
     memory_budget: int | None = None,
+    host_memory_budget: int | None = None,
     residency: str = "auto",
     execution: str = "auto",
     packing: str = "auto",
@@ -2204,19 +2228,29 @@ def get_session(
     Only use this for graph objects the caller keeps alive across calls;
     for a throwaway graph, construct :class:`GraphSession` directly so the
     staged blocks die with it instead of pinning an LRU slot. Variants
-    (budget/residency/execution/packing/byte sizes) share one set of host
+    (budgets/residency/execution/packing/byte sizes) share one set of host
     buffers, one lazily-staged device mirror and one packed tile layout
-    per packing mode.
+    per packing mode. Every session axis participates in the variant key,
+    so callers differing in *any* knob never wrongly share (or spuriously
+    duplicate) a session. ``host_memory_budget`` is accepted and keyed for
+    consistency and forwarded — in-memory graphs reject it with
+    :class:`GraphSession`'s own error (it is the disk tier's RAM bound;
+    disk-backed sessions come from :meth:`GraphSession.open` or a
+    :class:`repro.serving.pool.SessionPool`, not this cache).
     """
     slot = _SESSION_LRU.get_or_build(
         graph, (), lambda: {"staged": _StagedGraph(graph), "variants": {}}
     )
-    key = (memory_budget, residency, execution, packing, Be, Bv)
+    key = (
+        memory_budget, host_memory_budget, residency, execution, packing,
+        Be, Bv,
+    )
     session = slot["variants"].get(key)
     if session is None:
         session = GraphSession(
             graph,
             memory_budget=memory_budget,
+            host_memory_budget=host_memory_budget,
             residency=residency,
             execution=execution,
             packing=packing,

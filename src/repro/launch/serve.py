@@ -17,7 +17,7 @@ def main():
 
     from repro.configs import get_config
     from repro.models import Model
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.llm_demo import Request, ServeEngine
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)

@@ -1,4 +1,50 @@
-"""Serving: batched prefill/decode engine with sampling."""
-from repro.serving.engine import Request, ServeEngine, sample_token
+"""repro.serving — async graph-query serving on top of GraphSession.
 
-__all__ = ["Request", "ServeEngine", "sample_token"]
+The online face of the engine: a bounded request queue, a dynamic
+micro-batcher that fuses compatible point queries (BFS reachability,
+personalized PageRank, SSSP distances) into single
+:meth:`~repro.core.session.GraphSession.run_batch` passes, admission
+control against the three-level memory budget, and a multi-graph
+:class:`SessionPool` whose cold graphs page in from ``.dsss`` containers.
+
+Quickstart::
+
+    pool = SessionPool(capacity_bytes=1 << 30)
+    pool.register("tw", "twitter.dsss", memory_budget=1 << 28)
+    server = GraphServer(pool, max_batch=16, max_wait_ms=2.0)
+    results = server.serve(
+        [QueryRequest("tw", ExecutionPlan(BFS(), program_kwargs={"root": r}))
+         for r in roots]
+    )
+    print(server.stats().qps, server.stats().mean_occupancy)
+
+Every delivered result is bit-identical to a solo ``session.run(plan)``
+and carries this request's exact share of the fused batch's meters.
+
+The seed repo's LLM token-generation demo lives in
+:mod:`repro.serving.llm_demo` (import it explicitly); this package's
+public API is graph serving only.
+"""
+from repro.serving.api import (
+    AdmissionError,
+    QueryRequest,
+    QueryResult,
+    RequestTiming,
+    ServerStats,
+    split_meters,
+)
+from repro.serving.pool import PoolStats, SessionPool
+from repro.serving.server import GraphServer, estimate_inflight_bytes
+
+__all__ = [
+    "AdmissionError",
+    "GraphServer",
+    "PoolStats",
+    "QueryRequest",
+    "QueryResult",
+    "RequestTiming",
+    "ServerStats",
+    "SessionPool",
+    "estimate_inflight_bytes",
+    "split_meters",
+]

@@ -1,5 +1,13 @@
-"""Batched serving engine: length-bucketed batching, prefill + decode,
-sampling.
+"""LLM serving demo: length-bucketed batching, prefill + decode, sampling.
+
+This is the *language-model* serving demo that rode along with the seed
+repo's LM framework — it batches token-generation requests against
+``repro.models`` and has nothing to do with the graph engine. The graph
+query serving subsystem (request queue, dynamic micro-batching onto
+``GraphSession.run_batch``, admission control) lives in
+:mod:`repro.serving.server`; ``repro.serving`` exports only that API.
+Import this module explicitly (``from repro.serving import llm_demo``) to
+use the LM demo.
 
 The batcher buckets queued requests by prompt length (uniform-length
 batches keep the cache layout exact — no left-pad attention pollution),

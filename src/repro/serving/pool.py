@@ -1,0 +1,221 @@
+"""Multi-graph session pool with explicit staged-bytes capacity.
+
+Evolves the module-level ``get_session`` LRU into a first-class object the
+server can do admission control against: each registered graph (an
+in-memory :class:`~repro.core.dsss.DSSSGraph` or a ``.dsss`` path) opens
+lazily into a :class:`~repro.core.session.GraphSession`, the pool accounts
+the host RAM each open session's staged buffers occupy
+(:meth:`GraphSession.staged_host_bytes`), and least-recently-used idle
+sessions are evicted when ``capacity_bytes`` / ``max_open`` would be
+exceeded. Evicting a path-registered graph is cheap to undo — the next
+query pages it back in from the ``.dsss`` container via
+:meth:`GraphSession.open` (mmap views, nothing edge-scale in RAM);
+object-registered graphs restage from the in-memory arrays.
+
+Sessions with in-flight work are pinned (``acquire``/``release`` refcount)
+and never evicted mid-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any
+
+from repro.core.dsss import DSSSGraph
+from repro.core.session import GraphSession
+
+__all__ = ["PoolStats", "SessionPool"]
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Snapshot of the pool's staging ledger."""
+
+    registered: int = 0
+    open_sessions: int = 0
+    staged_bytes: int = 0  # host RAM of all open sessions' staged buffers
+    capacity_bytes: int | None = None
+    opens: int = 0  # sessions staged (first open or re-open after evict)
+    evictions: int = 0
+    hits: int = 0  # session() calls served by an already-open session
+
+
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    source: Any  # DSSSGraph | str (.dsss path)
+    kwargs: dict
+    session: GraphSession | None = None
+    in_use: int = 0
+
+
+class SessionPool:
+    """Named graphs → lazily opened, capacity-bounded ``GraphSession``\\ s.
+
+    Args:
+      capacity_bytes: bound on the summed
+        :meth:`~repro.core.session.GraphSession.staged_host_bytes` of open
+        sessions. ``None`` = unbounded. The bound is enforced by evicting
+        idle LRU sessions *before* each open; a single graph larger than
+        the capacity still opens (it alone defines the working set) —
+        mirroring ``memory_budget`` semantics, where the budget shapes
+        residency rather than refusing the graph.
+      max_open: bound on simultaneously open sessions (the old
+        ``get_session`` LRU's size-8 analogue).
+    """
+
+    def __init__(
+        self, *, capacity_bytes: int | None = None, max_open: int = 8
+    ):
+        self.capacity_bytes = capacity_bytes
+        self.max_open = max_open
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self._opens = 0
+        self._evictions = 0
+        self._hits = 0
+
+    # -- registration --------------------------------------------------------
+    def register(self, name: str, source, **session_kwargs) -> str:
+        """Register a graph under ``name``.
+
+        ``source`` is a ``DSSSGraph`` (staged in-memory on open) or a
+        ``str`` path to a ``.dsss`` container (opened disk-backed via
+        :meth:`GraphSession.open`; cold graphs page in from the file).
+        ``session_kwargs`` (memory_budget, host_memory_budget, residency,
+        execution, packing, Be, Bv) are applied at every (re-)open.
+        """
+        if name in self._entries:
+            raise ValueError(f"graph {name!r} already registered")
+        if not isinstance(source, (DSSSGraph, str)):
+            raise TypeError(
+                "source must be a DSSSGraph or a .dsss path, "
+                f"got {type(source).__name__}"
+            )
+        self._entries[name] = _Entry(name=name, source=source, kwargs=session_kwargs)
+        return name
+
+    def ensure(self, graph: DSSSGraph, **session_kwargs) -> str:
+        """Auto-register an anonymous graph object by identity (idempotent).
+
+        The pool holds a strong reference to the graph for the entry's
+        lifetime — use :meth:`register` with an explicit name (or a
+        ``.dsss`` path) for long-lived servers.
+        """
+        kw_tag = hash(tuple(sorted(session_kwargs.items()))) & 0xFFFF
+        # id() is unique among live objects and the entry holds a strong
+        # reference, so an existing entry under this name is this graph.
+        name = f"graph@{id(graph):x}/{kw_tag:04x}"
+        if name not in self._entries:
+            self.register(name, graph, **session_kwargs)
+        return name
+
+    def resolve(self, graph) -> str:
+        """Normalize a request's ``graph`` field to a pool key."""
+        if isinstance(graph, str):
+            if graph not in self._entries:
+                raise KeyError(f"graph {graph!r} is not registered")
+            return graph
+        if isinstance(graph, DSSSGraph):
+            return self.ensure(graph)
+        raise TypeError(
+            "QueryRequest.graph must be a registered name or a DSSSGraph, "
+            f"got {type(graph).__name__}"
+        )
+
+    def names(self) -> list[str]:
+        return list(self._entries)
+
+    # -- access --------------------------------------------------------------
+    def session(self, name: str) -> GraphSession:
+        """The (opened) session for ``name``; LRU-bumps the entry."""
+        entry = self._entries[name]
+        if entry.session is None:
+            self._open(entry)
+        else:
+            self._hits += 1
+        self._entries.move_to_end(name)
+        return entry.session
+
+    def acquire(self, name: str) -> GraphSession:
+        """Like :meth:`session`, and pins the entry against eviction."""
+        session = self.session(name)
+        self._entries[name].in_use += 1
+        return session
+
+    def release(self, name: str) -> None:
+        entry = self._entries[name]
+        if entry.in_use <= 0:
+            raise RuntimeError(f"release() without acquire() for {name!r}")
+        entry.in_use -= 1
+
+    def evict(self, name: str) -> bool:
+        """Drop ``name``'s open session (no-op if cold or in use)."""
+        entry = self._entries[name]
+        if entry.session is None or entry.in_use > 0:
+            return False
+        entry.session = None
+        self._evictions += 1
+        return True
+
+    # -- accounting ----------------------------------------------------------
+    def staged_bytes(self) -> int:
+        """Summed host RAM of every open session's staged buffers (live —
+        disk-backed sessions grow as their RAM caches materialize)."""
+        return sum(
+            int(e.session.staged_host_bytes())
+            for e in self._entries.values()
+            if e.session is not None
+        )
+
+    def stats(self) -> PoolStats:
+        return PoolStats(
+            registered=len(self._entries),
+            open_sessions=sum(
+                1 for e in self._entries.values() if e.session is not None
+            ),
+            staged_bytes=self.staged_bytes(),
+            capacity_bytes=self.capacity_bytes,
+            opens=self._opens,
+            evictions=self._evictions,
+            hits=self._hits,
+        )
+
+    # -- internals -----------------------------------------------------------
+    def _open(self, entry: _Entry) -> None:
+        if isinstance(entry.source, str):
+            entry.session = GraphSession.open(entry.source, **entry.kwargs)
+        else:
+            entry.session = GraphSession(entry.source, **entry.kwargs)
+        self._opens += 1
+        self._evict_to_fit(keep=entry.name)
+
+    def _evict_to_fit(self, keep: str) -> None:
+        """Evict idle LRU sessions until capacity/max_open hold.
+
+        The just-opened ``keep`` entry is never evicted: one graph larger
+        than the capacity runs alone rather than thrashing.
+        """
+
+        def over() -> bool:
+            n_open = sum(
+                1 for e in self._entries.values() if e.session is not None
+            )
+            if n_open > self.max_open:
+                return True
+            return (
+                self.capacity_bytes is not None
+                and self.staged_bytes() > self.capacity_bytes
+            )
+
+        while over():
+            victim = next(
+                (
+                    e
+                    for e in self._entries.values()  # LRU order
+                    if e.session is not None and e.in_use == 0 and e.name != keep
+                ),
+                None,
+            )
+            if victim is None:
+                break  # everything else is in use — nothing evictable
+            self.evict(victim.name)

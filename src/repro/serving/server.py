@@ -1,0 +1,458 @@
+"""GraphServer — asyncio request queue, dynamic micro-batching, admission.
+
+The serving loop that feeds :meth:`GraphSession.run_batch`:
+
+* **Queue**: ``submit`` places a :class:`~repro.serving.api.QueryRequest`
+  into a compatibility bucket keyed by ``(graph, plan.batch_key())`` —
+  reusing :class:`~repro.core.plan.ExecutionPlan` hashability — and
+  returns a future. The queue is bounded (``max_queue``): beyond it,
+  ``queue_policy="reject"`` raises :class:`AdmissionError` (shed load),
+  ``"wait"`` backpressures the submitter until a slot frees.
+* **Micro-batcher**: a dispatcher task drains the *largest* bucket first
+  (maximizing fused occupancy, like the seed LLM batcher), waiting up to
+  ``max_wait_ms`` for a partially filled bucket to grow before cutting a
+  batch of ≤ ``max_batch`` requests. Each batch is one
+  ``session.run_batch(plans)`` call — K point queries ride one streamed
+  pass, edge bytes paid once (``run_batch`` itself re-verifies aux-level
+  fusability and falls back to sequential runs if e.g. two PageRank
+  plans froze different damping aux; results are identical either way).
+* **Admission control**: before a batch runs, its in-flight byte estimate
+  (:func:`estimate_inflight_bytes` — the session's three-level-budget
+  resident set / packed stream plan for device topology, plus
+  ``2·n_pad·Ba·K`` attribute state) must fit ``inflight_capacity``
+  alongside already-running batches, or the batch waits. A batch larger
+  than the whole capacity runs *alone* (counted in
+  ``admission_overflows``) — capacity bounds concurrency; the per-run
+  working set is already bounded by each session's ``memory_budget``.
+* **Sessions**: graphs come from a :class:`~repro.serving.pool.
+  SessionPool`; a per-graph lock serializes batches on one session
+  (``GraphSession`` run state is not reentrant) while different graphs
+  run concurrently, up to ``max_concurrent`` executor threads.
+
+``serve(requests)`` is the synchronous convenience wrapper (start →
+submit all → gather → drain → stop); long-running callers use
+``async with GraphServer(...) as srv: await srv.submit(...)``.
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Sequence
+
+from repro.core.plan import ExecutionPlan
+from repro.core.session import BatchResult, GraphSession, Meters
+from repro.serving.api import (
+    AdmissionError,
+    QueryRequest,
+    QueryResult,
+    RequestTiming,
+    ServerStats,
+    split_meters,
+)
+from repro.serving.pool import SessionPool
+
+__all__ = ["GraphServer", "estimate_inflight_bytes"]
+
+
+def estimate_inflight_bytes(
+    session: GraphSession, plan: ExecutionPlan, k: int
+) -> float:
+    """Model bytes a K-query batch of ``plan`` keeps in flight on device.
+
+    Topology follows the session's resolved placement — the same
+    accounting that drives ``peak_device_graph_bytes``:
+
+    * streamed residencies ("host"/"disk"), packed execution: the
+      budget-pinned tile prefix plus the ≤2-chunk double-buffer ring
+      (:meth:`GraphSession.packed_stream_plan`);
+    * streamed residencies, per-block execution: the pinned resident set
+      plus a two-block ring of the largest streamed block
+      (:meth:`GraphSession._resolve_residency` semantics);
+    * "device": the whole staged topology (``m·Be``).
+
+    Attribute state adds ``2·n_pad·Ba·K`` (ping-pong copies per query).
+    All quantities are model units (``e·Be`` real edges), the same units
+    as ``memory_budget`` and the meters, so admission accounting composes
+    with the session's own budget enforcement.
+    """
+    compiled = session.compile(plan)
+    g = session.graph
+    ba = plan.program.attr_bytes
+    attr = 2.0 * g.n_pad * ba * k
+    if compiled.residency in ("host", "disk"):
+        if compiled.execution == "packed":
+            splan = session.packed_stream_plan(compiled.choice.strategy, ba)
+            topo = splan.pin_model_bytes + 2.0 * splan.max_chunk_model_bytes
+        else:
+            host = session.host_blocks
+            be = session.Be
+            topo = float(
+                sum(host[key]["e"] * be for key in compiled.resident)
+            )
+            streamed = [
+                h["e"] * be
+                for key, h in host.items()
+                if key not in compiled.resident
+            ]
+            topo += 2.0 * max(streamed, default=0)
+    else:
+        topo = float(g.m * session.Be)
+    return attr + topo
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: QueryRequest
+    graph_key: str
+    future: asyncio.Future
+    timing: RequestTiming
+
+
+class GraphServer:
+    """Async graph-query server over a :class:`SessionPool`."""
+
+    def __init__(
+        self,
+        pool: SessionPool | None = None,
+        *,
+        max_batch: int = 16,
+        max_wait_ms: float = 2.0,
+        max_queue: int = 1024,
+        queue_policy: str = "reject",
+        inflight_capacity: float | None = None,
+        max_concurrent: int = 2,
+    ):
+        if queue_policy not in ("reject", "wait"):
+            raise ValueError(
+                f"queue_policy must be 'reject' or 'wait', got {queue_policy!r}"
+            )
+        if max_batch < 1 or max_queue < 1 or max_concurrent < 1:
+            raise ValueError("max_batch, max_queue, max_concurrent must be ≥ 1")
+        self.pool = pool if pool is not None else SessionPool()
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.max_queue = max_queue
+        self.queue_policy = queue_policy
+        self.inflight_capacity = inflight_capacity
+        self.max_concurrent = max_concurrent
+        # Buckets: compatibility key -> FIFO of pending requests. Insertion
+        # order of the OrderedDict breaks largest-bucket ties (oldest wins).
+        self._buckets: "OrderedDict[tuple, list[_Pending]]" = OrderedDict()
+        self._pending = 0
+        self._next_id = 0
+        self._running = False
+        # Loop-bound runtime state (created in start(), per event loop).
+        self._wakeup: asyncio.Event | None = None
+        self._space: asyncio.Condition | None = None
+        self._admit_cv: asyncio.Condition | None = None
+        self._exec_sem: asyncio.Semaphore | None = None
+        self._dispatcher: asyncio.Task | None = None
+        self._tasks: set[asyncio.Task] = set()
+        self._locks: dict[str, asyncio.Lock] = {}
+        self._executor: concurrent.futures.ThreadPoolExecutor | None = None
+        # Counters (survive across start/stop cycles).
+        self._inflight_bytes = 0.0
+        self._stats = ServerStats()
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._lat_queue = 0.0
+        self._lat_run = 0.0
+        self._lat_total = 0.0
+        self._lat_max = 0.0
+
+    # -- lifecycle -----------------------------------------------------------
+    async def start(self) -> "GraphServer":
+        if self._running:
+            raise RuntimeError("server already started")
+        self._running = True
+        self._wakeup = asyncio.Event()
+        self._space = asyncio.Condition()
+        self._admit_cv = asyncio.Condition()
+        self._exec_sem = asyncio.Semaphore(self.max_concurrent)
+        self._locks = {}
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.max_concurrent, thread_name_prefix="graph-serve"
+        )
+        self._dispatcher = asyncio.create_task(self._dispatch_loop())
+        return self
+
+    async def stop(self) -> None:
+        """Drain the queue, wait for in-flight batches, stop the dispatcher."""
+        if not self._running:
+            return
+        self._running = False
+        self._wakeup.set()
+        await self._dispatcher
+        while self._tasks:
+            await asyncio.gather(*list(self._tasks), return_exceptions=True)
+        self._executor.shutdown(wait=True)
+        self._dispatcher = None
+        self._executor = None
+
+    async def __aenter__(self) -> "GraphServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- submission ----------------------------------------------------------
+    async def submit(self, request: QueryRequest) -> asyncio.Future:
+        """Enqueue one request; resolves to a :class:`QueryResult`.
+
+        Raises :class:`AdmissionError` immediately when the bounded queue
+        is full under ``queue_policy="reject"``; awaits a slot under
+        ``"wait"``.
+        """
+        if not self._running:
+            raise RuntimeError("server is not started (use start()/serve())")
+        if self._pending >= self.max_queue:
+            if self.queue_policy == "reject":
+                self._stats.rejected += 1
+                raise AdmissionError(
+                    f"queue full ({self._pending}/{self.max_queue} pending)"
+                )
+            async with self._space:
+                await self._space.wait_for(lambda: self._pending < self.max_queue)
+        graph_key = self.pool.resolve(request.graph)
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now
+        pending = _Pending(
+            request=request,
+            graph_key=graph_key,
+            future=asyncio.get_running_loop().create_future(),
+            timing=RequestTiming(enqueued=now),
+        )
+        key = (graph_key, request.plan.batch_key())
+        self._buckets.setdefault(key, []).append(pending)
+        self._pending += 1
+        self._stats.submitted += 1
+        self._wakeup.set()
+        return pending.future
+
+    def serve(self, requests: Sequence[QueryRequest]) -> list[QueryResult]:
+        """Synchronous convenience: run a fresh event loop over the batch.
+
+        Submits every request (so the micro-batcher sees them together),
+        gathers all results, drains and stops. Raises the first submit
+        rejection / execution error.
+        """
+
+        async def _run():
+            async with self:
+                futures = [await self.submit(r) for r in requests]
+                return list(await asyncio.gather(*futures))
+
+        return asyncio.run(_run())
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> ServerStats:
+        s = self._stats
+        done = s.completed
+        window = (
+            (self._t_last - self._t_first)
+            if (self._t_first is not None and self._t_last is not None)
+            else 0.0
+        )
+        return dataclasses.replace(
+            s,
+            queue_depth=self._pending,
+            inflight_bytes=self._inflight_bytes,
+            qps=(done / window) if window > 0 else 0.0,
+            mean_queue_s=self._lat_queue / done if done else 0.0,
+            mean_run_s=self._lat_run / done if done else 0.0,
+            mean_total_s=self._lat_total / done if done else 0.0,
+            max_total_s=self._lat_max,
+            meters=dataclasses.replace(s.meters),
+            pool=self.pool.stats(),
+        )
+
+    # -- dispatcher ----------------------------------------------------------
+    def _largest_bucket_key(self) -> tuple | None:
+        best, best_len = None, 0
+        for key, bucket in self._buckets.items():
+            if len(bucket) > best_len:
+                best, best_len = key, len(bucket)
+        return best
+
+    async def _dispatch_loop(self) -> None:
+        while True:
+            if self._pending == 0:
+                if not self._running:
+                    return
+                self._wakeup.clear()
+                # Re-check under the cleared flag: a submit between the
+                # check above and clear() has already re-set the event.
+                if self._pending == 0 and not self._running:
+                    return
+                await self._wakeup.wait()
+                continue
+            key = self._largest_bucket_key()
+            bucket = self._buckets[key]
+            if (
+                self._running
+                and len(bucket) < self.max_batch
+                and self.max_wait_ms > 0
+            ):
+                # Batching window: let co-submitted compatible requests
+                # land before cutting the batch. One bounded sleep — the
+                # queue keeps filling while previous batches execute, so
+                # saturated servers cut full batches without waiting.
+                await asyncio.sleep(self.max_wait_ms / 1000.0)
+                key = self._largest_bucket_key()
+                bucket = self._buckets[key]
+            batch = bucket[: self.max_batch]
+            del bucket[: len(batch)]
+            if not bucket:
+                del self._buckets[key]
+            self._pending -= len(batch)
+            async with self._space:
+                self._space.notify_all()
+            task = asyncio.create_task(self._run_one_batch(key[0], batch))
+            self._tasks.add(task)
+            task.add_done_callback(self._tasks.discard)
+
+    # -- admission -----------------------------------------------------------
+    async def _admit(self, estimate: float) -> None:
+        if self.inflight_capacity is None:
+            self._inflight_bytes += estimate
+            self._stats.peak_inflight_bytes = max(
+                self._stats.peak_inflight_bytes, self._inflight_bytes
+            )
+            return
+        async with self._admit_cv:
+            await self._admit_cv.wait_for(
+                lambda: self._inflight_bytes == 0.0
+                or self._inflight_bytes + estimate <= self.inflight_capacity
+            )
+            if estimate > self.inflight_capacity:
+                self._stats.admission_overflows += 1
+            self._inflight_bytes += estimate
+            self._stats.peak_inflight_bytes = max(
+                self._stats.peak_inflight_bytes, self._inflight_bytes
+            )
+
+    async def _release(self, estimate: float) -> None:
+        if self.inflight_capacity is None:
+            self._inflight_bytes -= estimate
+            return
+        async with self._admit_cv:
+            self._inflight_bytes -= estimate
+            self._admit_cv.notify_all()
+
+    # -- execution -----------------------------------------------------------
+    def _session_lock(self, graph_key: str) -> asyncio.Lock:
+        lock = self._locks.get(graph_key)
+        if lock is None:
+            lock = self._locks[graph_key] = asyncio.Lock()
+        return lock
+
+    async def _run_one_batch(self, graph_key: str, batch: list[_Pending]) -> None:
+        loop = asyncio.get_running_loop()
+        estimate = 0.0
+        admitted = False
+        locked = False
+        lock = self._session_lock(graph_key)
+        try:
+            async with self._exec_sem:
+                # Open (or page in) the session off-loop: staging a cold
+                # graph is real work. Pin it against pool eviction.
+                session = await loop.run_in_executor(
+                    self._executor, self.pool.acquire, graph_key
+                )
+                try:
+                    plans = [p.request.plan for p in batch]
+                    estimate = estimate_inflight_bytes(
+                        session, plans[0], len(plans)
+                    )
+                    await self._admit(estimate)
+                    admitted = True
+                    await lock.acquire()
+                    locked = True
+                    t_dispatch = time.perf_counter()
+                    for p in batch:
+                        p.timing.dispatched = t_dispatch
+                    bres = await loop.run_in_executor(
+                        self._executor, session.run_batch, plans
+                    )
+                finally:
+                    self.pool.release(graph_key)
+            t_done = time.perf_counter()
+            self._t_last = t_done
+            if bres.fused:
+                shares = split_meters(bres.meters, len(batch))
+            else:
+                # Sequential fallback: each member already owns its run's
+                # meters (their merge is exactly the batch meters).
+                shares = [r.meters for r in bres.results]
+            self._stats.batches += 1
+            self._stats.fused_batches += int(bres.fused)
+            self._stats.batched_requests += len(batch)
+            self._stats.max_occupancy = max(
+                self._stats.max_occupancy, len(batch)
+            )
+            self._stats.meters.merge(bres.meters)
+            for i, p in enumerate(batch):
+                p.timing.completed = t_done
+                self._stats.completed += 1
+                self._lat_queue += p.timing.queue_s
+                self._lat_run += p.timing.run_s
+                self._lat_total += p.timing.total_s
+                self._lat_max = max(self._lat_max, p.timing.total_s)
+                self._next_id += 1
+                result = QueryResult(
+                    request_id=self._next_id,
+                    graph=graph_key,
+                    result=bres.results[i],
+                    meters=shares[i],
+                    batch_size=len(batch),
+                    fused=bres.fused,
+                    timing=p.timing,
+                )
+                if not p.future.done():
+                    p.future.set_result(result)
+        except Exception as exc:  # propagate to every waiter, keep serving
+            self._stats.failed += len(batch)
+            for p in batch:
+                if not p.future.done():
+                    p.future.set_exception(exc)
+        finally:
+            if locked:
+                lock.release()
+            if admitted:
+                await self._release(estimate)
+
+    # -- driver integration ----------------------------------------------------
+    def serve_plans(
+        self, graph, plans: Sequence[ExecutionPlan], **session_kwargs
+    ):
+        """Serve K plans against one graph; returns a ``BatchResult``.
+
+        The driver-facing entry (``multi_bfs(..., server=...)``): each plan
+        becomes an individual :class:`QueryRequest`, flows through the
+        queue/batcher/admission machinery, and the delivered results are
+        re-assembled into the same :class:`~repro.core.session.BatchResult`
+        shape ``session.run_batch`` returns — per-request meter shares
+        merge back into the batch-level meters.
+        """
+        key = (
+            self.pool.resolve(graph)
+            if isinstance(graph, str)
+            else self.pool.ensure(graph, **session_kwargs)
+        )
+        served = self.serve(
+            [QueryRequest(graph=key, plan=plan) for plan in plans]
+        )
+        meters = Meters()
+        for q in served:
+            meters.merge(q.meters)
+        return BatchResult(
+            results=[q.result for q in served],
+            meters=meters,
+            iterations=max((q.result.iterations for q in served), default=0),
+            converged=all(q.result.converged for q in served),
+            fused=all(q.fused for q in served),
+        )

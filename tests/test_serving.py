@@ -1,0 +1,487 @@
+"""The graph-query serving subsystem (repro.serving).
+
+Covers the serving contract end to end on tiny graphs (fast lane):
+
+* **Bit-identity**: every result delivered through :class:`GraphServer`
+  equals the corresponding solo ``session.run(plan)`` — across programs ×
+  strategies × residency ∈ {device, host, disk};
+* **Meter shares**: per-request shares of the fused batch's ``Meters``
+  recombine field-for-field exactly (``split_meters`` unit contract +
+  the served path);
+* **Micro-batching**: compatible queries fuse into few ``run_batch``
+  dispatches (occupancy > 1), incompatible ones don't, ``max_batch`` is
+  honored;
+* **Admission control**: the bounded queue rejects/backpressures, and
+  concurrent mixed-graph load never drives the admitted in-flight bytes —
+  or the measured per-run device peaks — past capacity (staged-block
+  accounting);
+* **Session pool**: lazy open, LRU eviction under an explicit staged-bytes
+  capacity, ``.dsss`` page-in after eviction, in-use pinning;
+* ``get_session`` keys on the full session-axis set;
+* ``import repro.serving`` stays cheap (graph serving must not drag in the
+  LM stack).
+"""
+import asyncio
+import dataclasses
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import BFS, ExecutionPlan, GraphSession, PageRank, SSSP, build_dsss
+from repro.core.algorithms import multi_bfs, multi_sssp
+from repro.core.session import MODEL_METER_FIELDS, Meters, get_session
+from repro.graph.generators import erdos_renyi
+from repro.graph.preprocess import degree_and_densify
+from repro.serving import (
+    AdmissionError,
+    GraphServer,
+    QueryRequest,
+    SessionPool,
+    estimate_inflight_bytes,
+    split_meters,
+)
+from repro.storage import write_dsss
+
+
+def _graph(n=130, m=800, seed=7, P=4, weighted=True):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    w = None
+    if weighted:
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.1, 2.0, size=len(src)).astype(np.float32)
+    el = degree_and_densify(src, dst, weights=w, drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return _graph()
+
+
+@pytest.fixture(scope="module")
+def graph2():
+    return _graph(n=90, m=500, seed=11, weighted=False)
+
+
+@pytest.fixture(scope="module")
+def dsss_path(graph, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("serving") / "g.dsss")
+    write_dsss(graph, path)
+    return path
+
+
+def _graph_model_bytes(session):
+    return float(session.graph.m * session.Be)
+
+
+def _plans(program, roots, max_iters):
+    if isinstance(program, PageRank):
+        return [
+            ExecutionPlan(program, max_iters=5, tol=0.0) for _ in roots
+        ]
+    return [
+        ExecutionPlan(
+            program, max_iters=max_iters, program_kwargs={"root": int(r)}
+        )
+        for r in roots
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: served ≡ solo, across programs × strategies × residency.
+# ---------------------------------------------------------------------------
+class TestBitIdentity:
+    @pytest.mark.parametrize("residency", ["device", "host", "disk"])
+    @pytest.mark.parametrize("strategy", ["spu", "dpu"])
+    @pytest.mark.parametrize(
+        "program", [PageRank(), BFS(), SSSP()], ids=["pagerank", "bfs", "sssp"]
+    )
+    def test_served_equals_solo(
+        self, graph, dsss_path, residency, strategy, program
+    ):
+        pool = SessionPool()
+        budget = int(graph.m * 12 * 0.5)  # stream roughly half the topology
+        if residency == "disk":
+            pool.register(
+                "g", dsss_path, memory_budget=budget, host_memory_budget=budget
+            )
+        else:
+            pool.register("g", graph, memory_budget=budget, residency=residency)
+        server = GraphServer(pool, max_batch=8, max_wait_ms=1.0)
+        roots = [0, 3, 17, 42]
+        plans = [
+            dataclasses.replace(p, strategy=strategy)
+            for p in _plans(program, roots, graph.n + 1)
+        ]
+        served = server.serve([QueryRequest("g", p) for p in plans])
+        session = pool.session("g")
+        assert session.resolved_residency() == residency
+        for plan, q in zip(plans, served):
+            solo = session.run(plan)
+            np.testing.assert_array_equal(solo.attrs, q.result.attrs)
+            assert solo.iterations == q.result.iterations
+            assert solo.converged == q.result.converged
+        st = server.stats()
+        assert st.completed == len(plans)
+        assert st.fused_batches >= 1  # the point queries really fused
+
+    def test_multi_bfs_through_server_matches_direct(self, graph):
+        roots = [1, 5, 9]
+        direct = multi_bfs(graph, roots, P=graph.P)
+        server = GraphServer(max_batch=8, max_wait_ms=1.0)
+        via = multi_bfs(graph, roots, P=graph.P, server=server)
+        assert len(via) == len(direct)
+        for a, b in zip(direct, via):
+            np.testing.assert_array_equal(a.attrs, b.attrs)
+            assert a.iterations == b.iterations
+        assert via.fused
+
+    def test_multi_sssp_through_server_matches_direct(self, graph):
+        roots = [2, 8]
+        direct = multi_sssp(graph, roots, P=graph.P)
+        server = GraphServer(max_batch=8, max_wait_ms=1.0)
+        via = multi_sssp(graph, roots, P=graph.P, server=server)
+        for a, b in zip(direct, via):
+            np.testing.assert_array_equal(a.attrs, b.attrs)
+
+
+# ---------------------------------------------------------------------------
+# Meter shares.
+# ---------------------------------------------------------------------------
+class TestMeterShares:
+    def test_split_meters_exact_recombination(self):
+        total = Meters(
+            bytes_read_edges=70001.0,
+            bytes_read_intervals=333.0,
+            bytes_read_hubs=17.0,
+            bytes_written_hubs=5.0,
+            bytes_written_intervals=999.0,
+            bytes_h2d=123457.0,
+            bytes_disk_read=31.0,
+            peak_device_graph_bytes=4096.0,
+            iterations=7,
+            blocks_processed=23,
+            blocks_skipped=3,
+            edges_processed=5471,
+            wall_seconds=0.3,
+        )
+        for k in (1, 2, 3, 5):
+            shares = split_meters(total, k)
+            merged = Meters()
+            for s in shares:
+                merged.merge(s)
+                # high-water mark is replicated, not divided
+                assert s.peak_device_graph_bytes == total.peak_device_graph_bytes
+            for f in dataclasses.fields(Meters):
+                a, b = getattr(merged, f.name), getattr(total, f.name)
+                if f.name == "wall_seconds":
+                    assert a == pytest.approx(b, rel=1e-12)
+                else:
+                    assert a == b, f.name
+            # integral fields distribute as evenly as possible
+            its = [s.iterations for s in shares]
+            assert max(its) - min(its) <= 1
+
+    def test_served_shares_sum_to_fused_batch(self, graph):
+        pool = SessionPool()
+        pool.register("g", graph, memory_budget=int(graph.m * 12 * 0.4))
+        server = GraphServer(pool, max_batch=8, max_wait_ms=1.0)
+        plans = _plans(BFS(), [0, 4, 8, 12, 16], graph.n + 1)
+        served = server.serve([QueryRequest("g", p) for p in plans])
+        assert all(q.fused for q in served)
+        assert len({q.batch_size for q in served}) == 1  # one fused batch
+        batch_meters = served[0].result.meters  # shared by every member
+        merged = Meters()
+        for q in served:
+            merged.merge(q.meters)
+        for f in MODEL_METER_FIELDS + ("bytes_h2d", "bytes_disk_read"):
+            assert getattr(merged, f) == getattr(batch_meters, f), f
+        assert (
+            merged.peak_device_graph_bytes
+            == batch_meters.peak_device_graph_bytes
+        )
+        assert merged.wall_seconds == pytest.approx(
+            batch_meters.wall_seconds, rel=1e-9
+        )
+        # plain (non-merge) sums agree too for the additive byte fields
+        assert sum(q.meters.bytes_read_edges for q in served) == (
+            batch_meters.bytes_read_edges
+        )
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching.
+# ---------------------------------------------------------------------------
+class TestBatcher:
+    def test_compatible_queries_fuse(self, graph):
+        server = GraphServer(max_batch=16, max_wait_ms=5.0)
+        plans = _plans(BFS(), range(8), graph.n + 1)
+        served = server.serve([QueryRequest(graph, p) for p in plans])
+        st = server.stats()
+        assert st.batches == 1
+        assert st.fused_batches == 1
+        assert st.mean_occupancy == 8.0
+        assert all(q.batch_size == 8 for q in served)
+
+    def test_max_batch_is_honored(self, graph):
+        server = GraphServer(max_batch=4, max_wait_ms=1.0)
+        plans = _plans(BFS(), range(10), graph.n + 1)
+        served = server.serve([QueryRequest(graph, p) for p in plans])
+        assert all(q.batch_size <= 4 for q in served)
+        assert server.stats().batches >= 3
+
+    def test_incompatible_queries_do_not_fuse(self, graph):
+        server = GraphServer(max_batch=16, max_wait_ms=5.0)
+        reqs = [
+            QueryRequest(graph, p) for p in _plans(BFS(), [0, 1, 2], graph.n + 1)
+        ] + [
+            QueryRequest(graph, ExecutionPlan(PageRank(), max_iters=4, tol=0.0))
+        ]
+        served = server.serve(reqs)
+        st = server.stats()
+        assert st.batches == 2  # one BFS bucket, one PageRank bucket
+        assert served[0].batch_size == 3 and served[-1].batch_size == 1
+        # timing is populated and ordered
+        for q in served:
+            assert q.timing.enqueued <= q.timing.dispatched <= q.timing.completed
+
+    def test_incompatible_aux_falls_back_sequential(self, graph):
+        # Same batch_key shape is impossible for two different damping
+        # values (PageRank freezes damping into the program, which is part
+        # of batch_key) — use two *plans* differing only in kwargs-borne
+        # aux instead: MaxLabelForward-style cases live in core tests, so
+        # here simply verify a singleton batch reports fused=True and the
+        # sequential path is exercised via run_batch's own contract.
+        server = GraphServer(max_batch=4, max_wait_ms=0.0)
+        [q] = server.serve(
+            [QueryRequest(graph, ExecutionPlan(PageRank(), max_iters=3, tol=0.0))]
+        )
+        assert q.fused and q.batch_size == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission control.
+# ---------------------------------------------------------------------------
+class TestAdmission:
+    def test_bounded_queue_rejects(self, graph):
+        server = GraphServer(max_batch=4, max_wait_ms=500.0, max_queue=2)
+        plans = _plans(BFS(), range(3), graph.n + 1)
+
+        async def scenario():
+            async with server:
+                f1 = await server.submit(QueryRequest(graph, plans[0]))
+                f2 = await server.submit(QueryRequest(graph, plans[1]))
+                with pytest.raises(AdmissionError):
+                    await server.submit(QueryRequest(graph, plans[2]))
+                return await asyncio.gather(f1, f2)
+
+        r1, r2 = asyncio.run(scenario())
+        assert r1.result.converged and r2.result.converged
+        assert server.stats().rejected == 1
+
+    def test_bounded_queue_wait_policy_backpressures(self, graph):
+        server = GraphServer(
+            max_batch=2, max_wait_ms=0.0, max_queue=1, queue_policy="wait"
+        )
+        plans = _plans(BFS(), range(4), graph.n + 1)
+
+        async def scenario():
+            async with server:
+                futures = [
+                    await server.submit(QueryRequest(graph, p)) for p in plans
+                ]
+                return await asyncio.gather(*futures)
+
+        served = asyncio.run(scenario())
+        assert len(served) == 4
+        assert server.stats().rejected == 0
+
+    def test_inflight_capacity_bounds_mixed_graph_load(self, graph, graph2):
+        # Constrained memory budgets → streamed residency with small
+        # device working sets; capacity admits one batch at a time.
+        budget1 = int(graph.m * 12 * 0.25)
+        budget2 = int(graph2.m * 8 * 0.25)
+        pool = SessionPool()
+        pool.register("a", graph, memory_budget=budget1, residency="host")
+        pool.register("b", graph2, memory_budget=budget2, residency="host")
+        k = 4
+        plans_a = _plans(BFS(), range(k), graph.n + 1)
+        plans_b = _plans(BFS(), range(k), graph2.n + 1)
+        est_a = estimate_inflight_bytes(pool.session("a"), plans_a[0], k)
+        est_b = estimate_inflight_bytes(pool.session("b"), plans_b[0], k)
+        capacity = max(est_a, est_b) * 1.5  # too small for both at once
+        server = GraphServer(
+            pool,
+            max_batch=k,
+            max_wait_ms=1.0,
+            inflight_capacity=capacity,
+            max_concurrent=2,
+        )
+        served = server.serve(
+            [QueryRequest("a", p) for p in plans_a]
+            + [QueryRequest("b", p) for p in plans_b]
+        )
+        st = server.stats()
+        assert st.completed == 2 * k
+        assert st.admission_overflows == 0
+        # The admission high-water mark never exceeded capacity …
+        assert st.peak_inflight_bytes <= capacity
+        # … and the estimates are honest: each batch's measured device
+        # peak (streamed topology ring + pinned prefix, staged-block
+        # accounting) plus its attribute state fits its admitted estimate.
+        for name, plans, est in (
+            ("a", plans_a, est_a),
+            ("b", plans_b, est_b),
+        ):
+            session = pool.session(name)
+            ba = plans[0].program.attr_bytes
+            attr = 2.0 * session.graph.n_pad * ba * k
+            for q in served:
+                if q.graph != name:
+                    continue
+                peak = q.result.meters.peak_device_graph_bytes
+                assert peak + attr <= est + 1e-9
+        # Serving under constrained budgets stayed bit-identical.
+        solo = pool.session("a").run(plans_a[0])
+        np.testing.assert_array_equal(solo.attrs, served[0].result.attrs)
+
+    def test_oversized_batch_runs_alone(self, graph):
+        pool = SessionPool()
+        pool.register("g", graph, memory_budget=int(graph.m * 12 * 0.25))
+        server = GraphServer(
+            pool, max_batch=4, max_wait_ms=1.0, inflight_capacity=1.0
+        )
+        served = server.serve(
+            [QueryRequest("g", p) for p in _plans(BFS(), range(4), graph.n + 1)]
+        )
+        assert len(served) == 4
+        st = server.stats()
+        assert st.admission_overflows >= 1  # documented solo-run escape
+
+
+# ---------------------------------------------------------------------------
+# Session pool.
+# ---------------------------------------------------------------------------
+class TestSessionPool:
+    def test_lazy_open_and_hits(self, graph):
+        pool = SessionPool()
+        pool.register("g", graph)
+        assert pool.stats().open_sessions == 0
+        s1 = pool.session("g")
+        s2 = pool.session("g")
+        assert s1 is s2
+        st = pool.stats()
+        assert st.opens == 1 and st.hits == 1 and st.open_sessions == 1
+
+    def test_capacity_evicts_lru(self, graph, graph2):
+        pool = SessionPool(capacity_bytes=1)  # any two graphs exceed this
+        pool.register("a", graph)
+        pool.register("b", graph2)
+        sa = pool.session("a")
+        assert pool.stats().open_sessions == 1
+        pool.session("b")  # opening b evicts idle a
+        st = pool.stats()
+        assert st.evictions == 1
+        assert st.open_sessions == 1
+        assert pool.session("b").graph is graph2  # b stayed
+        sa2 = pool.session("a")  # a restages on demand
+        assert sa2 is not sa
+        assert pool.stats().opens == 3
+
+    def test_dsss_graph_pages_back_in_after_eviction(self, graph, dsss_path):
+        pool = SessionPool(capacity_bytes=None)
+        pool.register("d", dsss_path)
+        plan = ExecutionPlan(PageRank(), max_iters=3, tol=0.0)
+        before = pool.session("d").run(plan)
+        assert pool.session("d").resolved_residency() == "disk"
+        assert pool.evict("d")
+        assert pool.stats().open_sessions == 0
+        after = pool.session("d").run(plan)  # re-opened from the container
+        np.testing.assert_array_equal(before.attrs, after.attrs)
+        assert pool.stats().opens == 2
+
+    def test_in_use_sessions_are_never_evicted(self, graph, graph2):
+        pool = SessionPool(capacity_bytes=1)
+        pool.register("a", graph)
+        pool.register("b", graph2)
+        pool.acquire("a")
+        pool.session("b")  # over capacity, but a is pinned
+        assert pool.stats().open_sessions == 2  # a survived
+        assert not pool.evict("a")
+        pool.release("a")
+        assert pool.evict("a")
+
+    def test_max_open_bound(self):
+        graphs = [_graph(n=40, m=150, seed=s, P=2, weighted=False) for s in range(3)]
+        pool = SessionPool(max_open=2)
+        for i, g in enumerate(graphs):
+            pool.register(f"g{i}", g)
+            pool.session(f"g{i}")
+        assert pool.stats().open_sessions == 2
+        assert pool.stats().evictions == 1
+
+    def test_register_rejects_duplicates_and_bad_sources(self, graph):
+        pool = SessionPool()
+        pool.register("g", graph)
+        with pytest.raises(ValueError):
+            pool.register("g", graph)
+        with pytest.raises(TypeError):
+            pool.register("bad", 123)
+        with pytest.raises(KeyError):
+            pool.resolve("missing")
+
+    def test_staged_bytes_accounting(self, graph, dsss_path):
+        pool = SessionPool()
+        pool.register("mem", graph)
+        pool.register("disk", dsss_path)
+        mem_bytes = pool.session("mem").staged_host_bytes()
+        assert mem_bytes > 0  # padded numpy shard files are resident
+        disk_sess = pool.session("disk")
+        # mmap views: nothing edge-scale resident before any run
+        assert disk_sess.staged_host_bytes() <= mem_bytes
+        assert pool.staged_bytes() == (
+            mem_bytes + disk_sess.staged_host_bytes()
+        )
+
+
+# ---------------------------------------------------------------------------
+# get_session keying (kwarg-drift regression).
+# ---------------------------------------------------------------------------
+class TestGetSessionKeying:
+    def test_distinct_axes_get_distinct_sessions(self, graph):
+        base = get_session(graph)
+        assert get_session(graph) is base
+        assert get_session(graph, residency="device") is not base
+        assert (
+            get_session(graph, residency="device", execution="per_block")
+            is not get_session(graph, residency="device")
+        )
+        assert get_session(graph, memory_budget=1 << 16) is not base
+
+    def test_host_memory_budget_is_keyed_and_validated(self, graph):
+        # In-memory graphs reject the disk tier's RAM bound with the
+        # session's own error — but the kwarg must be accepted & keyed.
+        with pytest.raises(ValueError, match="host_memory_budget"):
+            get_session(graph, host_memory_budget=1 << 20)
+
+
+# ---------------------------------------------------------------------------
+# Import hygiene.
+# ---------------------------------------------------------------------------
+def test_import_serving_is_cheap():
+    """Graph serving must not drag in the LM stack (models/configs) and
+    must not trigger any jax computation at import time."""
+    code = (
+        "import sys; import repro.serving; "
+        "assert 'repro.models' not in sys.modules, 'models imported'; "
+        "assert 'repro.configs' not in sys.modules, 'configs imported'; "
+        "assert 'repro.serving.llm_demo' not in sys.modules, 'llm demo imported'"
+    )
+    subprocess.run(
+        [sys.executable, "-c", code],
+        check=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )

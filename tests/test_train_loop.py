@@ -142,7 +142,7 @@ class TestFaultPrimitives:
 
 class TestServing:
     def test_batched_greedy_matches_single(self):
-        from repro.serving import Request, ServeEngine
+        from repro.serving.llm_demo import Request, ServeEngine
         from repro.models import Model
 
         cfg = _tiny_cfg()
@@ -163,7 +163,7 @@ class TestServing:
             assert batched[i] == single, f"request {i} diverged"
 
     def test_length_bucketing(self):
-        from repro.serving import Request, ServeEngine
+        from repro.serving.llm_demo import Request, ServeEngine
         from repro.models import Model
 
         cfg = _tiny_cfg()
@@ -185,7 +185,7 @@ class TestServing:
         assert all(len(v) == 3 for v in out.values())
 
     def test_eos_stops_early(self):
-        from repro.serving import Request, ServeEngine
+        from repro.serving.llm_demo import Request, ServeEngine
         from repro.models import Model
 
         cfg = _tiny_cfg()
