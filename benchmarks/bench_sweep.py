@@ -15,9 +15,16 @@ P the run is dispatch-bound. This benchmark measures:
   per-sweep wall + raw h2d volume of packed streaming vs. the per-block
   fetcher — the downgrade adaptive tiling removed.
 
+* **Frontier section** (BFS on R-MAT, ``residency="host"``, tight
+  budget): physical per-sweep ``bytes_h2d`` of frontier-aware selective
+  execution (``activity="auto"``) vs the full-sweep ``activity="off"``
+  baseline, with the closed-form/meter exactness asserted and the
+  late-iteration (collapsed-frontier) skip ratio reported.
+
 Writes ``BENCH_sweep.json`` (repo root by default); CI runs the
-``--smoke`` variant per PR with ``--assert-padding-ratio 1.25`` so both
-dispatch-count and padding regressions fail the build.
+``--smoke`` variant per PR with ``--assert-padding-ratio 1.25`` and
+``--assert-skip-ratio 5.0`` so dispatch-count, padding *and*
+frontier-skip regressions fail the build.
 
 Usage::
 
@@ -36,8 +43,9 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
 import jax  # noqa: E402
 
-from repro.core import ExecutionPlan, GraphSession, PageRank, build_dsss  # noqa: E402
+from repro.core import BFS, ExecutionPlan, GraphSession, PageRank, build_dsss  # noqa: E402
 from repro.core import session as session_mod  # noqa: E402
+from repro.core.iomodel import packed_h2d_bytes, selective_streamed_tiles  # noqa: E402
 from repro.graph.generators import erdos_renyi, rmat, zipf  # noqa: E402
 from repro.graph.preprocess import degree_and_densify  # noqa: E402
 
@@ -79,6 +87,13 @@ class DispatchCounter:
             return self._wrap(sweep), self._wrap(apply_all)
 
         session_mod._packed_jits = counting_jits
+        real_select = session_mod._packed_select_jits
+        self._saved["_packed_select_jits"] = real_select
+
+        def counting_select(donate):
+            return self._wrap(real_select(donate))
+
+        session_mod._packed_select_jits = counting_select
         return self
 
     def __exit__(self, *exc):
@@ -260,6 +275,98 @@ def powerlaw_section(report, args):
             report["powerlaw"].append(row)
 
 
+def frontier_section(report, args):
+    """Frontier-aware selective execution: BFS on R-MAT, host residency.
+
+    Selective (``activity="auto"``, the default for monotone programs) vs
+    the full-sweep ``activity="off"`` baseline, out-of-core. The physical
+    per-sweep ``bytes_h2d`` is reconstructed from the run's
+    ``activity_log`` via the iomodel closed form and asserted to match
+    the measured meter exactly; the gated headline is the *late-iteration*
+    skip — the trailing sweeps whose frontier has collapsed to ≤ P/2
+    intervals, where NXgraph-style activity tracking pays off most.
+    """
+    scale = 13 if args.smoke else 15
+    P = 16 if args.smoke else 32
+    src, dst = rmat(scale, 4, seed=args.seed)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    g = build_dsss(el, P)
+    # A tight budget: nothing pins, chunks are fine-grained — the regime
+    # where skipping inactive streamed chunks can actually bite.
+    budget = int((2 * g.n_pad * 8 + g.total_edge_bytes(8)) * 0.05)
+    plan_kw = dict(
+        strategy="spu", max_iters=g.n + 1, execution="packed",
+        program_kwargs={"root": 0},
+    )
+    runs = {}
+    for activity in ("auto", "off"):
+        sess = GraphSession(g, memory_budget=budget, residency="host")
+        plan = ExecutionPlan(BFS(), activity=activity, **plan_kw)
+        sess.run(plan)  # warmup: staging + jit compilation
+        with DispatchCounter() as counter:
+            res = sess.run(plan)
+        runs[activity] = (sess, res, counter.count / res.iterations)
+    sess, on, on_disp = runs["auto"]
+    _, off, off_disp = runs["off"]
+    np.testing.assert_array_equal(on.attrs, off.attrs)
+    assert on.iterations == off.iterations
+    # Measured-vs-modelled exactness: the per-sweep closed form over the
+    # activity log reproduces the physical meter byte for byte.
+    compiled = sess.compile(ExecutionPlan(BFS(), **plan_kw))
+    splan = sess.packed_stream_plan(compiled.choice.strategy, 4)
+    full_sweep = packed_h2d_bytes(
+        splan.num_tiles - splan.pin_tiles, splan.tile_edges
+    )
+    per_sweep = [
+        packed_h2d_bytes(
+            selective_streamed_tiles(
+                sess._packed_tile_activity(log),
+                splan.pin_tiles,
+                splan.chunk_tiles,
+            ),
+            splan.tile_edges,
+        )
+        for log in on.activity_log
+    ]
+    assert sum(per_sweep) == on.meters.bytes_h2d
+    assert off.meters.bytes_h2d == full_sweep * off.iterations
+    frontier = [int(log.sum()) for log in on.activity_log]
+    # Late iterations: the trailing sweeps with a collapsed (≤ P/2) frontier.
+    k = len(frontier)
+    while k > 0 and frontier[k - 1] <= P // 2:
+        k -= 1
+    late = list(range(k, len(frontier))) or [len(frontier) - 1]
+    late_on = sum(per_sweep[i] for i in late)
+    late_skip_ratio = (full_sweep * len(late)) / max(late_on, 1.0)
+    row = {
+        "generator": "rmat",
+        "scale": scale,
+        "P": P,
+        "n": el.n,
+        "m": el.m,
+        "sweeps": on.iterations,
+        "frontier_intervals": frontier,
+        "h2d_selective": on.meters.bytes_h2d,
+        "h2d_off": off.meters.bytes_h2d,
+        "h2d_ratio": off.meters.bytes_h2d / on.meters.bytes_h2d,
+        "late_sweeps": late,
+        "late_skip_ratio": late_skip_ratio,
+        "dispatches_per_sweep_selective": on_disp,
+        "dispatches_per_sweep_off": off_disp,
+        "per_sweep_seconds_selective": on.meters.wall_seconds / on.iterations,
+        "per_sweep_seconds_off": off.meters.wall_seconds / off.iterations,
+    }
+    print(
+        f"frontier rmat scale={scale} P={P} (n={el.n}, m={el.m}): "
+        f"{on.iterations} sweeps, frontier {frontier}; h2d "
+        f"{on.meters.bytes_h2d / 1e6:.2f} MB selective vs "
+        f"{off.meters.bytes_h2d / 1e6:.2f} MB off "
+        f"({row['h2d_ratio']:.2f}x), late sweeps {late}: "
+        f"{late_skip_ratio:.1f}x skip (bit-identical, meters exact)"
+    )
+    report["frontier"].append(row)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--p-values", type=int, nargs="+", default=[8, 16, 32])
@@ -276,6 +383,11 @@ def main(argv=None):
     ap.add_argument(
         "--assert-padding-ratio", type=float, default=None,
         help="fail (exit 1) if any power-law adaptive padding ratio exceeds this",
+    )
+    ap.add_argument(
+        "--assert-skip-ratio", type=float, default=None,
+        help="fail (exit 1) if the frontier section's late-iteration h2d "
+        "skip ratio (selective vs activity='off') falls below this",
     )
     ap.add_argument(
         "--out",
@@ -297,9 +409,23 @@ def main(argv=None):
         "results": [],
         "speedups": [],
         "powerlaw": [],
+        "frontier": [],
     }
     uniform_section(report, args)
     powerlaw_section(report, args)
+    frontier_section(report, args)
+    if args.assert_skip_ratio is not None:
+        for row in report["frontier"]:
+            assert row["late_skip_ratio"] >= args.assert_skip_ratio, (
+                f"frontier {row['generator']} scale={row['scale']} "
+                f"P={row['P']}: late-iteration skip ratio "
+                f"{row['late_skip_ratio']:.2f} below the "
+                f"{args.assert_skip_ratio} bound"
+            )
+        print(
+            f"late-iteration skip-ratio bound {args.assert_skip_ratio} holds "
+            f"on all {len(report['frontier'])} frontier configurations"
+        )
     if args.assert_padding_ratio is not None:
         for row in report["powerlaw"]:
             assert row["padding_ratio_adaptive"] <= args.assert_padding_ratio, (

@@ -156,21 +156,49 @@ def multi_bfs(
 
 
 def wcc(
-    g: EdgeList,
+    g: EdgeList | DSSSGraph,
     *,
     P: int = 8,
     strategy: str = "auto",
     memory_budget: int | None = None,
+    residency: str = "auto",
+    execution: str = "auto",
 ) -> Result:
-    """Weakly connected components — runs on the symmetrized graph."""
+    """Weakly connected components — min-label propagation.
+
+    WCC is defined on the *undirected* graph, so the propagation must run
+    on a symmetrized edge set. An :class:`EdgeList` is symmetrized here
+    (``g.symmetrized()``) before sharding; a pre-built :class:`DSSSGraph`
+    must already be symmetric — callers shard with
+    ``build_dsss(el.symmetrized(), P)`` — and an asymmetric one raises
+    :class:`ValueError` instead of silently returning per-direction
+    pseudo-components.
+    """
     if isinstance(g, EdgeList):
         # Freshly built per call: a throwaway session, not an LRU slot —
         # the staged blocks must not outlive the call.
         graph = build_dsss(g.symmetrized(), P)
-        sess = GraphSession(graph, memory_budget=memory_budget)
+        sess = GraphSession(
+            graph,
+            memory_budget=memory_budget,
+            residency=residency,
+            execution=execution,
+        )
     else:
         graph = g
-        sess = get_session(graph, memory_budget=memory_budget)
+        if not np.array_equal(graph.in_degree, graph.out_degree):
+            raise ValueError(
+                "wcc requires a symmetrized graph; this DSSSGraph has "
+                "in_degree != out_degree. Build it with "
+                "build_dsss(edge_list.symmetrized(), P), or pass the "
+                "EdgeList itself and let wcc symmetrize."
+            )
+        sess = get_session(
+            graph,
+            memory_budget=memory_budget,
+            residency=residency,
+            execution=execution,
+        )
     return sess.run(
         ExecutionPlan(WCC(), strategy=strategy, max_iters=graph.n + 1)
     )

@@ -33,6 +33,8 @@ __all__ = [
     "choose_tile_edges",
     "cut_runs_into_tiles",
     "tile_candidates",
+    "tile_source_spans",
+    "active_tile_mask",
 ]
 
 
@@ -246,6 +248,50 @@ class PackedSweep:
     def padding_ratio(self) -> float:
         """Padded-slots / real-edges — 1.0 is a perfect packing."""
         return self.padded_edge_slots / max(self.m, 1)
+
+
+def tile_source_spans(
+    packed: PackedSweep, interval_size: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-tile source-interval span ``[first_i, last_i]`` (inclusive).
+
+    ``src_interval`` records the interval of a tile's *first* edge; a
+    coalesced tile can span several consecutive source intervals (the
+    stream is row-major, so the span is always contiguous). The last
+    interval is recovered from the tile's last real edge's source id.
+    Empty tiles (``e_valid == 0`` cannot occur in a build, but a
+    compacted gather may zero them) degenerate to ``last == first``.
+
+    These spans drive frontier-aware selective execution: a tile can be
+    skipped iff no source interval in its span is active — see
+    :func:`active_tile_mask`.
+    """
+    nt = packed.num_tiles
+    first = packed.src_interval.astype(np.int64)
+    if nt == 0:
+        return first, first.copy()
+    last_edge = np.maximum(packed.e_valid.astype(np.int64), 1) - 1
+    last_src = packed.src[np.arange(nt), last_edge].astype(np.int64)
+    return first, np.maximum(first, last_src // interval_size)
+
+
+def active_tile_mask(
+    row_active: np.ndarray, first: np.ndarray, last: np.ndarray
+) -> np.ndarray:
+    """``(NT,)`` bool: does tile t contain any edge from an active interval?
+
+    ``row_active`` is the (P,) per-interval activity bitmap from the
+    previous sweep's ``changed`` output; ``first``/``last`` are the
+    inclusive per-tile spans from :func:`tile_source_spans`. Computed as
+    a prefix-sum range query so the whole map costs O(P + NT).
+
+    For monotone programs, a False tile contributes only exact
+    ⊕-identities (every source attribute in it is unchanged since last
+    gathered), so skipping it preserves bit-identity with the full sweep.
+    """
+    row = np.asarray(row_active, dtype=np.int64)
+    cum = np.concatenate([[0], np.cumsum(row)])
+    return (cum[last + 1] - cum[first]) > 0
 
 
 @dataclasses.dataclass(frozen=True)

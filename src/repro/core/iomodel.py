@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 __all__ = [
     "IOParams",
     "spu_io",
@@ -38,6 +40,9 @@ __all__ = [
     "packed_h2d_bytes",
     "packed_disk_bytes",
     "disk_read_bytes",
+    "selective_streamed_tiles",
+    "streamed_block_bytes",
+    "selective_edge_bytes",
     "PACKED_SLOT_BYTES",
 ]
 
@@ -255,23 +260,90 @@ def packed_disk_bytes(
 
 
 def disk_read_bytes(
-    block_nbytes, resident, host_cached
+    block_nbytes, resident, host_cached, *, active_rows=None
 ) -> float:
     """Closed-form per-sweep disk reads of the per-block disk executor.
 
-    ``block_nbytes`` maps sub-shard key → raw bytes of its padded block
-    arrays (the mmap'd segments the fetch touches); a full sweep fetches
-    every block exactly once, and only blocks that are neither
-    device-pinned (``resident``) nor RAM-cached (``host_cached``) hit the
-    disk tier. Monotone programs that skip inactive source intervals
-    read correspondingly less — the oracle holds exactly for
-    non-monotone programs (PageRank), which is what the tests pin.
+    ``block_nbytes`` maps sub-shard key ``(i, j)`` → raw bytes of its
+    padded block arrays (the mmap'd segments the fetch touches); a sweep
+    fetches each processed block exactly once, and only blocks that are
+    neither device-pinned (``resident``) nor RAM-cached (``host_cached``)
+    hit the disk tier. ``active_rows`` is the sweep's (P,) per-interval
+    activity bitmap (``Result.activity_log`` entries) — under selective
+    execution only blocks whose source interval is active are fetched at
+    all, so the oracle stays exact for monotone programs too; ``None``
+    means a full sweep (the non-monotone / ``activity="off"`` case).
     """
     return float(
         sum(
             b
             for k, b in block_nbytes.items()
-            if k not in resident and k not in host_cached
+            if k not in resident
+            and k not in host_cached
+            and (active_rows is None or active_rows[k[0]])
+        )
+    )
+
+
+def selective_streamed_tiles(
+    tile_active, pin_tiles: int, chunk_tiles: int
+) -> int:
+    """Streamed tile count of one frontier-aware packed sweep.
+
+    The packed streaming loop walks the fixed chunk grid
+    ``[lo, lo+chunk_tiles)`` for ``lo in range(pin_tiles, num_tiles,
+    chunk_tiles)`` and, under selective execution, skips the fetch of any
+    chunk containing no active tile (``tile_active`` from
+    :func:`repro.core.dsss.active_tile_mask`). Chunks are fetched whole —
+    partial-chunk gathers would break the prefetch pipeline — so the
+    streamed count is the sum of full chunk sizes over active chunks.
+    ``packed_h2d_bytes(selective_streamed_tiles(...), tile_edges)`` is
+    the exact per-sweep ``bytes_h2d`` oracle; with ``pin_tiles`` set to
+    the pin+host-cache boundary it is the ``bytes_disk_read`` oracle
+    (both boundaries lie on the chunk grid by construction).
+    """
+    act = np.asarray(tile_active, dtype=bool)
+    nt = int(act.shape[0])
+    streamed = 0
+    for lo in range(pin_tiles, nt, chunk_tiles):
+        hi = min(lo + chunk_tiles, nt)
+        if act[lo:hi].any():
+            streamed += hi - lo
+    return streamed
+
+
+def streamed_block_bytes(block_nbytes, resident, active_rows=None) -> float:
+    """Closed-form per-sweep ``bytes_h2d`` of the per-block host executor.
+
+    ``block_nbytes`` maps sub-shard key ``(i, j)`` → raw bytes of its
+    bucket-padded device arrays; a sweep ships every processed non-pinned
+    block host→device once. ``active_rows`` restricts the sweep to active
+    source intervals exactly as :func:`disk_read_bytes` does.
+    """
+    return float(
+        sum(
+            b
+            for k, b in block_nbytes.items()
+            if k not in resident and (active_rows is None or active_rows[k[0]])
+        )
+    )
+
+
+def selective_edge_bytes(block_edges, resident, active_rows, Be) -> float:
+    """Modelled edge-byte charge (``Be`` per edge) of one selective sweep.
+
+    The model-side counterpart of :func:`streamed_block_bytes`:
+    ``block_edges`` maps sub-shard key ``(i, j)`` → real edge count, and
+    the charge covers every processed non-resident block. This is the
+    activity term of the Table II read formulas — with ``active_rows``
+    all-True it reduces to the full-sweep ``m·Be`` minus the resident
+    prefix, which is what the original closed forms charge.
+    """
+    return float(
+        sum(
+            e * Be
+            for k, e in block_edges.items()
+            if k not in resident and (active_rows is None or active_rows[k[0]])
         )
     )
 

@@ -93,9 +93,22 @@ class ExecutionPlan:
         schedules downgrade to "per_block"); "auto" picks "packed"
         whenever it applies. Results and modelled meters are identical
         either way. See :class:`repro.core.session.GraphSession`.
+      activity: frontier-aware selective execution — ``"auto"`` (default)
+        lets monotone programs (BFS/SSSP/WCC — ``program.monotone``) skip
+        inactive source intervals, inactive packed tiles and inactive
+        streamed chunks, so compute *and* physical
+        ``bytes_h2d``/``bytes_disk_read`` shrink with the frontier;
+        ``"off"`` forces full sweeps (the A/B baseline — every interval is
+        processed and every chunk is streamed every sweep). Results are
+        bit-identical either way: skipped work contributes exact
+        ⊕-identities by the monotone contract. Non-monotone programs
+        (PageRank) always run full sweeps regardless of this axis.
       program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are
         frozen by content; pass a mapping, it is normalized to a sorted
-        tuple in ``__post_init__``.
+        tuple in ``__post_init__``. Names are validated against
+        ``program.accepted_kwargs()`` — an unknown name raises
+        :class:`TypeError` here instead of being silently swallowed by the
+        lifecycle methods' ``**kw`` catch-alls.
     """
 
     program: VertexProgram
@@ -104,6 +117,7 @@ class ExecutionPlan:
     tol: float = 1e-10
     residency: str | None = None
     execution: str | None = None
+    activity: str = "auto"
     program_kwargs: Any = ()
 
     def __post_init__(self):
@@ -117,12 +131,27 @@ class ExecutionPlan:
                 "execution must be None, 'per_block', 'packed' or 'auto', "
                 f"got {self.execution!r}"
             )
+        if self.activity not in ("auto", "off"):
+            raise ValueError(
+                f"activity must be 'auto' or 'off', got {self.activity!r}"
+            )
         kw = self.program_kwargs
         if isinstance(kw, Mapping):
             items = kw.items()
         else:
             items = tuple(kw)
         frozen = tuple(sorted((str(k), _freeze_value(v)) for k, v in items))
+        accepted = self.program.accepted_kwargs()
+        unknown = sorted(k for k, _ in frozen if k not in accepted)
+        if unknown:
+            if accepted:
+                hint = f"accepted kwargs: {sorted(accepted)}"
+            else:
+                hint = "it accepts no program_kwargs"
+            raise TypeError(
+                f"unknown program_kwargs {unknown} for program "
+                f"{self.program.name!r}; {hint}"
+            )
         object.__setattr__(self, "program_kwargs", frozen)
 
     # -- accessors -----------------------------------------------------------
@@ -143,7 +172,8 @@ class ExecutionPlan:
         and the serving micro-batcher
         (:class:`repro.serving.server.GraphServer` buckets queued requests
         by ``(graph, batch_key())``): program, strategy, iteration limits
-        and the residency/execution axes must agree — Initialize kwargs
+        and the residency/execution/activity axes must agree — Initialize
+        kwargs
         (BFS roots, SSSP sources, seeds) may differ. It is a *necessary*
         condition; fusion additionally requires identical aux arrays,
         which ``run_batch`` re-verifies before fusing (and falls back to
@@ -157,6 +187,7 @@ class ExecutionPlan:
             self.tol,
             self.residency,
             self.execution,
+            self.activity,
         )
 
     def compatible_with(self, other: "ExecutionPlan") -> bool:

@@ -55,6 +55,21 @@ host→device with the same double-buffered prefetch discipline as
 each streamed chunk charges ``bytes_h2d``), so SPU/DPU/MPU all run packed
 out-of-core.
 
+Frontier-aware selective execution (the ``activity`` plan axis): monotone
+programs (BFS/SSSP/WCC) track the per-sweep interval frontier — the
+``changed`` output of the previous sweep — and, under ``activity="auto"``
+(the default), skip everything that frontier cannot touch: inactive source
+intervals on the per-block path, inactive tiles in the packed scan (a
+compacted active-tile gather, bucketed to keep jit variants ≤ log2(NT)),
+and inactive streamed chunks in the host/disk tiers — so the *physical*
+``bytes_h2d`` / ``bytes_disk_read`` shrink with the frontier, not just the
+modelled charges. Results are bit-identical to ``activity="off"`` full
+sweeps (skipped work contributes exact ⊕-identities by the monotone
+contract) and the per-sweep frontier trace is returned as
+``Result.activity_log``, from which the iomodel activity terms
+(``selective_streamed_tiles`` / ``streamed_block_bytes`` /
+``disk_read_bytes(active_rows=...)``) reconstruct the byte meters exactly.
+
 The third tier (paper §IV, the actual *disk*): a graph stored as a
 ``.dsss`` container (:mod:`repro.storage`) opens with
 :meth:`GraphSession.open` into ``residency="disk"`` — the host-side
@@ -82,7 +97,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsss import DSSSGraph
+from repro.core.dsss import (
+    DSSSGraph,
+    active_tile_mask,
+    next_bucket,
+    tile_source_spans,
+)
 from repro.core.iomodel import (
     IOParams,
     PACKED_SLOT_BYTES,
@@ -231,6 +251,13 @@ class Result:
     converged: bool
     meters: Meters
     strategy: StrategyChoice
+    # One (P,) bool array per executed sweep: the source intervals that
+    # sweep processed (union over the batch). All-True every sweep for
+    # non-selective runs; under selective execution this is the frontier
+    # trace the iomodel activity terms (selective_streamed_tiles /
+    # streamed_block_bytes / disk_read_bytes) reconstruct the physical
+    # byte meters from, exactly. Shared by every member of a batch.
+    activity_log: tuple = ()
 
 
 @dataclasses.dataclass
@@ -247,6 +274,7 @@ class BatchResult:
     iterations: int
     converged: bool
     fused: bool  # False when plans were incompatible and ran sequentially
+    activity_log: tuple = ()  # per-sweep (P,) processed-interval bitmaps
 
     def __len__(self) -> int:
         return len(self.results)
@@ -283,6 +311,10 @@ class CompiledPlan:
     # actually run (an SPU/DPU/MPU schedule — either residency), else
     # "per_block". Never "auto".
     execution: str = "per_block"
+    # Resolved activity mode: "selective" iff the program is monotone and
+    # the plan's activity axis is "auto" — frontier-aware interval/tile/
+    # chunk skipping; else "off" (full sweeps). Never "auto".
+    activity: str = "off"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,9 +351,21 @@ class PackedStreamPlan:
 # ``program`` is a frozen dataclass => hashable => usable as a static
 # argument; jit caches one executable per (program, bucket, num_segments, K)
 # combination, shared by every session/plan that uses the same program.
-# Aux dicts and block index arrays are query-invariant and enter the vmapped
-# body by closure (broadcast); only attributes/accumulators carry K.
+# Block index arrays are query-invariant and enter the vmapped body by
+# closure (broadcast); attributes/accumulators carry K, and aux dicts enter
+# as vmap operands: with ``aux_batched=False`` (the common case — one aux
+# shared by all K queries) every aux leaf broadcasts (in_axes=None), with
+# ``aux_batched=True`` every leaf carries its own leading K axis (per-query
+# aux, e.g. a run_batch of MaxLabelForward plans with different masks) and
+# is mapped — inside the vmap each query sees its own slice at the
+# original ndim, so the per-leaf ``ndim == 1`` gather checks are unchanged.
 # ---------------------------------------------------------------------------
+def _aux_axes(aux: dict, aux_batched: bool):
+    """vmap in_axes pytree for an aux dict under either batching mode."""
+    return {k: (0 if aux_batched else None) for k in aux}
+
+
+
 def _gather_reduce_core(
     program, prev_src, src_aux, dst_aux, src_local, dst_local, weights,
     e_valid, acc, num_segments, has_weights,
@@ -348,12 +392,13 @@ def _gather_reduce_core(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("program", "num_segments", "has_weights")
+    jax.jit,
+    static_argnames=("program", "num_segments", "has_weights", "aux_batched"),
 )
 def _block_gather_reduce(
     program: VertexProgram,
     prev_src: jnp.ndarray,  # (K, isize) source-interval attributes
-    src_aux: dict,  # per-source-interval aux (1-D sliced or scalar; shared)
+    src_aux: dict,  # per-source-interval aux; (K,)-leading when aux_batched
     dst_aux: dict,  # per-dest-interval aux (or empty)
     src_local: jnp.ndarray,  # (bucket,)
     dst_local: jnp.ndarray,  # (bucket,)
@@ -362,14 +407,23 @@ def _block_gather_reduce(
     acc: jnp.ndarray,  # (K, num_segments) running ⊕ accumulator
     num_segments: int,
     has_weights: bool,
+    aux_batched: bool = False,
 ):
-    def one(pv, a):
+    def one(pv, a, sx, dx):
         return _gather_reduce_core(
-            program, pv, src_aux, dst_aux, src_local, dst_local, weights,
+            program, pv, sx, dx, src_local, dst_local, weights,
             e_valid, a, num_segments, has_weights,
         )
 
-    return jax.vmap(one)(prev_src, acc)
+    return jax.vmap(
+        one,
+        in_axes=(
+            0,
+            0,
+            _aux_axes(src_aux, aux_batched),
+            _aux_axes(dst_aux, aux_batched),
+        ),
+    )(prev_src, acc, src_aux, dst_aux)
 
 
 def _to_hub_core(
@@ -395,7 +449,8 @@ def _to_hub_core(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("program", "num_segments", "has_weights")
+    jax.jit,
+    static_argnames=("program", "num_segments", "has_weights", "aux_batched"),
 )
 def _block_to_hub(
     program: VertexProgram,
@@ -409,16 +464,24 @@ def _block_to_hub(
     e_valid: jnp.ndarray,
     num_segments: int,  # number of hub slots (unique destinations), padded
     has_weights: bool,
+    aux_batched: bool = False,
 ):
     """ToHub (paper Alg. 6 line 4): partial ⊕ per unique destination."""
 
-    def one(pv):
+    def one(pv, sx, dx):
         return _to_hub_core(
-            program, pv, src_aux, dst_aux, src_local, hub_inv, dst_local,
+            program, pv, sx, dx, src_local, hub_inv, dst_local,
             weights, e_valid, num_segments, has_weights,
         )
 
-    return jax.vmap(one)(prev_src)
+    return jax.vmap(
+        one,
+        in_axes=(
+            0,
+            _aux_axes(src_aux, aux_batched),
+            _aux_axes(dst_aux, aux_batched),
+        ),
+    )(prev_src, src_aux, dst_aux)
 
 
 @functools.partial(jax.jit, static_argnames=("program",))
@@ -444,29 +507,40 @@ def _block_from_hub(
     return jax.vmap(one)(acc, partial)
 
 
-@functools.partial(jax.jit, static_argnames=("program",))
+@functools.partial(jax.jit, static_argnames=("program", "aux_batched"))
 def _apply_interval(
     program: VertexProgram,
     old: jnp.ndarray,  # (K, isize)
     acc: jnp.ndarray,  # (K, isize)
-    aux: dict,  # interval view, shared across queries
+    aux: dict,  # interval view; (K,)-leading leaves when aux_batched
     globals_: dict,  # per-query iteration scalars, (K,)-leading leaves
     valid: jnp.ndarray,  # (isize,) bool — mask off padding in the last interval
     tol: jnp.ndarray,
+    aux_batched: bool = False,
 ):
-    def one(o, a, gl):
-        new = program.apply(o, a, aux, gl)
+    def one(o, a, ax, gl):
+        new = program.apply(o, a, ax, gl)
         new = jnp.where(valid, new, o)
         changed = jnp.any(program.changed(o, new, tol) & valid)
         return new, changed
 
-    return jax.vmap(one)(old, acc, globals_)
+    return jax.vmap(one, in_axes=(0, 0, _aux_axes(aux, aux_batched), 0))(
+        old, acc, aux, globals_
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("program",))
-def _pre_iteration(program: VertexProgram, attrs_flat: jnp.ndarray, aux: dict):
+@functools.partial(jax.jit, static_argnames=("program", "aux_batched"))
+def _pre_iteration(
+    program: VertexProgram,
+    attrs_flat: jnp.ndarray,
+    aux: dict,
+    aux_batched: bool = False,
+):
     """Per-query iteration globals (e.g. PageRank dangling mass), (K,)-leaved."""
-    return jax.vmap(lambda a: program.pre_iteration(a, aux))(attrs_flat)
+    return jax.vmap(
+        lambda a, ax: program.pre_iteration(a, ax),
+        in_axes=(0, _aux_axes(aux, aux_batched)),
+    )(attrs_flat, aux)
 
 
 def _fused_core(
@@ -496,7 +570,8 @@ def _fused_core(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("program", "n_pad", "P", "has_weights")
+    jax.jit,
+    static_argnames=("program", "n_pad", "P", "has_weights", "aux_batched"),
 )
 def _fused_iteration(
     program: VertexProgram,
@@ -510,13 +585,14 @@ def _fused_iteration(
     n_pad: int,
     P: int,
     has_weights: bool,
+    aux_batched: bool = False,
 ):
-    def one(a):
+    def one(a, ax):
         return _fused_core(
-            program, a, aux, src, dst, weights, valid, tol, n_pad, P, has_weights
+            program, a, ax, src, dst, weights, valid, tol, n_pad, P, has_weights
         )
 
-    return jax.vmap(one)(attrs)
+    return jax.vmap(one, in_axes=(0, _aux_axes(aux, aux_batched)))(attrs, aux)
 
 
 # ---------------------------------------------------------------------------
@@ -544,10 +620,11 @@ def _packed_sweep_impl(
     program: VertexProgram,
     attrs_flat: jnp.ndarray,  # (K, n_pad) previous attributes (read-only)
     acc_flat: jnp.ndarray,  # (K, n_pad) running ⊕ accumulators (donatable)
-    aux: dict,  # run-constant aux, (n_pad,) or scalar leaves
+    aux: dict,  # run-constant aux; (K,)-leading leaves when aux_batched
     tiles: dict,  # PackedSweep device arrays, (NT, ...) leaves
     row_active: jnp.ndarray,  # (P,) bool — sweep's active source intervals
     has_weights: bool,
+    aux_batched: bool = False,
 ):
     """The gather-reduce phase of one update sweep over a tile sequence.
 
@@ -581,21 +658,21 @@ def _packed_sweep_impl(
         run_dst = tile["run_dst"]
         w = tile["weights"] if has_weights else None
         mask = (jnp.arange(T) < tile["e_valid"]) & vert_active[src]
-        s_aux = {
-            k: (v[src] if getattr(v, "ndim", 0) == 1 else v)
-            for k, v in aux.items()
-        }
-        d_aux = (
-            {
-                k: (v[dst] if getattr(v, "ndim", 0) == 1 else v)
-                for k, v in aux.items()
-            }
-            if program.needs_dst_aux
-            else None
-        )
 
-        def one(pv, aq):
+        def one(pv, aq, auxq):
             vals = pv[src]
+            s_aux = {
+                k: (v[src] if getattr(v, "ndim", 0) == 1 else v)
+                for k, v in auxq.items()
+            }
+            d_aux = (
+                {
+                    k: (v[dst] if getattr(v, "ndim", 0) == 1 else v)
+                    for k, v in auxq.items()
+                }
+                if program.needs_dst_aux
+                else None
+            )
             contrib = program.gather(vals, w, s_aux, d_aux)
             ident = reduce_identity(program.reduce, contrib.dtype)
             contrib = jnp.where(mask, contrib, ident)
@@ -608,7 +685,12 @@ def _packed_sweep_impl(
             red = jax.ops.segment_max(contrib, run, num_segments=T)
             return aq.at[run_dst].max(red.astype(aq.dtype), mode="drop")
 
-        return jax.vmap(one)(attrs_flat, carry), None
+        return (
+            jax.vmap(one, in_axes=(0, 0, _aux_axes(aux, aux_batched)))(
+                attrs_flat, carry, aux
+            ),
+            None,
+        )
 
     acc_flat, _ = jax.lax.scan(body, acc_flat, tiles)
     return acc_flat
@@ -622,6 +704,7 @@ def _apply_all_impl(
     globals_: dict,  # (K,)-leading leaves from _pre_iteration
     valid: jnp.ndarray,  # (P, isz) bool
     tol: jnp.ndarray,
+    aux_batched: bool = False,
 ):
     """All P interval applies of a sweep in one batched dispatch.
 
@@ -630,8 +713,17 @@ def _apply_all_impl(
     exact no-op and ``changed`` is False — matching the per-block skip.
     """
     K, P, isz = old.shape
-    aux2 = _stack_interval_aux(aux, P, isz)
-    aux_axes = {k: (0 if getattr(v, "ndim", 0) == 2 else None) for k, v in aux2.items()}
+    if aux_batched:
+        # Per-query aux: (K, n_pad) leaves fold to (K, P, isz) interval
+        # rows and map over the query axis alongside the attributes.
+        aux2 = {
+            k: (v.reshape(K, P, isz) if getattr(v, "ndim", 0) == 2 else v)
+            for k, v in aux.items()
+        }
+        q_axes = {k: 0 for k in aux2}
+    else:
+        aux2 = _stack_interval_aux(aux, P, isz)
+        q_axes = {k: None for k in aux2}
 
     def per_interval(o, a, auxv, v, gl):
         new = program.apply(o, a, auxv, gl)
@@ -639,12 +731,18 @@ def _apply_all_impl(
         changed = jnp.any(program.changed(o, new, tol) & v)
         return new, changed
 
-    def per_query(o, a, gl):
-        return jax.vmap(per_interval, in_axes=(0, 0, aux_axes, 0, None))(
-            o, a, aux2, valid, gl
+    def per_query(o, a, auxq, gl):
+        iv_axes = {
+            k: (0 if getattr(v, "ndim", 0) == 2 else None)
+            for k, v in auxq.items()
+        }
+        return jax.vmap(per_interval, in_axes=(0, 0, iv_axes, 0, None))(
+            o, a, auxq, valid, gl
         )
 
-    return jax.vmap(per_query, in_axes=(0, 0, 0))(old, acc, globals_)
+    return jax.vmap(per_query, in_axes=(0, 0, q_axes, 0))(
+        old, acc, aux2, globals_
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -659,13 +757,57 @@ def _packed_jits(donate: bool):
     donate_kw = {"donate_argnums": (2,)} if donate else {}
     sweep = jax.jit(
         _packed_sweep_impl,
-        static_argnames=("program", "has_weights"),
+        static_argnames=("program", "has_weights", "aux_batched"),
         **donate_kw,
     )
     apply_all = jax.jit(
-        _apply_all_impl, static_argnames=("program",), **donate_kw
+        _apply_all_impl,
+        static_argnames=("program", "aux_batched"),
+        **donate_kw,
     )
     return sweep, apply_all
+
+
+def _packed_sweep_select_impl(
+    program: VertexProgram,
+    attrs_flat: jnp.ndarray,  # (K, n_pad)
+    acc_flat: jnp.ndarray,  # (K, n_pad) (donatable)
+    aux: dict,
+    tiles: dict,  # (NT, ...) staged tile leaves
+    idx: jnp.ndarray,  # (bucket,) int32 active tile indices, 0-padded
+    a_valid: jnp.ndarray,  # scalar int32: real entries in idx
+    row_active: jnp.ndarray,  # (P,) bool
+    has_weights: bool,
+    aux_batched: bool = False,
+):
+    """Compacted active-tile sweep: scan only the gathered tiles.
+
+    ``idx`` holds the active tile indices in ascending order (so the scan
+    preserves the full sweep's ascending-source-interval fold order),
+    padded with tile 0 to a power-of-two bucket — padding entries are
+    neutralized by forcing their ``e_valid`` to 0, which masks every edge
+    to an exact ⊕-identity. The gather keeps the scan's tile shape
+    static, so jit compiles at most ``log2(NT)`` bucket variants instead
+    of one executable per frontier size.
+    """
+    sel = {k: v[idx] for k, v in tiles.items()}
+    keep = jnp.arange(idx.shape[0]) < a_valid
+    sel["e_valid"] = jnp.where(keep, sel["e_valid"], 0)
+    return _packed_sweep_impl(
+        program, attrs_flat, acc_flat, aux, sel, row_active, has_weights,
+        aux_batched,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_select_jits(donate: bool):
+    """The compacted-gather sweep executable (selective packed path)."""
+    donate_kw = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(
+        _packed_sweep_select_impl,
+        static_argnames=("program", "has_weights", "aux_batched"),
+        **donate_kw,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -685,6 +827,8 @@ class _RunContext:
     K: int
     residency: str = "device"  # resolved placement ("device" | "host")
     fetcher: _BlockFetcher = None  # type: ignore[assignment]
+    activity: str = "off"  # resolved activity ("selective" | "off")
+    aux_batched: bool = False  # aux leaves carry a leading (K,) query axis
 
     @property
     def block_keys(self) -> frozenset:
@@ -692,10 +836,16 @@ class _RunContext:
 
 
 def _rows_to_process(ctx: _RunContext, active: np.ndarray) -> list[int]:
-    """Monotone programs skip source intervals inactive for *every* query
-    (paper §II-B activity tracking, unioned over the batch axis)."""
+    """Selective runs skip source intervals inactive for *every* query
+    (paper §II-B activity tracking, unioned over the batch axis).
+
+    Resolved per compile: ``"selective"`` iff the program is monotone
+    (re-gathering an unchanged source is an exact no-op) and the plan did
+    not force ``activity="off"`` — the A/B baseline where every interval
+    is processed and every chunk streamed each sweep.
+    """
     P = ctx.session.graph.P
-    if ctx.program.monotone:
+    if ctx.activity == "selective":
         return [i for i in range(P) if active[:, i].any()]
     return list(range(P))
 
@@ -706,7 +856,9 @@ def _iteration_spu(ctx: _RunContext, attrs, active, meters: Meters):
     g = sess.graph
     isz = g.interval_size
     K = ctx.K
-    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    globals_ = _pre_iteration(
+        prog, attrs.reshape(K, -1), ctx.aux, aux_batched=ctx.aux_batched
+    )
     ident = reduce_identity(prog.reduce, prog.dtype)
     acc = [jnp.full((K, isz), ident, prog.dtype) for _ in range(g.P)]
     touched = [False] * g.P
@@ -729,6 +881,7 @@ def _iteration_spu(ctx: _RunContext, attrs, active, meters: Meters):
             acc[j],
             num_segments=isz,
             has_weights=sess.has_weights,
+            aux_batched=ctx.aux_batched,
         )
         touched[j] = True
         meters.blocks_processed += 1
@@ -742,7 +895,7 @@ def _iteration_spu(ctx: _RunContext, attrs, active, meters: Meters):
             continue
         new_j, changed = _apply_interval(
             prog, attrs[:, j], acc[j], ctx.aux_views[j], globals_,
-            ctx.valid[j], ctx.tol,
+            ctx.valid[j], ctx.tol, aux_batched=ctx.aux_batched,
         )
         new_cols.append(new_j)
         active_next[:, j] = np.asarray(changed)
@@ -761,7 +914,9 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
     g = sess.graph
     isz = g.interval_size
     K = ctx.K
-    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    globals_ = _pre_iteration(
+        prog, attrs.reshape(K, -1), ctx.aux, aux_batched=ctx.aux_batched
+    )
     ident = reduce_identity(prog.reduce, prog.dtype)
     acc = [jnp.full((K, isz), ident, prog.dtype) for _ in range(g.P)]
     touched = [False] * g.P
@@ -804,6 +959,7 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
             acc[j],
             num_segments=isz,
             has_weights=sess.has_weights,
+            aux_batched=ctx.aux_batched,
         )
         touched[j] = True
         meters.blocks_processed += 1
@@ -837,6 +993,7 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
                     blk["e_valid"],
                     num_segments=blk["u_bucket"],
                     has_weights=sess.has_weights,
+                    aux_batched=ctx.aux_batched,
                 )
                 hubs[(i, j)] = (partial, blk["hub_dst"], blk["u_valid"], blk["u"])
                 touched[j] = True
@@ -874,7 +1031,7 @@ def _iteration_two_phase(ctx: _RunContext, attrs, active, meters: Meters, Q: int
             meters.bytes_read_intervals += iv_bytes
         new_j, changed = _apply_interval(
             prog, attrs[:, j], acc[j], ctx.aux_views[j], globals_,
-            ctx.valid[j], ctx.tol,
+            ctx.valid[j], ctx.tol, aux_batched=ctx.aux_batched,
         )
         new_cols[j] = new_j
         active_next[:, j] = np.asarray(changed)
@@ -915,6 +1072,7 @@ def _iteration_fused(ctx: _RunContext, attrs, active, meters: Meters):
         n_pad=g.n_pad,
         P=g.P,
         has_weights=sess.has_weights,
+        aux_batched=ctx.aux_batched,
     )
     meters.blocks_processed += len(sess.block_keys)
     meters.edges_processed += g.m
@@ -1031,8 +1189,45 @@ def _chunk_nbytes(chunk: dict) -> int:
     return sum(a.nbytes for a in chunk.values())
 
 
+def _sweep_tile_slab(
+    ctx: _RunContext, attrs_flat, acc, tiles, row_active, sweep, window
+):
+    """Run the packed scan over one staged tile slab, compacted to ``window``.
+
+    ``tiles`` is a dict of device leaves with leading axis ``len(window)``
+    (the full staged layout, or the pinned prefix). ``window=None`` (full
+    sweep) and an all-True window use the plain scan — the exact
+    executable the ``activity="off"`` baseline runs; a partial window
+    gathers the active tiles into a power-of-two bucket and runs the
+    compacted scan (≤ log2(NT) jit variants); an all-False window is a
+    pure no-op. ``np.flatnonzero`` keeps the gathered tiles in ascending
+    order, preserving the full sweep's fold order — bit-identity.
+    """
+    sess, prog = ctx.session, ctx.program
+    hw = sess.has_weights
+    if window is None or window.all():
+        return sweep(
+            prog, attrs_flat, acc, ctx.aux, tiles, row_active,
+            has_weights=hw, aux_batched=ctx.aux_batched,
+        )
+    local = np.flatnonzero(window)
+    if local.size == 0:
+        return acc
+    count = int(window.shape[0])
+    bucket = min(next_bucket(int(local.size)), count)
+    idx = np.zeros(bucket, np.int32)
+    idx[: local.size] = local
+    select = _packed_select_jits(jax.default_backend() != "cpu")
+    return select(
+        prog, attrs_flat, acc, ctx.aux, tiles,
+        jnp.asarray(idx), jnp.asarray(np.int32(local.size)), row_active,
+        has_weights=hw, aux_batched=ctx.aux_batched,
+    )
+
+
 def _packed_host_sweep(
-    ctx: _RunContext, attrs_flat, acc, row_active, meters: Meters, sweep
+    ctx: _RunContext, attrs_flat, acc, row_active, meters: Meters, sweep,
+    tile_active=None,
 ):
     """Host-resident packed execution: stream tile chunks through the scan.
 
@@ -1054,6 +1249,14 @@ def _packed_host_sweep(
     chunk is sliced straight out of the file and additionally charges its
     raw bytes to ``bytes_disk_read`` — the ``packed_disk_bytes`` closed
     form.
+
+    ``tile_active`` (selective execution) restricts the physical stream
+    to the frontier: chunks containing no active tile are never fetched —
+    no transfer, no ``bytes_h2d``/``bytes_disk_read`` charge — and the
+    pinned prefix runs compacted to its active tiles. The closed forms
+    gain the same activity term via
+    :func:`repro.core.iomodel.selective_streamed_tiles`, keeping
+    measured-vs-modelled equality exact.
     """
     sess, prog = ctx.session, ctx.program
     packed = sess._staged.packed_host(sess.packing)
@@ -1066,14 +1269,22 @@ def _packed_host_sweep(
         meters.peak_device_graph_bytes, pin_model
     )
     if pins is not None:
-        acc = sweep(
-            prog, attrs_flat, acc, ctx.aux, pins, row_active, has_weights=hw
+        acc = _sweep_tile_slab(
+            ctx, attrs_flat, acc, pins, row_active, sweep,
+            None if tile_active is None else tile_active[: splan.pin_tiles],
         )
     nt = packed.num_tiles
     if splan.pin_tiles >= nt:
         return acc
     Be = sess.Be
-    starts = list(range(splan.pin_tiles, nt, splan.chunk_tiles))
+    starts = [
+        lo
+        for lo in range(splan.pin_tiles, nt, splan.chunk_tiles)
+        if tile_active is None
+        or tile_active[lo : min(lo + splan.chunk_tiles, nt)].any()
+    ]
+    if not starts:
+        return acc
 
     def fetch(idx: int) -> tuple[dict, Any, float, bool]:
         lo = starts[idx]
@@ -1098,7 +1309,8 @@ def _packed_host_sweep(
             meters.peak_device_graph_bytes, live
         )
         acc = sweep(
-            prog, attrs_flat, acc, ctx.aux, dev, row_active, has_weights=hw
+            prog, attrs_flat, acc, ctx.aux, dev, row_active,
+            has_weights=hw, aux_batched=ctx.aux_batched,
         )
         cur = nxt
     return acc
@@ -1123,27 +1335,83 @@ def _iteration_packed(ctx: _RunContext, attrs, active, meters: Meters):
         _charge_packed_two_phase(
             ctx, rows, meters, Q=0 if strategy == "dpu" else ctx.choice.Q
         )
-    globals_ = _pre_iteration(prog, attrs.reshape(K, -1), ctx.aux)
+    globals_ = _pre_iteration(
+        prog, attrs.reshape(K, -1), ctx.aux, aux_batched=ctx.aux_batched
+    )
     ident = reduce_identity(prog.reduce, prog.dtype)
     attrs_flat = attrs.reshape(K, g.n_pad)
     acc = jnp.full((K, g.n_pad), ident, prog.dtype)
     row_mask = np.zeros(g.P, dtype=bool)
     row_mask[rows] = True
     row_active = jnp.asarray(row_mask)
+    # Selective execution: map the interval frontier onto the tile axis
+    # (a tile is active iff any source interval in its span is) and run
+    # the sweep compacted to active tiles / active streamed chunks. A
+    # full frontier short-circuits to the plain sweep — the same
+    # executable as activity="off".
+    selective = ctx.activity == "selective" and not row_mask.all()
+    tile_active = sess._packed_tile_activity(row_mask) if selective else None
     sweep, apply_all = _packed_jits(jax.default_backend() != "cpu")
     if ctx.residency in ("host", "disk"):
-        acc = _packed_host_sweep(ctx, attrs_flat, acc, row_active, meters, sweep)
+        acc = _packed_host_sweep(
+            ctx, attrs_flat, acc, row_active, meters, sweep, tile_active
+        )
     else:
         tiles = sess._staged.packed_tiles(sess.packing)
-        acc = sweep(
-            prog, attrs_flat, acc, ctx.aux, tiles, row_active,
-            has_weights=sess.has_weights,
+        acc = _sweep_tile_slab(
+            ctx, attrs_flat, acc, tiles, row_active, sweep, tile_active
         )
     acc = acc.reshape(K, g.P, g.interval_size)
     new, changed = apply_all(
-        prog, attrs, acc, ctx.aux, globals_, ctx.valid, ctx.tol
+        prog, attrs, acc, ctx.aux, globals_, ctx.valid, ctx.tol,
+        aux_batched=ctx.aux_batched,
     )
     return new, np.asarray(changed)
+
+
+def _batch_aux(prog: VertexProgram, g, kwargs_list: list[dict]) -> tuple[dict, bool]:
+    """Build the batch's aux dict: shared, or vmap-stacked per query.
+
+    When every query's ``make_aux`` output is identical (the common case —
+    BFS roots and SSSP sources don't enter aux), the shared dict is
+    returned with ``aux_batched=False`` and broadcasts across the batch
+    exactly as before. When they differ but are stackable (same keys,
+    shapes and dtypes — e.g. a batch of ``MaxLabelForward`` plans with
+    different masks), every leaf is stacked with a leading ``(K,)`` query
+    axis and ``aux_batched=True`` tells the primitives to vmap over it.
+    Aux dicts that cannot be stacked raise :class:`TypeError` — silently
+    applying query 0's aux to all K (the old behaviour) produced wrong
+    results for queries 1..K-1.
+    """
+    aux_list = [prog.make_aux(g, **kw) for kw in kwargs_list]
+    aux0 = aux_list[0]
+    if len(aux_list) == 1:
+        return aux0, False
+    identical = True
+    for aux in aux_list[1:]:
+        if set(aux) != set(aux0):
+            raise TypeError(
+                f"aux-incompatible batch for program {prog.name!r}: queries "
+                f"produced different aux keys ({sorted(aux0)} vs "
+                f"{sorted(aux)}); run these plans individually"
+            )
+        for k in aux0:
+            a, b = np.asarray(aux[k]), np.asarray(aux0[k])
+            if a.shape != b.shape or a.dtype != b.dtype:
+                raise TypeError(
+                    f"aux-incompatible batch for program {prog.name!r}: "
+                    f"leaf {k!r} differs in shape/dtype across queries "
+                    f"({b.shape}/{b.dtype} vs {a.shape}/{a.dtype}); run "
+                    "these plans individually"
+                )
+            if identical and not np.array_equal(a, b):
+                identical = False
+    if identical:
+        return aux0, False
+    stacked = {
+        k: jnp.stack([jnp.asarray(a[k]) for a in aux_list]) for k in aux0
+    }
+    return stacked, True
 
 
 # ---------------------------------------------------------------------------
@@ -1207,6 +1475,7 @@ class _StagedGraph:
         self._device_blocks: dict[tuple[int, int], dict] | None = None
         self._packed_host: dict[str, Any] = {}  # packing mode -> PackedSweep
         self._packed_tiles: dict[str, dict] = {}  # packing mode -> device leaves
+        self._packed_spans: dict[str, tuple] = {}  # mode -> (first_i, last_i)
         self.fused: dict | None = None
         self.kernel_operands: dict[tuple, tuple] = {}
 
@@ -1265,6 +1534,22 @@ class _StagedGraph:
                 tiles["weights"] = jnp.asarray(packed.weights)
             self._packed_tiles[mode] = tiles
         return tiles
+
+    def packed_spans(self, mode: str) -> tuple:
+        """Per-tile inclusive source-interval spans, computed once.
+
+        The ``(first_i, last_i)`` arrays of
+        :func:`repro.core.dsss.tile_source_spans` — the host-side
+        metadata selective execution folds the (P,) interval frontier
+        onto the tile axis with, each sweep, in O(P + NT).
+        """
+        spans = self._packed_spans.get(mode)
+        if spans is None:
+            spans = tile_source_spans(
+                self.packed_host(mode), self.graph.interval_size
+            )
+            self._packed_spans[mode] = spans
+        return spans
 
 
 class _BlockFetcher:
@@ -1782,6 +2067,18 @@ class GraphSession:
         self._stream_plans[key] = plan
         return plan
 
+    def _packed_tile_activity(self, row_active: np.ndarray) -> np.ndarray:
+        """(NT,) bool tile-activity map for this sweep's interval frontier.
+
+        Derived from the previous sweep's ``changed`` output (the (P,)
+        ``row_active`` bitmap) and the packed layout's per-tile source
+        spans — see :func:`repro.core.dsss.active_tile_mask`. Conservative
+        for coalesced tiles whose span covers an empty-but-active-counted
+        interval (processed unnecessarily, never skipped wrongly).
+        """
+        first, last = self._staged.packed_spans(self.packing)
+        return active_tile_mask(row_active, first, last)
+
     def _ensure_packed_pins(self, pin_tiles: int) -> tuple[dict | None, float]:
         """Device-pin exactly the leading ``pin_tiles`` tiles (host mode).
 
@@ -1859,9 +2156,11 @@ class GraphSession:
         )
 
     def compile(self, plan: ExecutionPlan) -> CompiledPlan:
-        """Resolve a plan's strategy + residency + execution (cached)."""
+        """Resolve a plan's strategy + residency + execution + activity
+        (cached)."""
         key = (
-            plan.strategy, plan.program.attr_bytes, plan.residency, plan.execution
+            plan.strategy, plan.program.attr_bytes, plan.residency,
+            plan.execution, plan.activity, plan.program.monotone,
         )
         compiled = self._compiled.get(key)
         if compiled is None:
@@ -1880,6 +2179,11 @@ class GraphSession:
                     self._resolve_host_cache(plan.strategy, params)
                     if residency == "disk"
                     else frozenset()
+                ),
+                activity=(
+                    "selective"
+                    if plan.program.monotone and plan.activity != "off"
+                    else "off"
                 ),
             )
             self._compiled[key] = compiled
@@ -2015,8 +2319,23 @@ class GraphSession:
                 self._pinned[key] = _device_block(self.host_blocks[key])
         return self._pinned
 
-    def _interval_aux(self, aux: dict, k: int) -> dict:
+    def _interval_aux(self, aux: dict, k: int, batched: bool = False) -> dict:
+        """Interval k's view of the aux dict.
+
+        ``batched=True`` slices per-query ``(K, n_pad)`` leaves to
+        ``(K, isz)`` — the leading query axis survives so the primitives'
+        ``aux_batched`` vmap maps over it; scalars pass through either way.
+        """
         isz = self.graph.interval_size
+        if batched:
+            return {
+                key: (
+                    v[:, k * isz : (k + 1) * isz]
+                    if getattr(v, "ndim", 0) == 2
+                    else v
+                )
+                for key, v in aux.items()
+            }
         return {
             key: (v[k * isz : (k + 1) * isz] if getattr(v, "ndim", 0) == 1 else v)
             for key, v in aux.items()
@@ -2036,11 +2355,13 @@ class GraphSession:
     def run_batch(self, plans: list[ExecutionPlan]) -> BatchResult:
         """Execute K plans, sharing one streamed pass over the edge blocks.
 
-        Plans fuse when they agree on (program, strategy, max_iters, tol)
-        and produce identical aux arrays — they may differ only in
-        Initialize kwargs (BFS/SSSP sources, seeds). Incompatible plans
-        fall back to sequential ``run`` calls (``fused=False``); results
-        are identical either way.
+        Plans fuse when they share a ``batch_key()`` (program, strategy,
+        limits and the residency/execution/activity axes) and their aux
+        arrays are identical *or* stackable (same keys/shapes/dtypes —
+        e.g. per-query masks); stackable aux runs vmapped with a leading
+        query axis on the native SPU/DPU/MPU/fused schedules. Everything
+        else falls back to sequential ``run`` calls (``fused=False``);
+        results are identical either way.
         """
         if not plans:
             return BatchResult([], Meters(), 0, True, True)
@@ -2064,14 +2385,25 @@ class GraphSession:
             return False
         g = self.graph
         aux0 = head.program.make_aux(g, **head.kwargs_dict())
+        identical = True
         for p in plans[1:]:
             aux = p.program.make_aux(g, **p.kwargs_dict())
-            if set(aux) != set(aux0) or any(
-                not np.array_equal(np.asarray(aux[k]), np.asarray(aux0[k]))
-                for k in aux0
-            ):
+            if set(aux) != set(aux0):
                 return False
-        return True
+            for k in aux0:
+                a, b = np.asarray(aux[k]), np.asarray(aux0[k])
+                if a.shape != b.shape or a.dtype != b.dtype:
+                    return False
+                if identical and not np.array_equal(a, b):
+                    identical = False
+        if identical:
+            return True
+        # Differing-but-stackable aux fuses via the batched-aux vmap,
+        # which only the native schedules' primitives implement; custom
+        # registered strategies fall back to sequential runs.
+        return self.compile(head).choice.strategy in (
+            "spu", "dpu", "mpu", "fused",
+        )
 
     def _execute(self, plan: ExecutionPlan, kwargs_list: list[dict]) -> BatchResult:
         g = self.graph
@@ -2083,7 +2415,15 @@ class GraphSession:
             [prog.init_attrs(g, **kw).reshape(g.P, isz) for kw in kwargs_list]
         )
         active = np.stack([prog.init_active(g, **kw) for kw in kwargs_list])
-        aux = prog.make_aux(g, **kwargs_list[0])
+        aux, aux_batched = _batch_aux(prog, g, kwargs_list)
+        if aux_batched and compiled.choice.strategy not in (
+            "spu", "dpu", "mpu", "fused",
+        ):
+            raise TypeError(
+                "plans with per-query aux cannot fuse under custom strategy "
+                f"{compiled.choice.strategy!r} (its iteration body predates "
+                "the batched-aux vmap); run them individually"
+            )
         meters = Meters()
         # Per-block host/disk runs pin the resident set here; packed
         # host/disk runs pin a tile prefix lazily inside the sweep (the
@@ -2113,12 +2453,17 @@ class GraphSession:
             aux=aux,
             # Hoisted: all P interval views of the (run-constant) aux are
             # sliced once here, not per (i, j) block inside the sweeps.
-            aux_views=[self._interval_aux(aux, k) for k in range(g.P)],
+            aux_views=[
+                self._interval_aux(aux, k, batched=aux_batched)
+                for k in range(g.P)
+            ],
             valid=(jnp.arange(g.n_pad) < g.n).reshape(g.P, isz),
             tol=jnp.asarray(plan.tol, jnp.float32),
             K=K,
             residency=compiled.residency,
             fetcher=fetcher,
+            activity=compiled.activity,
+            aux_batched=aux_batched,
         )
         if compiled.execution == "packed":
             iteration = _iteration_packed
@@ -2128,10 +2473,18 @@ class GraphSession:
             0 if not active[m].any() else None for m in range(K)
         ]
         sweeps = 0
+        activity_log: list[np.ndarray] = []
         start = time.perf_counter()
         for _ in range(plan.max_iters):
             if not active.any():
                 break
+            # Record the sweep's processed-interval bitmap (the union
+            # _rows_to_process acts on) before the sweep mutates `active`
+            # — this is the trace the iomodel activity terms consume.
+            if compiled.activity == "selective":
+                activity_log.append(active.any(axis=0).copy())
+            else:
+                activity_log.append(np.ones(g.P, dtype=bool))
             attrs, active = iteration(ctx, attrs, active, meters)
             sweeps += 1
             meters.iterations += 1
@@ -2158,6 +2511,7 @@ class GraphSession:
                     converged=converged_at[m] is not None,
                     meters=meters,
                     strategy=compiled.choice,
+                    activity_log=tuple(activity_log),
                 )
             )
         return BatchResult(
@@ -2166,6 +2520,7 @@ class GraphSession:
             iterations=sweeps,
             converged=not active.any(),
             fused=True,
+            activity_log=tuple(activity_log),
         )
 
 

@@ -19,6 +19,7 @@ only when *every* interval is inactive.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any
 
 import jax
@@ -74,6 +75,28 @@ class VertexProgram:
     def make_aux(self, g, **kw) -> dict[str, jnp.ndarray]:
         """Per-vertex auxiliary arrays, gathered alongside attributes."""
         return {}
+
+    def accepted_kwargs(self) -> frozenset:
+        """The Initialize kwarg names this program accepts.
+
+        Harvested from the *named* parameters of ``init_attrs`` /
+        ``init_active`` / ``make_aux`` (their ``**kw`` catch-alls exist
+        only so the three can share one kwargs dict — a name none of them
+        declares is a caller mistake, not a silently ignorable extra).
+        :class:`repro.core.plan.ExecutionPlan` validates ``program_kwargs``
+        against this set at construction; programs whose lifecycle methods
+        genuinely forward unknown names somewhere else may override.
+        """
+        names = set()
+        for fn in (self.init_attrs, self.init_active, self.make_aux):
+            for p in inspect.signature(fn).parameters.values():
+                if p.name in ("self", "g") or p.kind in (
+                    inspect.Parameter.VAR_KEYWORD,
+                    inspect.Parameter.VAR_POSITIONAL,
+                ):
+                    continue
+                names.add(p.name)
+        return frozenset(names)
 
     def pre_iteration(self, attrs: jnp.ndarray, aux) -> dict[str, jnp.ndarray]:
         """Iteration-level scalars (e.g. PageRank dangling mass)."""

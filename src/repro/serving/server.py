@@ -17,13 +17,17 @@ The serving loop that feeds :meth:`GraphSession.run_batch`:
   fusability and falls back to sequential runs if e.g. two PageRank
   plans froze different damping aux; results are identical either way).
 * **Admission control**: before a batch runs, its in-flight byte estimate
-  (:func:`estimate_inflight_bytes` — the session's three-level-budget
+  (:func:`estimate_inflight_parts` — the session's three-level-budget
   resident set / packed stream plan for device topology, plus
   ``2·n_pad·Ba·K`` attribute state) must fit ``inflight_capacity``
-  alongside already-running batches, or the batch waits. A batch larger
-  than the whole capacity runs *alone* (counted in
-  ``admission_overflows``) — capacity bounds concurrency; the per-run
-  working set is already bounded by each session's ``memory_budget``.
+  alongside already-running batches, or the batch waits. The topology
+  term is charged *once per graph* across concurrently admitted batches
+  (the pinned tiles / stream ring are shared session staging), so
+  frontier-bounded point queries on one graph don't each reserve the
+  full placement and spuriously serialize. A batch larger than the whole
+  capacity runs *alone* (counted in ``admission_overflows``) — capacity
+  bounds concurrency; the per-run working set is already bounded by each
+  session's ``memory_budget``.
 * **Sessions**: graphs come from a :class:`~repro.serving.pool.
   SessionPool`; a per-graph lock serializes batches on one session
   (``GraphSession`` run state is not reentrant) while different graphs
@@ -54,13 +58,22 @@ from repro.serving.api import (
 )
 from repro.serving.pool import SessionPool
 
-__all__ = ["GraphServer", "estimate_inflight_bytes"]
+__all__ = ["GraphServer", "estimate_inflight_bytes", "estimate_inflight_parts"]
 
 
-def estimate_inflight_bytes(
+def estimate_inflight_parts(
     session: GraphSession, plan: ExecutionPlan, k: int
-) -> float:
-    """Model bytes a K-query batch of ``plan`` keeps in flight on device.
+) -> tuple[float, float]:
+    """Model ``(topology, attribute)`` bytes a K-query batch keeps in flight.
+
+    The split matters for admission: the topology term is a property of the
+    *graph placement*, shared by every batch concurrently running on the
+    same session (pinned tiles and stream buffers are staged once, not per
+    batch), while the attribute term is genuinely per-batch state. The
+    server therefore charges topology once per graph across concurrently
+    admitted batches (see :meth:`GraphServer._admit`) — without the split,
+    two frontier-bounded point queries on one big host-resident graph
+    would each reserve the full pinned prefix and spuriously serialize.
 
     Topology follows the session's resolved placement — the same
     accounting that drives ``peak_device_graph_bytes``:
@@ -73,10 +86,12 @@ def estimate_inflight_bytes(
       (:meth:`GraphSession._resolve_residency` semantics);
     * "device": the whole staged topology (``m·Be``).
 
-    Attribute state adds ``2·n_pad·Ba·K`` (ping-pong copies per query).
+    Attribute state is ``2·n_pad·Ba·K`` (ping-pong copies per query).
     All quantities are model units (``e·Be`` real edges), the same units
     as ``memory_budget`` and the meters, so admission accounting composes
-    with the session's own budget enforcement.
+    with the session's own budget enforcement. Both terms are upper
+    bounds: a frontier-bounded selective run streams fewer chunks, never
+    more.
     """
     compiled = session.compile(plan)
     g = session.graph
@@ -100,6 +115,19 @@ def estimate_inflight_bytes(
             topo += 2.0 * max(streamed, default=0)
     else:
         topo = float(g.m * session.Be)
+    return topo, attr
+
+
+def estimate_inflight_bytes(
+    session: GraphSession, plan: ExecutionPlan, k: int
+) -> float:
+    """Model bytes a K-query batch of ``plan`` keeps in flight on device.
+
+    The standalone (single-batch) estimate:
+    ``sum(estimate_inflight_parts(...))``. The server's admission ledger
+    uses the parts directly so same-graph batches share the topology term.
+    """
+    topo, attr = estimate_inflight_parts(session, plan, k)
     return attr + topo
 
 
@@ -155,6 +183,12 @@ class GraphServer:
         self._executor: concurrent.futures.ThreadPoolExecutor | None = None
         # Counters (survive across start/stop cycles).
         self._inflight_bytes = 0.0
+        # graph_key -> number of admitted batches currently holding that
+        # graph's topology reservation. The first batch on a graph charges
+        # the topology term; concurrent same-graph batches charge only
+        # their attribute state (the pinned tiles / stream ring are shared
+        # session staging, not per-batch allocations).
+        self._graph_inflight: dict[str, int] = {}
         self._stats = ServerStats()
         self._t_first: float | None = None
         self._t_last: float | None = None
@@ -316,30 +350,47 @@ class GraphServer:
             task.add_done_callback(self._tasks.discard)
 
     # -- admission -----------------------------------------------------------
-    async def _admit(self, estimate: float) -> None:
-        if self.inflight_capacity is None:
-            self._inflight_bytes += estimate
-            self._stats.peak_inflight_bytes = max(
-                self._stats.peak_inflight_bytes, self._inflight_bytes
-            )
-            return
-        async with self._admit_cv:
-            await self._admit_cv.wait_for(
-                lambda: self._inflight_bytes == 0.0
-                or self._inflight_bytes + estimate <= self.inflight_capacity
-            )
-            if estimate > self.inflight_capacity:
-                self._stats.admission_overflows += 1
-            self._inflight_bytes += estimate
-            self._stats.peak_inflight_bytes = max(
-                self._stats.peak_inflight_bytes, self._inflight_bytes
-            )
+    async def _admit(self, graph_key: str, topo: float, attr: float) -> float:
+        """Reserve in-flight bytes for one batch; returns the charged amount.
 
-    async def _release(self, estimate: float) -> None:
-        if self.inflight_capacity is None:
-            self._inflight_bytes -= estimate
-            return
+        The charge is graph-aware: the topology term is charged only by the
+        first concurrently admitted batch on ``graph_key`` — later
+        same-graph batches ride the existing reservation and charge only
+        their attribute state. ``charge()`` is re-evaluated inside the wait
+        predicate *and* at charge time under the same condition lock, so a
+        batch that waited while the topology holder finished correctly
+        re-charges topology itself (no double-charge, no free ride).
+        """
+
+        def charge() -> float:
+            shared = self._graph_inflight.get(graph_key, 0) > 0
+            return attr + (0.0 if shared else topo)
+
         async with self._admit_cv:
+            if self.inflight_capacity is not None:
+                await self._admit_cv.wait_for(
+                    lambda: self._inflight_bytes == 0.0
+                    or self._inflight_bytes + charge() <= self.inflight_capacity
+                )
+                if charge() > self.inflight_capacity:
+                    self._stats.admission_overflows += 1
+            estimate = charge()
+            self._graph_inflight[graph_key] = (
+                self._graph_inflight.get(graph_key, 0) + 1
+            )
+            self._inflight_bytes += estimate
+            self._stats.peak_inflight_bytes = max(
+                self._stats.peak_inflight_bytes, self._inflight_bytes
+            )
+            return estimate
+
+    async def _release(self, graph_key: str, estimate: float) -> None:
+        async with self._admit_cv:
+            left = self._graph_inflight.get(graph_key, 0) - 1
+            if left > 0:
+                self._graph_inflight[graph_key] = left
+            else:
+                self._graph_inflight.pop(graph_key, None)
             self._inflight_bytes -= estimate
             self._admit_cv.notify_all()
 
@@ -365,10 +416,10 @@ class GraphServer:
                 )
                 try:
                     plans = [p.request.plan for p in batch]
-                    estimate = estimate_inflight_bytes(
+                    topo, attr = estimate_inflight_parts(
                         session, plans[0], len(plans)
                     )
-                    await self._admit(estimate)
+                    estimate = await self._admit(graph_key, topo, attr)
                     admitted = True
                     await lock.acquire()
                     locked = True
@@ -423,7 +474,7 @@ class GraphServer:
             if locked:
                 lock.release()
             if admitted:
-                await self._release(estimate)
+                await self._release(graph_key, estimate)
 
     # -- driver integration ----------------------------------------------------
     def serve_plans(

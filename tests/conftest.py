@@ -21,6 +21,7 @@ PROPERTY_TEST_MODULES = [
     "test_kernels_flash_attention.py",
     "test_packed_tiling_property.py",
     "test_residency_property.py",
+    "test_selective_property.py",
     "test_storage_property.py",
     "test_substrate.py",
 ]

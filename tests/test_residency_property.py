@@ -82,9 +82,13 @@ class TestHostDeviceBitIdentity:
         for field in MODELLED_FIELDS:
             assert getattr(host.meters, field) == getattr(dev.meters, field), field
         # Device mode simulates the slow tier; host mode performs it. The
-        # default (packed) host path streams its non-pinned tile suffix
-        # every sweep, so physical transfers happen iff the budget's tile
-        # prefix does not cover the graph.
+        # default (packed) host path streams the active chunks of its
+        # non-pinned tile suffix every sweep: the exact physical volume is
+        # the frontier-aware closed form over the run's activity_log
+        # (all-ones for non-monotone PageRank, so the oracle degenerates
+        # to the full-stream form there).
+        from repro.core.iomodel import packed_h2d_bytes, selective_streamed_tiles
+
         assert dev.meters.bytes_h2d == 0.0
         host_sess = GraphSession(g, memory_budget=budget, residency="host")
         compiled = host_sess.compile(plan)
@@ -92,9 +96,18 @@ class TestHostDeviceBitIdentity:
         splan = host_sess.packed_stream_plan(
             compiled.choice.strategy, prog.attr_bytes
         )
-        assert (host.meters.bytes_h2d > 0) == (
-            splan.pin_tiles < splan.num_tiles
+        expected_h2d = sum(
+            packed_h2d_bytes(
+                selective_streamed_tiles(
+                    host_sess._packed_tile_activity(log_s),
+                    splan.pin_tiles,
+                    splan.chunk_tiles,
+                ),
+                splan.tile_edges,
+            )
+            for log_s in host.activity_log
         )
+        assert host.meters.bytes_h2d == expected_h2d
 
     def test_unlimited_budget_bit_identical_to_budgeted_host(self):
         """The acceptance identity: budget below staged bytes, results equal

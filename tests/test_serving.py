@@ -347,6 +347,35 @@ class TestAdmission:
         solo = pool.session("a").run(plans_a[0])
         np.testing.assert_array_equal(solo.attrs, served[0].result.attrs)
 
+    def test_same_graph_batches_charge_topology_once(self, graph):
+        # Two point-query batches on one streamed graph admit
+        # concurrently; the pinned prefix / stream ring they reserve is
+        # *shared* session staging, so the admission ledger must charge
+        # the topology term once, not per batch — otherwise
+        # frontier-bounded point queries over-reserve and spuriously
+        # serialize under capacity.
+        from repro.serving.server import estimate_inflight_parts
+
+        pool = SessionPool()
+        pool.register(
+            "g", graph, memory_budget=int(graph.m * 12 * 0.5), residency="host"
+        )
+        server = GraphServer(
+            pool, max_batch=1, max_wait_ms=0.0, max_concurrent=2
+        )
+        plans = _plans(BFS(), [0, 3], graph.n + 1)
+        served = server.serve([QueryRequest("g", p) for p in plans])
+        assert len(served) == 2
+        assert all(q.result.converged for q in served)
+        session = pool.session("g")
+        topo, attr = estimate_inflight_parts(session, plans[0], 1)
+        st = server.stats()
+        assert st.batches == 2
+        # Pre-fix both admissions charged topo+attr (peak 2·(topo+attr));
+        # graph-aware charging caps the shared topology at one share.
+        assert st.peak_inflight_bytes <= topo + 2 * attr + 1e-6
+        assert st.inflight_bytes == 0.0  # ledger fully released
+
     def test_oversized_batch_runs_alone(self, graph):
         pool = SessionPool()
         pool.register("g", graph, memory_budget=int(graph.m * 12 * 0.25))

@@ -243,9 +243,13 @@ class TestPlanObject:
         assert len({p1, p2, p3}) == 2
 
     def test_array_kwargs_freeze_by_content(self):
+        from repro.core.vertex_programs import MaxLabelForward
+
         mask = np.ones(16, np.int32)
-        p1 = ExecutionPlan(WCC(), program_kwargs={"mask": mask})
-        p2 = ExecutionPlan(WCC(), program_kwargs={"mask": mask.copy()})
+        p1 = ExecutionPlan(MaxLabelForward(), program_kwargs={"mask": mask})
+        p2 = ExecutionPlan(
+            MaxLabelForward(), program_kwargs={"mask": mask.copy()}
+        )
         assert p1 == p2 and hash(p1) == hash(p2)
         np.testing.assert_array_equal(p1.kwargs_dict()["mask"], mask)
         # Mutating the source array after freezing must not leak in.
