@@ -21,10 +21,19 @@ P the run is dispatch-bound. This benchmark measures:
   baseline, with the closed-form/meter exactness asserted and the
   late-iteration (collapsed-frontier) skip ratio reported.
 
+* **Kernel section** (``execution="packed_kernel"`` vs ``"packed"`` on
+  the same tiles): per-sweep wall + dispatch counts of the fused Pallas
+  sweep against the XLA scan, asserting bit-identical attrs, identical
+  meters, and exactly one fused ``pallas_call`` dispatch per sweep.
+  Off-TPU the kernel runs in interpret mode, so its wall number is a
+  correctness-path cost, not a speed claim — the claim is the dispatch
+  shape and the bits.
+
 Writes ``BENCH_sweep.json`` (repo root by default); CI runs the
-``--smoke`` variant per PR with ``--assert-padding-ratio 1.25`` and
-``--assert-skip-ratio 5.0`` so dispatch-count, padding *and*
-frontier-skip regressions fail the build.
+``--smoke`` variant per PR with ``--assert-padding-ratio 1.25``,
+``--assert-skip-ratio 5.0`` and ``--assert-kernel-parity`` so
+dispatch-count, padding, frontier-skip *and* kernel-parity regressions
+fail the build.
 
 Usage::
 
@@ -61,15 +70,23 @@ _PER_BLOCK_PRIMITIVES = [
 
 
 class DispatchCounter:
-    """Counts calls to the session's jitted primitives while active."""
+    """Counts calls to the session's jitted primitives while active.
+
+    ``count`` is every host-scheduled dispatch; ``kernel_count`` is the
+    subset that went through the fused Pallas sweep executables
+    (``execution="packed_kernel"``).
+    """
 
     def __init__(self):
         self.count = 0
+        self.kernel_count = 0
         self._saved = {}
 
-    def _wrap(self, fn):
+    def _wrap(self, fn, kernel=False):
         def counted(*a, **kw):
             self.count += 1
+            if kernel:
+                self.kernel_count += 1
             return fn(*a, **kw)
 
         return counted
@@ -94,6 +111,20 @@ class DispatchCounter:
             return self._wrap(real_select(donate))
 
         session_mod._packed_select_jits = counting_select
+        real_kernel = session_mod._packed_kernel_jits
+        self._saved["_packed_kernel_jits"] = real_kernel
+
+        def counting_kernel(donate):
+            return self._wrap(real_kernel(donate), kernel=True)
+
+        session_mod._packed_kernel_jits = counting_kernel
+        real_kernel_select = session_mod._packed_kernel_select_jits
+        self._saved["_packed_kernel_select_jits"] = real_kernel_select
+
+        def counting_kernel_select(donate):
+            return self._wrap(real_kernel_select(donate), kernel=True)
+
+        session_mod._packed_kernel_select_jits = counting_kernel_select
         return self
 
     def __exit__(self, *exc):
@@ -115,6 +146,7 @@ def bench_one(session, strategy, execution, iters):
         "mode": execution,
         "per_sweep_seconds": res.meters.wall_seconds / res.iterations,
         "dispatches_per_sweep": counter.count / res.iterations,
+        "fused_dispatches_per_sweep": counter.kernel_count / res.iterations,
         "mteps": res.meters.mteps(),
         "h2d_per_sweep": res.meters.bytes_h2d / res.iterations,
         "attrs": res.attrs,
@@ -367,6 +399,72 @@ def frontier_section(report, args):
     report["frontier"].append(row)
 
 
+def kernel_section(report, args):
+    """Fused Pallas sweep (``packed_kernel``) vs the XLA scan (``packed``).
+
+    Both executables are driven through the identical session machinery
+    (same staging, same streaming, same apply), so every row asserts
+    bit-identical attrs and fully identical meters — including physical
+    fields — and that the kernel mode dispatched exactly one fused
+    ``pallas_call`` per update sweep with the same total dispatch count
+    as the scan. Off-TPU the kernel runs under the Pallas interpreter,
+    so wall seconds compare a debugging path against compiled XLA; on
+    TPU (``backend == "compiled"``) they compare like against like.
+    """
+    from repro.kernels.dsss_spmv import default_interpret
+
+    n, m, P, iters = (400, 2_400, 4, 2) if args.smoke else (3_000, 18_000, 8, 3)
+    src, dst = erdos_renyi(n, m, seed=args.seed)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    g = build_dsss(el, P)
+    sess = GraphSession(g, residency="device")
+    kernel_backend = "interpret" if default_interpret() else "compiled"
+    for strategy in ("spu", "dpu"):
+        rows = {}
+        for execution in ("packed", "packed_kernel"):
+            r = bench_one(sess, strategy, execution, iters)
+            rows[execution] = r
+            print(
+                f"kernel {strategy:>4} {execution:>13}: "
+                f"{r['per_sweep_seconds'] * 1e3:8.2f} ms/sweep, "
+                f"{r['dispatches_per_sweep']:5.1f} dispatches/sweep "
+                f"({r['fused_dispatches_per_sweep']:.1f} fused)"
+            )
+        np.testing.assert_array_equal(
+            rows["packed"].pop("attrs"), rows["packed_kernel"].pop("attrs")
+        )
+        m_scan = dataclasses.asdict(rows["packed"].pop("meters"))
+        m_kern = dataclasses.asdict(rows["packed_kernel"].pop("meters"))
+        m_scan.pop("wall_seconds"), m_kern.pop("wall_seconds")
+        assert m_scan == m_kern, "kernel and scan must meter identically"
+        row = {
+            "P": P,
+            "n": el.n,
+            "m": el.m,
+            "strategy": strategy,
+            "kernel_backend": kernel_backend,
+            "scan_per_sweep_seconds": rows["packed"]["per_sweep_seconds"],
+            "kernel_per_sweep_seconds": rows["packed_kernel"][
+                "per_sweep_seconds"
+            ],
+            "scan_dispatches_per_sweep": rows["packed"]["dispatches_per_sweep"],
+            "kernel_dispatches_per_sweep": rows["packed_kernel"][
+                "dispatches_per_sweep"
+            ],
+            "fused_dispatches_per_sweep": rows["packed_kernel"][
+                "fused_dispatches_per_sweep"
+            ],
+            "bit_identical": True,
+            "meters_identical": True,
+        }
+        print(
+            f"kernel {strategy:>4}   parity: bit-identical, meters identical, "
+            f"{row['fused_dispatches_per_sweep']:.1f} fused dispatch/sweep "
+            f"({kernel_backend})"
+        )
+        report["kernel"].append(row)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--p-values", type=int, nargs="+", default=[8, 16, 32])
@@ -390,6 +488,12 @@ def main(argv=None):
         "skip ratio (selective vs activity='off') falls below this",
     )
     ap.add_argument(
+        "--assert-kernel-parity", action="store_true",
+        help="fail (exit 1) unless every kernel-section row is "
+        "bit-identical and meter-identical to the scan with exactly one "
+        "fused dispatch per sweep",
+    )
+    ap.add_argument(
         "--out",
         default=str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"),
     )
@@ -410,10 +514,34 @@ def main(argv=None):
         "speedups": [],
         "powerlaw": [],
         "frontier": [],
+        "kernel": [],
     }
     uniform_section(report, args)
     powerlaw_section(report, args)
     frontier_section(report, args)
+    kernel_section(report, args)
+    if args.assert_kernel_parity:
+        for row in report["kernel"]:
+            assert row["bit_identical"] and row["meters_identical"], (
+                f"kernel {row['strategy']} P={row['P']}: parity broken"
+            )
+            assert row["fused_dispatches_per_sweep"] == 1.0, (
+                f"kernel {row['strategy']} P={row['P']}: expected exactly "
+                f"one fused dispatch per sweep, got "
+                f"{row['fused_dispatches_per_sweep']}"
+            )
+            assert (
+                row["kernel_dispatches_per_sweep"]
+                == row["scan_dispatches_per_sweep"]
+            ), (
+                f"kernel {row['strategy']} P={row['P']}: dispatch shape "
+                f"diverged ({row['kernel_dispatches_per_sweep']} vs "
+                f"{row['scan_dispatches_per_sweep']})"
+            )
+        print(
+            f"kernel-parity gate holds on all {len(report['kernel'])} "
+            "kernel configurations"
+        )
     if args.assert_skip_ratio is not None:
         for row in report["frontier"]:
             assert row["late_skip_ratio"] >= args.assert_skip_ratio, (

@@ -1,7 +1,99 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+Also models the update-sweep HBM traffic of the session's three execution
+backends (``per_block`` / ``packed`` / ``packed_kernel``) for the
+paper-scale graphs, so the roofline story covers the path the engine
+actually dispatches — not just the distributed shard_map cell.
+"""
+import argparse
 import glob
 import json
 import os
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.runtime.hlo_analysis import HW  # noqa: E402  (pure-python module)
+
+# Per-edge-slot byte costs of one update sweep, by execution backend.
+# elem = 4 (f32/int32); edge record = src + dst + weight = 12 B.
+#
+# * ``per_block``: streams the raw (unpadded) edges once (12 B) plus the
+#   source-attribute gather (4 B), but pays hub-interval traffic per
+#   sub-shard column — each of the P block rows re-reads and re-writes
+#   its destination interval, an O(n·P) term no other path has.
+# * ``packed`` (XLA scan): consumes the padded tile leaves (src, dst,
+#   run_local, run_dst = 16 B/slot, + 4 B weights) plus the gather
+#   (4 B), and — because the scan body is a chain of separate gather /
+#   segment ops — XLA materializes the per-slot contributions and the
+#   windowed run partials to HBM between them: two extra write+read
+#   round trips of 4 B each (16 B/slot).
+# * ``packed_kernel`` (fused Pallas): the same padded tile leaves and
+#   gather, but contributions and run partials never leave VMEM — the
+#   16 B/slot of intermediate traffic is fused away, leaving one
+#   HBM→VMEM DMA per tile.
+#
+# All three read+write the attribute vectors (8 B/vertex); the padded
+# paths pay the packing's padding ratio on every per-slot term.
+_EDGE_RECORD = 12.0  # src + dst + w, bytes
+_TILE_LEAVES = 16.0  # src + dst + run_local + run_dst, bytes/slot
+_GATHER = 4.0  # source-attribute gather, bytes/slot
+_INTERMEDIATE = 16.0  # scan-only: contribs + run partials, write+read
+_WEIGHT = 4.0
+
+
+def sweep_execution_model(n, m, P=32, padding_ratio=1.1, weighted=True):
+    """Per-sweep FLOPs / HBM bytes of each execution backend.
+
+    FLOPs are identical across backends (3 per edge: gather-combine
+    mul+add, reduce add — the paths differ in data movement, not math);
+    returns ``{backend: {flops, hbm_bytes, intensity, compute_s,
+    memory_s, bound}}`` with times on the :class:`HW` roofline.
+    """
+    hw = HW()
+    flops = 3.0 * m
+    w = _WEIGHT if weighted else 0.0
+    vertex = 8.0 * n  # attrs read + write
+    pad = padding_ratio * m
+    per_slot_tiles = _TILE_LEAVES + w + _GATHER
+    bytes_by = {
+        "per_block": (_EDGE_RECORD + _GATHER) * m + vertex + 8.0 * n * P,
+        "packed": (per_slot_tiles + _INTERMEDIATE) * pad + vertex,
+        "packed_kernel": per_slot_tiles * pad + vertex,
+    }
+    out = {}
+    for backend, hbm in bytes_by.items():
+        compute_s = flops / hw.peak_flops
+        memory_s = hbm / hw.hbm_bw
+        out[backend] = {
+            "flops": flops,
+            "hbm_bytes": hbm,
+            "intensity": flops / hbm,
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "bound": "memory" if memory_s >= compute_s else "compute",
+        }
+    return out
+
+
+def fmt_execution_table(n, m, P=32, padding_ratio=1.1, weighted=True):
+    model = sweep_execution_model(n, m, P, padding_ratio, weighted)
+    base = model["packed_kernel"]["hbm_bytes"]
+    hdr = (
+        "| execution | HBM GB/sweep | FLOP/B | memory (ms) | compute (ms) | "
+        "bound | traffic vs kernel |"
+    )
+    lines = [hdr, "|" + "---|" * 7]
+    for backend in ("per_block", "packed", "packed_kernel"):
+        r = model[backend]
+        lines.append(
+            f"| {backend} | {r['hbm_bytes']/1e9:.2f} | "
+            f"{r['intensity']:.3f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['compute_s']*1e3:.2f} | {r['bound']} | "
+            f"{r['hbm_bytes']/base:.2f}x |"
+        )
+    return "\n".join(lines)
 
 
 def load_all(out_dir: str = "results/dryrun"):
@@ -32,11 +124,36 @@ def fmt_table(rows, mesh="single"):
     return "\n".join(lines)
 
 
-def main():
-    rows = load_all()
+# Paper Table III scales (kept in sync with core/distributed.GRAPH_SCALES,
+# which is not imported here: that module pulls in jax at import time).
+_PAPER_GRAPHS = {
+    "live-journal": (4_850_000, 69_000_000),
+    "twitter": (41_700_000, 1_470_000_000),
+    "yahoo-web": (720_000_000, 6_640_000_000),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--P", type=int, default=32)
+    ap.add_argument(
+        "--padding-ratio", type=float, default=1.1,
+        help="adaptive-packing padded/raw edge ratio for the execution "
+        "model (bench_sweep.py measures ~1.0–1.1 on power-law graphs)",
+    )
+    args = ap.parse_args(argv)
+    rows = load_all(args.out_dir)
     for mesh in ("single", "multi"):
         print(f"\n### mesh: {mesh}\n")
         print(fmt_table(rows, mesh))
+    # Single-machine execution-backend roofline, per paper-scale graph.
+    for name, (n, m) in _PAPER_GRAPHS.items():
+        print(
+            f"\n### execution backends: {name} "
+            f"(n={n:,}, m={m:,}, P={args.P}, one update sweep)\n"
+        )
+        print(fmt_execution_table(n, m, args.P, args.padding_ratio))
     # hillclimb candidates
     single = [r for r in rows if r["mesh"] == "single" and not r["arch"].startswith("graph:")]
     if single:

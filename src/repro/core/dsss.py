@@ -154,7 +154,11 @@ class PackedSweep:
     each. This layout cuts that stream into uniform ``(num_tiles,
     tile_edges)`` windows so the executor can run the entire gather-reduce
     phase as a single ``jax.lax.scan`` (or stream tile chunks host→device)
-    — one XLA dispatch instead of one host round-trip per sub-shard.
+    — one XLA dispatch instead of one host round-trip per sub-shard. The
+    same schema is what the fused Pallas backend
+    (:mod:`repro.kernels.packed_sweep`, ``execution="packed_kernel"``)
+    grids over: one ``(tile_edges,)`` leaf slice per grid cell, DMA'd
+    HBM→VMEM by BlockSpec index maps.
 
     **Cut rule (mode="adaptive"):** tiles are cut *only at destination-run
     boundaries* — a run being one sub-shard's maximal span of edges

@@ -307,9 +307,10 @@ class CompiledPlan:
     resident: frozenset
     residency: str = "device"
     host_cached: frozenset = frozenset()
-    # Resolved execution mode: "packed" iff the compiled sweep path will
-    # actually run (an SPU/DPU/MPU schedule — either residency), else
-    # "per_block". Never "auto".
+    # Resolved execution mode: "packed" (scan) or "packed_kernel" (fused
+    # Pallas kernel) iff a compiled sweep path will actually run (an
+    # SPU/DPU/MPU schedule — either residency), else "per_block".
+    # Never "auto".
     execution: str = "per_block"
     # Resolved activity mode: "selective" iff the program is monotone and
     # the plan's activity axis is "auto" — frontier-aware interval/tile/
@@ -810,6 +811,59 @@ def _packed_select_jits(donate: bool):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _packed_kernel_jits(donate: bool):
+    """The fused Pallas sweep executable (``execution="packed_kernel"``).
+
+    Call-signature-identical to ``_packed_jits``'s sweep, so the
+    streaming (``_packed_host_sweep``) and slab (``_sweep_tile_slab``)
+    drivers run either executable unchanged. The kernel resolves its own
+    interpret flag at trace time (compiled on TPU, interpreted
+    elsewhere); the batched apply is shared with the scan path.
+    """
+    from repro.kernels.packed_sweep import packed_sweep_update
+
+    donate_kw = {"donate_argnums": (2,)} if donate else {}
+
+    def _sweep(
+        program, attrs_flat, acc_flat, aux, tiles, row_active,
+        has_weights, aux_batched=False,
+    ):
+        return packed_sweep_update(
+            program, attrs_flat, acc_flat, aux, tiles, row_active,
+            has_weights, aux_batched,
+        )
+
+    return jax.jit(
+        _sweep,
+        static_argnames=("program", "has_weights", "aux_batched"),
+        **donate_kw,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_kernel_select_jits(donate: bool):
+    """The compacted-gather fused-kernel executable (selective path)."""
+    from repro.kernels.packed_sweep import packed_sweep_update_select
+
+    donate_kw = {"donate_argnums": (2,)} if donate else {}
+
+    def _select(
+        program, attrs_flat, acc_flat, aux, tiles, idx, a_valid,
+        row_active, has_weights, aux_batched=False,
+    ):
+        return packed_sweep_update_select(
+            program, attrs_flat, acc_flat, aux, tiles, idx, a_valid,
+            row_active, has_weights, aux_batched,
+        )
+
+    return jax.jit(
+        _select,
+        static_argnames=("program", "has_weights", "aux_batched"),
+        **donate_kw,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Per-run context handed to the iteration bodies.
 # ---------------------------------------------------------------------------
@@ -829,6 +883,7 @@ class _RunContext:
     fetcher: _BlockFetcher = None  # type: ignore[assignment]
     activity: str = "off"  # resolved activity ("selective" | "off")
     aux_batched: bool = False  # aux leaves carry a leading (K,) query axis
+    execution: str = "per_block"  # resolved execution (never "auto")
 
     @property
     def block_keys(self) -> frozenset:
@@ -1217,7 +1272,12 @@ def _sweep_tile_slab(
     bucket = min(next_bucket(int(local.size)), count)
     idx = np.zeros(bucket, np.int32)
     idx[: local.size] = local
-    select = _packed_select_jits(jax.default_backend() != "cpu")
+    select_jits = (
+        _packed_kernel_select_jits
+        if ctx.execution == "packed_kernel"
+        else _packed_select_jits
+    )
+    select = select_jits(jax.default_backend() != "cpu")
     return select(
         prog, attrs_flat, acc, ctx.aux, tiles,
         jnp.asarray(idx), jnp.asarray(np.int32(local.size)), row_active,
@@ -1352,6 +1412,10 @@ def _iteration_packed(ctx: _RunContext, attrs, active, meters: Meters):
     selective = ctx.activity == "selective" and not row_mask.all()
     tile_active = sess._packed_tile_activity(row_mask) if selective else None
     sweep, apply_all = _packed_jits(jax.default_backend() != "cpu")
+    if ctx.execution == "packed_kernel":
+        # Same streaming/selective drivers, fused-kernel sweep executable
+        # (the batched apply is shared — it is already one dispatch).
+        sweep = _packed_kernel_jits(jax.default_backend() != "cpu")
     if ctx.residency in ("host", "disk"):
         acc = _packed_host_sweep(
             ctx, attrs_flat, acc, row_active, meters, sweep, tile_active
@@ -1522,16 +1586,12 @@ class _StagedGraph:
         """
         tiles = self._packed_tiles.get(mode)
         if tiles is None:
+            from repro.kernels.ops import prepare_packed_tiles
+
             packed = self.packed_host(mode)
-            tiles = {
-                "src": jnp.asarray(packed.src),
-                "dst": jnp.asarray(packed.dst),
-                "run_local": jnp.asarray(packed.run_local),
-                "run_dst": jnp.asarray(packed.run_dst),
-                "e_valid": jnp.asarray(packed.e_valid),
-            }
-            if packed.weights is not None:
-                tiles["weights"] = jnp.asarray(packed.weights)
+            tiles = prepare_packed_tiles(
+                packed, has_weights=packed.weights is not None
+            )
             self._packed_tiles[mode] = tiles
         return tiles
 
@@ -1736,7 +1796,22 @@ class GraphSession:
           way (``bytes_h2d``/``peak_device_graph_bytes`` report the
           physical transfers of whichever path ran). Custom and fused
           schedules downgrade to ``"per_block"`` (they own their loop).
-        * ``"auto"`` (default) — ``"packed"`` wherever it applies.
+        * ``"packed_kernel"`` — the fused-kernel path: the same staged
+          tile layout, but the sweep's gather→combine→run-reduce→
+          hub-scatter runs inside one Pallas kernel
+          (:func:`repro.kernels.packed_sweep.packed_sweep_update`) that
+          grids over the tile axis with BlockSpec-pipelined HBM→VMEM
+          tile DMA. Streaming, selective compaction, batching and every
+          meter work exactly as under ``"packed"`` — only the sweep
+          executable differs; results are bit-identical and model
+          meters field-identical by construction (and by the parity
+          suite). Off-TPU backends run the kernel in interpret mode
+          (slow — validation only). Downgrades like ``"packed"`` for
+          custom/fused schedules.
+        * ``"auto"`` (default) — ``"packed_kernel"`` wherever packed
+          applies *and* the jax backend compiles Pallas natively (TPU);
+          ``"packed"`` elsewhere (an interpret-mode kernel would be a
+          de-optimization), ``"per_block"`` where neither applies.
 
       packing: tile layout for the packed path — ``"adaptive"``
         (destination-aligned fixed-size tiles, chosen per graph to bound
@@ -1781,10 +1856,10 @@ class GraphSession:
                 "residency must be 'device', 'host', 'disk' or 'auto', "
                 f"got {residency!r}"
             )
-        if execution not in ("per_block", "packed", "auto"):
+        if execution not in ("per_block", "packed", "packed_kernel", "auto"):
             raise ValueError(
-                "execution must be 'per_block', 'packed' or 'auto', "
-                f"got {execution!r}"
+                "execution must be 'per_block', 'packed', 'packed_kernel' "
+                f"or 'auto', got {execution!r}"
             )
         if packing not in ("adaptive", "subshard", "auto"):
             raise ValueError(
@@ -1934,22 +2009,31 @@ class GraphSession:
         residency: str,
         override: str | None = None,
     ) -> str:
-        """Resolve the execution axis to 'per_block' or 'packed'.
+        """Resolve the execution axis: 'per_block' | 'packed' | 'packed_kernel'.
 
         ``strategy`` must already be resolved (a schedule name, not
         "auto") and ``residency`` must be 'device' or 'host'. The packed
-        path applies to the native block schedules (SPU/DPU/MPU) under
+        paths apply to the native block schedules (SPU/DPU/MPU) under
         *both* residencies — under "host" the tile chunks are streamed
         with double-buffered prefetch instead of the per-block fetcher, so
-        out-of-core runs no longer downgrade. The fused fast path and
-        custom registered schedules run per-block even when "packed" was
-        requested explicitly (a forgiving downgrade, like
+        out-of-core runs no longer downgrade. ``"auto"`` upgrades to the
+        fused Pallas kernel only where it compiles natively (TPU backend,
+        i.e. ``not default_interpret()``); elsewhere the interpret-mode
+        kernel would be orders slower than the XLA scan, so auto keeps
+        ``"packed"`` and ``"packed_kernel"`` must be requested explicitly
+        (the parity suite does exactly that). The fused fast path and
+        custom registered schedules run per-block even when a packed mode
+        was requested explicitly (a forgiving downgrade, like
         residency="auto": results and meters are identical).
         """
         mode = override or self.execution
         applies = strategy in ("spu", "dpu", "mpu")
-        if mode == "auto" or (mode == "packed" and not applies):
-            mode = "packed" if applies else "per_block"
+        if not applies:
+            return "per_block"
+        if mode == "auto":
+            from repro.kernels.dsss_spmv import default_interpret
+
+            mode = "packed" if default_interpret() else "packed_kernel"
         return mode
 
     # -- budget accounting ---------------------------------------------------
@@ -2432,7 +2516,7 @@ class GraphSession:
         streamed = compiled.residency in ("host", "disk")
         pinned = (
             self._ensure_pinned(compiled.resident)
-            if streamed and compiled.execution != "packed"
+            if streamed and compiled.execution == "per_block"
             else {}
             if streamed
             else self._pinned
@@ -2464,8 +2548,9 @@ class GraphSession:
             fetcher=fetcher,
             activity=compiled.activity,
             aux_batched=aux_batched,
+            execution=compiled.execution,
         )
-        if compiled.execution == "packed":
+        if compiled.execution in ("packed", "packed_kernel"):
             iteration = _iteration_packed
         else:
             iteration = self._strategies[compiled.choice.strategy]

@@ -118,10 +118,25 @@ class VertexProgram:
 
 @dataclasses.dataclass(frozen=True)
 class PageRank(VertexProgram):
-    """Synchronous PageRank with dangling-mass redistribution.
+    """Synchronous (personalized) PageRank with dangling-mass redistribution.
 
     Matches ``networkx.pagerank``'s iteration:
-      ``p' = damping · (Aᵀ (p/outdeg) + dangling/n) + (1−damping)/n``.
+      ``p' = damping · (Aᵀ (p/outdeg) + dangling·r) + (1−damping)·r``,
+    where the reset distribution ``r`` is uniform ``1/n`` by default, or a
+    personalization vector via the Initialize kwargs:
+
+    * ``personalize=v`` — a vertex id: ``r`` is the one-hot distribution
+      at ``v`` (the PPR point query; like a BFS ``root``, so a batch of
+      these fuses through :meth:`GraphSession.run_batch` /
+      ``repro.serving`` via the vmap-stacked per-query aux).
+    * ``reset_dist=arr`` — an explicit ``(n,)`` non-negative vector,
+      normalized to sum 1 (teleport-set / topic-sensitive PageRank).
+
+    The default (no kwargs) path builds byte-identical aux to the
+    unpersonalized program, so existing plans batch and cache exactly as
+    before; personalized plans add a per-vertex ``"reset"`` aux leaf and
+    start from ``r`` (they never fuse with default plans — different aux
+    keys fall back to sequential runs, results unchanged).
     """
 
     name: str = "pagerank"
@@ -131,19 +146,56 @@ class PageRank(VertexProgram):
     attr_bytes: int = 8  # paper assumes 8-byte attributes for PageRank
     damping: float = 0.85
 
-    def init_attrs(self, g, **kw):
-        a = jnp.zeros(g.n_pad, self.dtype)
-        return a.at[: g.n].set(jnp.asarray(1.0 / g.n, self.dtype))
+    def _reset(self, g, personalize, reset_dist) -> np.ndarray | None:
+        """The (n_pad,) reset distribution, or None for uniform 1/n."""
+        if personalize is not None and reset_dist is not None:
+            raise ValueError(
+                "pass either personalize (a vertex id) or reset_dist "
+                "(an (n,) distribution), not both"
+            )
+        if personalize is not None:
+            _check_root(g, personalize)
+            r = np.zeros(g.n_pad, np.float32)
+            r[int(personalize)] = 1.0
+            return r
+        if reset_dist is not None:
+            rd = np.asarray(reset_dist, np.float64)
+            if rd.shape != (g.n,):
+                raise ValueError(
+                    f"reset_dist must have shape ({g.n},), got {rd.shape}"
+                )
+            total = rd.sum()
+            if rd.min() < 0 or not total > 0:
+                raise ValueError(
+                    "reset_dist must be non-negative with positive sum"
+                )
+            r = np.zeros(g.n_pad, np.float32)
+            r[: g.n] = (rd / total).astype(np.float32)
+            return r
+        return None
 
-    def make_aux(self, g, **kw):
+    def init_attrs(self, g, personalize=None, reset_dist=None, **kw):
+        r = self._reset(g, personalize, reset_dist)
+        if r is None:
+            a = jnp.zeros(g.n_pad, self.dtype)
+            return a.at[: g.n].set(jnp.asarray(1.0 / g.n, self.dtype))
+        # Personalized runs start at the reset distribution — the PPR
+        # random walk's own stationary starting point.
+        return jnp.asarray(r, self.dtype)
+
+    def make_aux(self, g, personalize=None, reset_dist=None, **kw):
         deg = np.asarray(g.out_degree, np.float32)
         inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0).astype(np.float32)
         dangling = ((deg == 0) & (np.arange(g.n_pad) < g.n)).astype(np.float32)
-        return {
+        aux = {
             "inv_out_degree": jnp.asarray(inv),
             "dangling": jnp.asarray(dangling),
             "inv_n": jnp.asarray(1.0 / g.n, jnp.float32),
         }
+        r = self._reset(g, personalize, reset_dist)
+        if r is not None:
+            aux["reset"] = jnp.asarray(r)
+        return aux
 
     def pre_iteration(self, attrs, aux):
         mass = jnp.sum(attrs * aux["dangling"].reshape(attrs.shape))
@@ -156,9 +208,13 @@ class PageRank(VertexProgram):
         return contrib
 
     def apply(self, old, reduced, aux, globals_):
-        base = (1.0 - self.damping) * aux["inv_n"]
+        # Teleport target: the personalization vector when present (also
+        # where dangling mass re-enters, networkx's default dangling
+        # behaviour), else the uniform 1/n scalar — same expression.
+        reset = aux["reset"] if "reset" in aux else aux["inv_n"]
+        base = (1.0 - self.damping) * reset
         return base + self.damping * (
-            reduced + globals_["dangling_mass"] * aux["inv_n"]
+            reduced + globals_["dangling_mass"] * reset
         )
 
     def output(self, attrs, g):

@@ -1,11 +1,42 @@
-"""Pallas TPU kernels (TPU target; validated in interpret mode on CPU).
+"""Pallas kernels — the compiled substrate of the reproduction.
 
-- dsss_spmv.py: the paper's DSSS sub-shard update (ToHub) as an MXU
-  one-hot segment reduction — the graph engine's hot loop.
+Since the `packed_kernel` execution backend landed, these are no longer a
+validation sidecar: on TPU the engine's update sweep *is* a Pallas
+kernel (off-TPU everything still runs in interpret mode for parity
+testing, with the XLA scan as the fast CPU path).
+
+- packed_sweep.py: the fused gather→combine→windowed-run-reduce→
+  hub-scatter sweep over `PackedSweep` tiles — one `pallas_call` per
+  update sweep, gridded over (query, tile) with BlockSpec-pipelined
+  HBM→VMEM tile DMA; bit-identical to the scan path by exact fold-order
+  reproduction. Selected via `execution="packed_kernel"` (or `"auto"`
+  on TPU).
+- dsss_spmv.py: the single-sub-shard ToHub update as an MXU one-hot
+  windowed segment reduction (building block / standalone kernel).
 - flash_attention.py: tiled online-softmax attention for the LM wing
   (causal / sliding-window / softcap / GQA-via-index_map).
-- ops.py: jit'd wrappers; ref.py: pure-jnp oracles.
-"""
-from repro.kernels.ops import attention, prepare_subshard_operands, subshard_update
+- ops.py: jit'd wrappers and host-side operand staging; ref.py:
+  pure-jnp oracles every kernel is swept against.
 
-__all__ = ["attention", "prepare_subshard_operands", "subshard_update"]
+Every kernel resolves `interpret=None` through
+`dsss_spmv.default_interpret()`: compiled on TPU, interpreted elsewhere.
+"""
+from repro.kernels.ops import (
+    attention,
+    prepare_packed_tiles,
+    prepare_subshard_operands,
+    subshard_update,
+)
+from repro.kernels.packed_sweep import (
+    packed_sweep_update,
+    packed_sweep_update_select,
+)
+
+__all__ = [
+    "attention",
+    "prepare_packed_tiles",
+    "prepare_subshard_operands",
+    "subshard_update",
+    "packed_sweep_update",
+    "packed_sweep_update_select",
+]

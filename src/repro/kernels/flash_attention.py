@@ -117,14 +117,23 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Tiled online-softmax attention. Returns (B, Hq, Sq, D).
 
     GQA: ``Hq`` must be a multiple of ``Hkv``; KV blocks are indexed at
     ``head // group`` inside the BlockSpec index_map (no KV repetition in
     HBM or VMEM).
+
+    ``interpret=None`` auto-selects like every other kernel in this
+    package: compiled on TPU, interpret-mode elsewhere (see
+    :func:`repro.kernels.dsss_spmv.default_interpret`). ``interpret`` is
+    a static jit arg, so the resolution happens at trace time.
     """
+    if interpret is None:
+        from repro.kernels.dsss_spmv import default_interpret
+
+        interpret = default_interpret()
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0, "q heads must be a multiple of kv heads"

@@ -26,6 +26,7 @@ __all__ = [
     "prepare_from_subshard",
     "prepare_from_host_block",
     "prepare_from_packed_tile",
+    "prepare_packed_tiles",
     "default_interpret",
     "E_BLK",
 ]
@@ -166,6 +167,30 @@ def prepare_from_packed_tile(packed, t: int, dtype, *, gather_op: str, reduce: s
         packed.src[t, :e], hub_inv_global, w, dtype,
         gather_op=gather_op, reduce=reduce,
     )
+
+
+def prepare_packed_tiles(packed, *, has_weights: bool) -> dict:
+    """Stage the full tile-packed sweep layout as device operand leaves.
+
+    The one upload both compiled backends share: the scan path
+    (``core/session.py::_packed_sweep_impl``) carries these leaves through
+    ``lax.scan``, and the fused kernel
+    (:func:`repro.kernels.packed_sweep.packed_sweep_update`) grids over
+    their leading (NT,) tile axis with BlockSpec-pipelined HBM→VMEM DMA.
+    Per-tile metadata (``base_slot``/``u``/``row_offset``/intervals) stays
+    host-side on the :class:`~repro.core.dsss.PackedSweep` for meter
+    accounting and stream planning.
+    """
+    tiles = {
+        "src": jnp.asarray(packed.src),
+        "dst": jnp.asarray(packed.dst),
+        "run_local": jnp.asarray(packed.run_local),
+        "run_dst": jnp.asarray(packed.run_dst),
+        "e_valid": jnp.asarray(packed.e_valid),
+    }
+    if has_weights:
+        tiles["weights"] = jnp.asarray(packed.weights)
+    return tiles
 
 
 @functools.partial(

@@ -1,0 +1,174 @@
+"""Property sweep: fused packed-sweep kernel vs the pure-jnp ref oracle.
+
+Random destination-aligned tile layouts (arbitrary tile counts, window
+widths, padding amounts, run structures), random attribute/aux values,
+every reduce family and dtype in use, batched and activity-masked —
+asserting **bitwise** equality of
+:func:`repro.kernels.packed_sweep.packed_sweep_update` (interpret mode)
+against :func:`repro.kernels.ref.packed_sweep_update_ref`. Bitwise, not
+allclose: the kernel's claim is that it reproduces the segment-op fold
+orders exactly, which is what lets the session swap executables without
+perturbing a single result bit.
+"""
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BFS, PageRank, SSSP
+from repro.core.identities import INF_DEPTH, reduce_identity
+from repro.core.vertex_programs import MaxLabelForward, ReachBackward
+from repro.kernels.packed_sweep import (
+    packed_sweep_update,
+    packed_sweep_update_select,
+)
+from repro.kernels.ref import packed_sweep_update_ref
+
+PROGRAMS = ["pagerank", "bfs", "sssp", "max_label", "reach"]
+
+
+def _random_tiles(rng, nt, t, n_pad, weighted):
+    """A random but semantically coherent tile layout.
+
+    Each tile holds a random number of destination runs; ``run_dst``
+    carries the ``n_pad`` sentinel in unused slots and ``dst`` is derived
+    from the run map, so dst-aux gathers see the same vertex the scatter
+    folds into — the invariant real ``PackedSweep`` layouts guarantee.
+    """
+    src = rng.integers(0, n_pad, (nt, t)).astype(np.int32)
+    run_local = np.zeros((nt, t), np.int32)
+    run_dst = np.full((nt, t), n_pad, np.int32)
+    for i in range(nt):
+        u = int(rng.integers(1, t + 1))
+        run_dst[i, :u] = rng.integers(0, n_pad, u)
+        run_local[i] = np.sort(rng.integers(0, u, t))
+    dst = np.take_along_axis(run_dst, run_local, axis=1)
+    tiles = {
+        "src": jnp.asarray(src),
+        "dst": jnp.asarray(dst),
+        "run_local": jnp.asarray(run_local),
+        "run_dst": jnp.asarray(run_dst),
+        "e_valid": jnp.asarray(rng.integers(0, t + 1, nt).astype(np.int32)),
+    }
+    if weighted:
+        tiles["weights"] = jnp.asarray(
+            (rng.random((nt, t)) + 0.1).astype(np.float32)
+        )
+    return tiles
+
+
+def _program_case(name, rng, n_pad, k, aux_batched):
+    """(program, attrs, aux, weighted) for one program family."""
+
+    def vert(f):
+        shape = (k,) + (n_pad,) if aux_batched else (n_pad,)
+        return jnp.asarray(f(shape))
+
+    if name == "pagerank":
+        prog = PageRank()
+        attrs = (rng.random((k, n_pad)) + 0.05).astype(np.float32)
+        aux = {
+            "inv_out_degree": vert(
+                lambda s: rng.random(s).astype(np.float32)
+            ),
+            "dangling": vert(
+                lambda s: (rng.random(s) < 0.2).astype(np.float32)
+            ),
+            "inv_n": (
+                jnp.asarray(rng.random(k).astype(np.float32))
+                if aux_batched
+                else jnp.asarray(np.float32(rng.random()))
+            ),
+        }
+        return prog, attrs, aux, True
+    if name == "bfs":
+        attrs = rng.integers(0, 20, (k, n_pad)).astype(np.int32)
+        attrs[rng.random((k, n_pad)) < 0.3] = INF_DEPTH
+        return BFS(), attrs, {}, False
+    if name == "sssp":
+        attrs = (rng.random((k, n_pad)) * 10).astype(np.float32)
+        attrs[rng.random((k, n_pad)) < 0.3] = np.inf
+        return SSSP(), attrs, {}, True
+    if name == "max_label":
+        attrs = rng.integers(-5, 50, (k, n_pad)).astype(np.int32)
+        aux = {"mask": vert(lambda s: rng.integers(0, 2, s).astype(np.int32))}
+        return MaxLabelForward(), attrs, aux, False
+    # reach: exercises needs_dst_aux (gather reads destination-side aux)
+    attrs = rng.integers(0, 2, (k, n_pad)).astype(np.int32)
+    aux = {
+        "mask": vert(lambda s: rng.integers(0, 2, s).astype(np.int32)),
+        "color": vert(lambda s: rng.integers(0, 4, s).astype(np.int32)),
+    }
+    return ReachBackward(), attrs, aux, False
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nt=st.integers(1, 5),
+    t=st.integers(1, 48),
+    p=st.integers(1, 6),
+    isz=st.integers(1, 24),
+    k=st.integers(1, 3),
+    name=st.sampled_from(PROGRAMS),
+    aux_batched=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_bitwise_matches_ref(nt, t, p, isz, k, name, aux_batched, seed):
+    rng = np.random.default_rng(seed)
+    n_pad = p * isz
+    prog, attrs, aux, weighted = _program_case(name, rng, n_pad, k, aux_batched)
+    if aux_batched and not aux:
+        aux_batched = False  # nothing to batch
+    tiles = _random_tiles(rng, nt, t, n_pad, weighted)
+    row_active = jnp.asarray(rng.random(p) < 0.8)
+    attrs = jnp.asarray(attrs)
+    ident = reduce_identity(prog.reduce, prog.dtype)
+    acc = jnp.full((k, n_pad), ident, prog.dtype)
+    got = packed_sweep_update(
+        prog, attrs, acc, aux, tiles, row_active,
+        has_weights=weighted, aux_batched=aux_batched, interpret=True,
+    )
+    want = packed_sweep_update_ref(
+        prog, attrs, acc, aux, tiles, row_active,
+        has_weights=weighted, aux_batched=aux_batched,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nt=st.integers(2, 6),
+    t=st.integers(1, 32),
+    seed=st.integers(0, 10_000),
+)
+def test_select_frontend_matches_full_sweep_on_active_tiles(nt, t, seed):
+    """The compaction frontend == running only the active tiles in order
+    (ascending idx, zeroed padding) — same contract as the scan's
+    ``_packed_sweep_select_impl``."""
+    rng = np.random.default_rng(seed)
+    p, isz = 4, 8
+    n_pad = p * isz
+    prog, attrs, aux, weighted = _program_case("pagerank", rng, n_pad, 1, False)
+    tiles = _random_tiles(rng, nt, t, n_pad, weighted)
+    row_active = jnp.ones(p, bool)
+    attrs = jnp.asarray(attrs)
+    acc = jnp.zeros((1, n_pad), prog.dtype)
+    active = rng.random(nt) < 0.6
+    local = np.flatnonzero(active)
+    if local.size == 0:
+        return
+    bucket = max(1, 1 << (int(local.size) - 1).bit_length())
+    idx = np.zeros(bucket, np.int32)
+    idx[: local.size] = local
+    got = packed_sweep_update_select(
+        prog, attrs, acc, aux, tiles,
+        jnp.asarray(idx), jnp.asarray(np.int32(local.size)), row_active,
+        has_weights=weighted, interpret=True,
+    )
+    compact = {key: v[local] for key, v in tiles.items()}
+    want = packed_sweep_update_ref(
+        prog, attrs, acc, aux, compact, row_active, has_weights=weighted
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

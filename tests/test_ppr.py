@@ -1,0 +1,175 @@
+"""Personalized PageRank as a first-class point query.
+
+``PageRank`` now accepts ``personalize`` (a seed vertex — the PPR point
+query) and ``reset_dist`` (an explicit teleport distribution) through the
+standard Initialize-kwargs channel, so PPR queries flow through
+``ExecutionPlan`` validation, ``run_batch`` fusion (differing reset
+vectors ride the vmap-stacked per-query aux path from the selective PR)
+and ``repro.serving`` micro-batching exactly like BFS roots do.
+
+Contract pinned here:
+  * the default (no-kwargs) program is byte-identical to the old
+    unpersonalized PageRank — same aux leaves, same results, so existing
+    plans keep batching/caching;
+  * PPR mass localizes around the seed and teleports only to it;
+  * a batch of differing seeds FUSES (one streamed pass) and each member
+    equals its solo run bitwise;
+  * served PPR == solo PPR through ``GraphServer`` micro-batching.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ExecutionPlan, GraphSession, PageRank, build_dsss
+from repro.graph.generators import erdos_renyi
+from repro.graph.preprocess import degree_and_densify
+from repro.serving import GraphServer, QueryRequest, SessionPool
+
+
+def _graph(n=130, m=800, seed=7, P=4):
+    src, dst = erdos_renyi(n, m, seed=seed)
+    el = degree_and_densify(src, dst, drop_self_loops=True)
+    return build_dsss(el, P)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return _graph()
+
+
+def test_accepted_kwargs_surfaced(graph):
+    assert {"personalize", "reset_dist"} <= PageRank().accepted_kwargs()
+    # plan-construction validation sees them (unknown names still raise)
+    ExecutionPlan(PageRank(), program_kwargs={"personalize": 3})
+    with pytest.raises(TypeError):
+        ExecutionPlan(PageRank(), program_kwargs={"personalise": 3})
+
+
+def test_default_path_unchanged(graph):
+    """No kwargs → aux dict and results identical to the historical
+    uniform-reset program (bit-compat: default plans must keep fusing
+    with each other and reusing cached executables)."""
+    p = PageRank()
+    aux = p.make_aux(graph)
+    assert set(aux) == {"inv_out_degree", "dangling", "inv_n"}
+    sess = GraphSession(graph)
+    res = sess.run(ExecutionPlan(p, max_iters=30))
+    np.testing.assert_allclose(res.output.sum(), 1.0, atol=1e-4)
+
+
+def test_ppr_localizes_at_seed(graph):
+    sess = GraphSession(graph)
+    seed = 11
+    res = sess.run(
+        ExecutionPlan(PageRank(), program_kwargs={"personalize": seed})
+    )
+    out = res.output
+    np.testing.assert_allclose(out.sum(), 1.0, atol=1e-4)
+    # the seed holds at least the teleport mass (1-damping), far above
+    # the uniform share — the signature of a point query
+    assert out[seed] >= (1 - PageRank().damping) * 0.99
+    assert out[seed] > 10.0 / graph.n
+    # a different seed gives a genuinely different ranking
+    res2 = sess.run(
+        ExecutionPlan(PageRank(), program_kwargs={"personalize": 42})
+    )
+    assert not np.array_equal(res.attrs, res2.attrs)
+
+
+def test_reset_dist_teleport_set(graph):
+    sess = GraphSession(graph)
+    rd = np.zeros(graph.n)
+    rd[[2, 3, 5]] = [2.0, 1.0, 1.0]  # normalized internally
+    res = sess.run(ExecutionPlan(PageRank(), program_kwargs={"reset_dist": rd}))
+    out = res.output
+    np.testing.assert_allclose(out.sum(), 1.0, atol=1e-4)
+    assert out[[2, 3, 5]].sum() >= (1 - PageRank().damping) * 0.99
+
+
+def test_reset_validation(graph):
+    sess = GraphSession(graph)
+    with pytest.raises(ValueError, match="not both"):
+        sess.run(
+            ExecutionPlan(
+                PageRank(),
+                program_kwargs={
+                    "personalize": 1, "reset_dist": np.ones(graph.n)
+                },
+            )
+        )
+    with pytest.raises(ValueError, match="out of range"):
+        sess.run(
+            ExecutionPlan(PageRank(), program_kwargs={"personalize": graph.n})
+        )
+    with pytest.raises(ValueError, match="shape"):
+        sess.run(
+            ExecutionPlan(
+                PageRank(), program_kwargs={"reset_dist": np.ones(3)}
+            )
+        )
+    with pytest.raises(ValueError, match="non-negative"):
+        sess.run(
+            ExecutionPlan(
+                PageRank(), program_kwargs={"reset_dist": -np.ones(graph.n)}
+            )
+        )
+
+
+@pytest.mark.parametrize("execution", ["packed", "per_block"])
+def test_batch_of_differing_seeds_fuses(graph, execution):
+    """The PR-7 vmap-stacked-aux path: differing personalization vectors
+    stack into a leading (K,) aux axis and run as ONE streamed pass,
+    each member bitwise equal to its solo run."""
+    sess = GraphSession(graph)
+    seeds = [0, 11, 42, 97]
+    plans = [
+        ExecutionPlan(
+            PageRank(), strategy="dpu", execution=execution, max_iters=20,
+            tol=0.0, program_kwargs={"personalize": s},
+        )
+        for s in seeds
+    ]
+    batch = sess.run_batch(plans)
+    assert batch.fused, "differing reset vectors must stack, not serialize"
+    for plan, res in zip(plans, batch.results):
+        solo = sess.run(plan)
+        np.testing.assert_array_equal(solo.attrs, res.attrs)
+
+
+def test_mixed_default_and_ppr_falls_back(graph):
+    """Default and personalized plans have different aux keys — they must
+    run sequentially (correct results), never silently share a reset."""
+    sess = GraphSession(graph)
+    plans = [
+        ExecutionPlan(PageRank(), max_iters=10, tol=0.0),
+        ExecutionPlan(
+            PageRank(), max_iters=10, tol=0.0,
+            program_kwargs={"personalize": 5},
+        ),
+    ]
+    batch = sess.run_batch(plans)
+    assert not batch.fused
+    for plan, res in zip(plans, batch.results):
+        np.testing.assert_array_equal(sess.run(plan).attrs, res.attrs)
+
+
+def test_ppr_through_serving(graph):
+    """PPR point queries batch through GraphServer like BFS roots."""
+    pool = SessionPool()
+    pool.register("g", graph)
+    server = GraphServer(pool, max_batch=8, max_wait_ms=1.0)
+    seeds = [1, 7, 23, 61]
+    plans = [
+        ExecutionPlan(
+            PageRank(), strategy="dpu", max_iters=20, tol=0.0,
+            program_kwargs={"personalize": s},
+        )
+        for s in seeds
+    ]
+    served = server.serve([QueryRequest("g", p) for p in plans])
+    session = pool.session("g")
+    for plan, q in zip(plans, served):
+        solo = session.run(plan)
+        np.testing.assert_array_equal(solo.attrs, q.result.attrs)
+    st = server.stats()
+    assert st.completed == len(plans)
+    assert st.fused_batches >= 1  # the point queries really fused

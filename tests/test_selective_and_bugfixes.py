@@ -111,7 +111,14 @@ class TestBatchedAux:
 # ---------------------------------------------------------------------------
 class TestKwargValidation:
     def test_kwargless_program_rejects_any_kwarg(self):
+        # WCC is the remaining kwargless program (PageRank grew
+        # personalize/reset_dist); unknown names on a program with
+        # accepted kwargs get the name-listing error instead.
+        from repro.core.vertex_programs import WCC
+
         with pytest.raises(TypeError, match="accepts no program_kwargs"):
+            ExecutionPlan(WCC(), program_kwargs={"root": 3})
+        with pytest.raises(TypeError, match="accepted kwargs"):
             ExecutionPlan(PageRank(), program_kwargs={"root": 3})
 
     def test_typo_rejected_with_accepted_names(self):
@@ -127,7 +134,7 @@ class TestKwargValidation:
         )
 
     def test_accepted_kwargs_harvest(self):
-        assert PageRank().accepted_kwargs() == frozenset()
+        assert PageRank().accepted_kwargs() == {"personalize", "reset_dist"}
         assert BFS().accepted_kwargs() == {"root"}
         assert MaxLabelForward().accepted_kwargs() == {"labels", "mask"}
 
