@@ -23,6 +23,14 @@ Run: ``PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
 ``benchmarks/run.py``). ``--assert-speedup`` fails the run when the
 largest-K batched throughput is below X× sequential — CI's bench-smoke
 lane runs with 1.2, the committed full run clears 2x.
+
+``--inject-faults`` additionally serves a request wave against a session
+with injected transient H2D faults (a deterministic burst that overflows
+the fetch layer's own bounded retries, plus background rate noise) and
+reports how the stack absorbed them: fetch-level heals, server-level
+retries, failures. ``--assert-recovery`` turns that into a gate — every
+request must complete bit-identical to a fault-free solo run with zero
+failures, and the serving retry path must actually have fired.
 """
 import argparse
 import json
@@ -36,7 +44,14 @@ _ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_ROOT))  # so `benchmarks._util` resolves as a script
 sys.path.insert(0, str(_ROOT / "src"))
 
-from repro.core import BFS, ExecutionPlan, PageRank, build_dsss  # noqa: E402
+from repro.core import (  # noqa: E402
+    BFS,
+    ExecutionPlan,
+    GraphSession,
+    PageRank,
+    build_dsss,
+)
+from repro.reliability import FaultPlan  # noqa: E402
 from repro.serving import GraphServer, QueryRequest, SessionPool  # noqa: E402
 
 from benchmarks._util import small_rmat  # noqa: E402
@@ -129,6 +144,58 @@ def run(smoke: bool = False, payload: dict | None = None):
     return lines
 
 
+def run_fault_injection(smoke: bool = False, payload: dict | None = None):
+    """Serve a request wave through an injected-fault session.
+
+    The fault plan layers a deterministic transient burst (larger than the
+    fetch layer's bounded retry budget, so it must escape to the server's
+    retry-with-backoff loop) on top of low-rate background transient noise
+    (absorbed by the fetch layer's own retries). Recovery is judged
+    against fault-free solo runs: same bits, zero failures.
+    """
+    el = small_rmat(9 if smoke else 12, 16)
+    g = build_dsss(el, 8)
+    budget = int(g.total_edge_bytes(8) * 0.25)  # streamed: faults can fire
+    kw = dict(memory_budget=budget, residency="host", execution="per_block")
+    k = 8
+    plans = _plans(BFS(), k, g.n)
+    solo = [GraphSession(g, **kw).run(p) for p in plans]
+
+    pool = SessionPool(breaker_threshold=16)
+    pool.register("g", g, **kw)
+    pool.session("g").inject_faults(
+        FaultPlan.h2d_transient(rate=1.0, times=5, seed=7).merge(
+            FaultPlan.h2d_transient(rate=0.02, times=None, seed=11)
+        )
+    )
+    server = GraphServer(pool, max_batch=4, max_wait_ms=2.0)
+    served = server.serve(
+        [QueryRequest("g", p, max_retries=4) for p in plans]
+    )
+    st = server.stats()
+    inj = pool.session("g").fault_injector
+    for s, q in zip(solo, served):
+        np.testing.assert_array_equal(s.attrs, q.result.attrs)
+    row = {
+        "requests": k,
+        "completed": st.completed,
+        "failed": st.failed,
+        "timeouts": st.timeouts,
+        "server_retries": st.retries,
+        "faults_fired": inj.fired(),
+        "max_total_s": st.max_total_s,
+    }
+    if payload is not None:
+        payload["fault_injection"] = row
+    line = (
+        f"faults,fired={row['faults_fired']},"
+        f"server_retries={row['server_retries']},"
+        f"completed={row['completed']}/{k},failed={row['failed']},"
+        f"p_max={row['max_total_s']*1e3:.1f}ms"
+    )
+    return [line], row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -136,6 +203,13 @@ def main():
     ap.add_argument("--out", default=None, help="write results as JSON")
     ap.add_argument("--assert-speedup", type=float, default=None,
                     help="fail unless batched >= X times sequential at max K")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="also serve a wave through injected transient "
+                    "H2D faults and report recovery counters")
+    ap.add_argument("--assert-recovery", action="store_true",
+                    help="fail unless the faulted wave completes fully, "
+                    "bit-identical, with zero failures (implies "
+                    "--inject-faults)")
     args = ap.parse_args()
     payload: dict = {}
     lines = run(smoke=args.smoke, payload=payload)
@@ -149,6 +223,25 @@ def main():
             "stopped amortizing the streamed topology"
         )
         print(f"speedup gate passed: {best:.2f}x >= {args.assert_speedup}x")
+    if args.inject_faults or args.assert_recovery:
+        flines, frow = run_fault_injection(smoke=args.smoke, payload=payload)
+        print("\n".join(flines))
+        if args.assert_recovery:
+            assert frow["failed"] == 0 and frow["timeouts"] == 0, (
+                f"faulted wave shed/failed requests: {frow}"
+            )
+            assert frow["completed"] == frow["requests"], (
+                f"faulted wave incomplete: {frow}"
+            )
+            assert frow["server_retries"] >= 1, (
+                "the deterministic fault burst never escaped to the "
+                f"serving retry loop — injection is miswired: {frow}"
+            )
+            print(
+                "recovery gate passed: "
+                f"{frow['faults_fired']} faults absorbed, "
+                f"{frow['server_retries']} server retries, 0 failures"
+            )
     if args.out:
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

@@ -9,8 +9,12 @@ Design points for the 1000-node story:
   * saves run on a background thread (async checkpointing: training does
     not stall on disk);
   * ``keep`` most-recent checkpoints are retained; partial writes are
-    atomic (tmp file + rename), so a crash mid-save never corrupts the
-    restore chain.
+    atomic (tmp dir + fsync + rename), so a crash mid-save never corrupts
+    the restore chain: payload and manifest are fsynced before the
+    publish rename, a superseded step is renamed aside (never deleted in
+    place) before its replacement lands, and ``all_steps`` only counts
+    *complete* step directories — orphaned tmp/trash/partial directories
+    from a crash are swept by the next save's GC.
 """
 from __future__ import annotations
 
@@ -57,11 +61,14 @@ class CheckpointManager:
     def _write(self, step: int, host_flat, treedef) -> None:
         tmp = os.path.join(self.directory, f".tmp_step_{step}")
         final = os.path.join(self.directory, f"step_{step:010d}")
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(
-            os.path.join(tmp, "arrays.npz"),
-            **{f"a{i}": a for i, a in enumerate(host_flat)},
-        )
+        trash = os.path.join(self.directory, f".trash_step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)  # stale leftover from a crashed save
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **{f"a{i}": a for i, a in enumerate(host_flat)})
+            f.flush()
+            os.fsync(f.fileno())
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(
                 {
@@ -71,9 +78,20 @@ class CheckpointManager:
                 },
                 f,
             )
+            f.flush()
+            os.fsync(f.fileno())
+        # Publish: move a superseded step ASIDE (rename is atomic; rmtree
+        # is not) so no crash point leaves us without a complete copy of
+        # this step, then swing the tmp dir into place and fsync the
+        # parent so the renames are durable.
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, trash)
         os.rename(tmp, final)  # atomic publish
+        self._fsync_dir(self.directory)
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
         self._gc()
 
     def wait(self) -> None:
@@ -81,16 +99,42 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
+    @staticmethod
+    def _fsync_dir(path: str) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass  # some filesystems refuse directory fsync
+        finally:
+            os.close(fd)
+
+    def _complete(self, name: str) -> bool:
+        d = os.path.join(self.directory, name)
+        return os.path.exists(os.path.join(d, "arrays.npz")) and os.path.exists(
+            os.path.join(d, "manifest.json")
+        )
+
     def _gc(self) -> None:
+        # Sweep crash debris first: orphaned tmp/trash dirs and published
+        # step dirs missing their payload (a rmtree interrupted mid-prune).
+        for name in os.listdir(self.directory):
+            path = os.path.join(self.directory, name)
+            if name.startswith((".tmp_step_", ".trash_step_")):
+                shutil.rmtree(path, ignore_errors=True)
+            elif name.startswith("step_") and not self._complete(name):
+                shutil.rmtree(path, ignore_errors=True)
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"))
 
     # -- restore ----------------------------------------------------------------
     def all_steps(self) -> list[int]:
+        """Steps with a *complete* (payload + manifest) directory — a
+        crash-truncated directory is never offered for restore."""
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_"):
+            if name.startswith("step_") and self._complete(name):
                 out.append(int(name.split("_")[1]))
         return sorted(out)
 

@@ -160,14 +160,25 @@ class NXGraphEngine:
         self,
         max_iters: int = 200,
         tol: float = 1e-10,
+        checkpoint=None,
+        resume_from=None,
+        cancel=None,
         **program_kwargs,
     ) -> Result:
+        """Forward to ``session.run``.
+
+        ``checkpoint`` (a :class:`repro.reliability.CheckpointSpec`),
+        ``resume_from`` and ``cancel`` pass straight through to the
+        Session/Plan reliability machinery — see
+        :meth:`GraphSession.run`.
+        """
         plan = ExecutionPlan(
             self.program,
             strategy=self._strategy,
             max_iters=max_iters,
             tol=tol,
             execution=self._execution,
+            checkpoint=checkpoint,
             program_kwargs=program_kwargs,
         )
-        return self.session.run(plan)
+        return self.session.run(plan, resume_from=resume_from, cancel=cancel)

@@ -23,8 +23,9 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.vertex_programs import VertexProgram
+from repro.reliability.checkpoint import CheckpointSpec
 
-__all__ = ["ExecutionPlan", "FrozenArray"]
+__all__ = ["CheckpointSpec", "ExecutionPlan", "FrozenArray"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +109,14 @@ class ExecutionPlan:
         bit-identical either way: skipped work contributes exact
         ⊕-identities by the monotone contract. Non-monotone programs
         (PageRank) always run full sweeps regardless of this axis.
+      checkpoint: sweep-level checkpoint/resume
+        (:class:`repro.reliability.CheckpointSpec`) — ``None`` (default)
+        disables snapshots; otherwise the engine atomically snapshots
+        vertex state + activity bitmaps + cumulative meters to
+        ``checkpoint.directory`` every ``checkpoint.every`` sweeps
+        (keep-N pruned), and ``session.run(plan, resume_from=...)``
+        restores one and continues, bit-identical to an uninterrupted
+        run.
       program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are
         frozen by content; pass a mapping, it is normalized to a sorted
         tuple in ``__post_init__``. Names are validated against
@@ -123,9 +132,17 @@ class ExecutionPlan:
     residency: str | None = None
     execution: str | None = None
     activity: str = "auto"
+    checkpoint: CheckpointSpec | None = None
     program_kwargs: Any = ()
 
     def __post_init__(self):
+        if self.checkpoint is not None and not isinstance(
+            self.checkpoint, CheckpointSpec
+        ):
+            raise TypeError(
+                "checkpoint must be a repro.reliability.CheckpointSpec or "
+                f"None, got {type(self.checkpoint).__name__}"
+            )
         if self.residency not in (None, "device", "host", "disk", "auto"):
             raise ValueError(
                 "residency must be None, 'device', 'host', 'disk' or 'auto', "
@@ -195,6 +212,7 @@ class ExecutionPlan:
             self.residency,
             self.execution,
             self.activity,
+            self.checkpoint,
         )
 
     def compatible_with(self, other: "ExecutionPlan") -> bool:

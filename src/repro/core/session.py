@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 import weakref
 from collections import OrderedDict
@@ -112,6 +113,13 @@ from repro.core.iomodel import (
 )
 from repro.core.plan import ExecutionPlan
 from repro.core.vertex_programs import VertexProgram, reduce_identity
+from repro.reliability.checkpoint import (
+    SnapshotError,
+    latest_snapshot,
+    load_snapshot,
+    save_snapshot,
+)
+from repro.reliability.faults import FaultPlan, with_transient_retries
 
 __all__ = [
     "GraphSession",
@@ -1355,7 +1363,13 @@ def _packed_host_sweep(
         else:
             host = _packed_host_chunk(packed, lo, hi, hw)
         model = float(packed.e_valid[lo:hi].sum()) * Be
-        return host, jax.device_put(host), model, cached
+        # The chunk transfer is the packed path's "h2d" injection
+        # boundary; transient faults retry in place (see
+        # _BlockFetcher._upload for the discipline).
+        dev = with_transient_retries(
+            sess._injector, f"chunk:{lo}", lambda: jax.device_put(host)
+        )
+        return host, dev, model, cached
 
     cur = fetch(0)
     for idx in range(len(starts)):
@@ -1649,6 +1663,7 @@ class _BlockFetcher:
         pinned: dict[tuple[int, int], dict],
     ):
         self._session = session
+        self._inj = session._injector
         self._resident = compiled.resident
         self._host_mode = compiled.residency in ("host", "disk")
         self._disk_mode = compiled.residency == "disk"
@@ -1701,12 +1716,26 @@ class _BlockFetcher:
             return host
         return self._session._staged.host_blocks[key]
 
+    def _upload(self, key: tuple[int, int], host: dict) -> dict:
+        """One host→device block transfer — the "h2d" injection boundary.
+
+        Injected transient faults are retried in place (bounded, with
+        backoff) so rate-based fault plans heal at the I/O layer; only a
+        fault burst deeper than the retry budget escapes to the caller
+        (where serving-level retry takes over). The ``bytes_h2d`` charge
+        lands after success, so meters are identical however many retries
+        it took.
+        """
+        blk = with_transient_retries(
+            self._inj, f"block:{key[0]},{key[1]}", lambda: _device_block(host)
+        )
+        self._meters.bytes_h2d += _host_block_nbytes(host)
+        return blk
+
     def _prefetch(self, key: tuple[int, int]) -> None:
         if key in self._pinned or key in self._ring:
             return
-        host = self._host_source(key)
-        self._ring[key] = _device_block(host)
-        self._meters.bytes_h2d += _host_block_nbytes(host)
+        self._ring[key] = self._upload(key, self._host_source(key))
 
     def _next(self) -> dict:
         key = self._order[self._pos]
@@ -1722,9 +1751,7 @@ class _BlockFetcher:
             return blk
         blk = self._ring.pop(key, None)
         if blk is None:  # cold start / out-of-order access
-            host = self._host_source(key)
-            blk = _device_block(host)
-            self._meters.bytes_h2d += _host_block_nbytes(host)
+            blk = self._upload(key, self._host_source(key))
         if self._pos < len(self._order):
             self._prefetch(self._order[self._pos])
         self._meters.bytes_read_edges += self._model_bytes[key]
@@ -1850,6 +1877,7 @@ class GraphSession:
         Bv: int = 4,
         staged: _StagedGraph | None = None,
         host_memory_budget: int | None = None,
+        fault_plan: FaultPlan | None = None,
     ):
         if residency not in ("device", "host", "disk", "auto"):
             raise ValueError(
@@ -1904,6 +1932,12 @@ class GraphSession:
                 "in-memory sessions are bounded by memory_budget alone"
             )
         self.host_memory_budget = host_memory_budget
+        # One live injector shared by every layer of this session (engine
+        # loop, block fetcher, packed stream, backing store) so per-spec
+        # fire budgets are spent once, globally.
+        self._injector = None
+        if fault_plan is not None:
+            self.inject_faults(fault_plan)
         self._residency: dict[int, frozenset] = {}  # Ba -> resident set
         self._compiled: dict[tuple, CompiledPlan] = {}
         self._pinned: dict[tuple[int, int], dict] = {}  # host mode device pins
@@ -1929,6 +1963,8 @@ class GraphSession:
         Be: int = 8,
         Bv: int = 4,
         verify: bool = True,
+        fault_plan: FaultPlan | None = None,
+        read_policy=None,
     ) -> "GraphSession":
         """Open a ``.dsss`` container as a disk-backed session.
 
@@ -1942,10 +1978,19 @@ class GraphSession:
         truncated or bit-flipped file fails loudly instead of computing
         garbage; pass ``verify=False`` to skip the full-file read for
         very large graphs.
+
+        ``read_policy`` (a :class:`repro.storage.format.ReadPolicy`)
+        enables *self-healing* segment reads instead: each block/tile
+        segment is checksum-verified on first touch with bounded re-read +
+        backoff, and a segment that stays bad is quarantined behind a
+        structured :class:`repro.storage.format.DegradedReadError` — the
+        fetch layer never returns garbage. ``fault_plan`` attaches a
+        :class:`repro.reliability.FaultPlan` injector to the session and
+        its store (see :meth:`inject_faults`).
         """
         from repro.storage.format import open_dsss
 
-        store = open_dsss(path, verify=verify)
+        store = open_dsss(path, verify=verify, read_policy=read_policy)
         graph = store.graph()
         return cls(
             graph,
@@ -1957,12 +2002,51 @@ class GraphSession:
             Bv=Bv,
             staged=_StagedGraph(graph, store=store),
             host_memory_budget=host_memory_budget,
+            fault_plan=fault_plan,
         )
 
     @property
     def store(self):
         """The backing :class:`repro.storage.format.DSSSStore` (or None)."""
         return self._store
+
+    def inject_faults(self, plan: FaultPlan | None) -> None:
+        """Attach (or clear, with ``None``) a deterministic fault plan.
+
+        Builds one live :class:`repro.reliability.FaultInjector` shared by
+        the engine loop (``"sweep"`` site), the block fetcher / packed
+        chunk streamer (``"h2d"`` site) and the backing ``.dsss`` store
+        (``"storage"`` site), so a plan's fire budgets are accounted once
+        across layers.
+        """
+        self._injector = plan.injector() if plan is not None else None
+        if self._store is not None:
+            self._store.attach_faults(self._injector)
+
+    @property
+    def fault_injector(self):
+        """The live injector of the attached fault plan (or None)."""
+        return self._injector
+
+    def _heal_store_segments(self, prefix: str) -> None:
+        """Verify-on-first-touch for the store segments a stream reads.
+
+        Disk-residency self-healing: before the fetch layer pages block
+        (``blk_*``) or packed tile (``p_*``) data out of the mmap, every
+        backing segment is checksum-verified once — with bounded re-read +
+        backoff under the store's :class:`~repro.storage.format.ReadPolicy`
+        — so a torn read heals and persistent corruption surfaces as a
+        structured :class:`~repro.storage.format.DegradedReadError` instead
+        of garbage results. No-op without a read policy (the
+        ``open(verify=True)`` whole-file check is then the only guard) and
+        after the first touch (verified segments are remembered).
+        """
+        store = self._store
+        if store is None or store.read_policy is None:
+            return
+        store.ensure_segments(
+            n for n in store.segments if n.startswith(prefix)
+        )
 
     @property
     def block_keys(self) -> frozenset:
@@ -2426,9 +2510,30 @@ class GraphSession:
         }
 
     # -- execution -----------------------------------------------------------
-    def run(self, plan: ExecutionPlan) -> Result:
-        """Execute one plan against the staged graph."""
-        batch = self._execute(plan, [plan.kwargs_dict()])
+    def run(
+        self,
+        plan: ExecutionPlan,
+        *,
+        resume_from: str | bool | None = None,
+        cancel: Callable[[int], None] | None = None,
+    ) -> Result:
+        """Execute one plan against the staged graph.
+
+        ``resume_from`` restores a sweep-level snapshot and continues:
+        a snapshot path, a checkpoint directory (its latest snapshot; an
+        empty/missing directory starts fresh — the restore-latest-or-cold
+        policy of the train loop), or ``True`` for the plan's own
+        ``checkpoint.directory``. The resumed run is bit-identical to an
+        uninterrupted one, with field-identical cumulative meters
+        (``wall_seconds`` excepted — real elapsed time accumulates across
+        attempts). ``cancel`` is a callable invoked with the completed
+        sweep count before every sweep; raising
+        :class:`repro.reliability.DeadlineExceeded` from it cancels the
+        run cooperatively between sweeps (the serving deadline hook).
+        """
+        batch = self._execute(
+            plan, [plan.kwargs_dict()], resume_from=resume_from, cancel=cancel
+        )
         res = batch.results[0]
         assert res.iterations == res.meters.iterations, (
             "Result.iterations is defined as the number of update sweeps "
@@ -2436,7 +2541,13 @@ class GraphSession:
         )
         return res
 
-    def run_batch(self, plans: list[ExecutionPlan]) -> BatchResult:
+    def run_batch(
+        self,
+        plans: list[ExecutionPlan],
+        *,
+        resume_from: str | bool | None = None,
+        cancel: Callable[[int], None] | None = None,
+    ) -> BatchResult:
         """Execute K plans, sharing one streamed pass over the edge blocks.
 
         Plans fuse when they share a ``batch_key()`` (program, strategy,
@@ -2445,14 +2556,27 @@ class GraphSession:
         e.g. per-query masks); stackable aux runs vmapped with a leading
         query axis on the native SPU/DPU/MPU/fused schedules. Everything
         else falls back to sequential ``run`` calls (``fused=False``);
-        results are identical either way.
+        results are identical either way. ``resume_from`` / ``cancel``
+        behave as in :meth:`run`; a fused batch checkpoints and resumes
+        as one unit (the snapshot holds all K queries' state).
         """
         if not plans:
             return BatchResult([], Meters(), 0, True, True)
         if self._fusable(plans):
-            return self._execute(plans[0], [p.kwargs_dict() for p in plans])
+            return self._execute(
+                plans[0],
+                [p.kwargs_dict() for p in plans],
+                resume_from=resume_from,
+                cancel=cancel,
+            )
+        if resume_from:
+            raise ValueError(
+                "resume_from requires a fusable batch (one snapshot holds "
+                "the whole batch's state); these plans fall back to "
+                "sequential runs — resume them individually"
+            )
         meters = Meters()
-        results = [self.run(p) for p in plans]
+        results = [self.run(p, cancel=cancel) for p in plans]
         for r in results:
             meters.merge(r.meters)
         return BatchResult(
@@ -2489,10 +2613,122 @@ class GraphSession:
             "spu", "dpu", "mpu", "fused",
         )
 
-    def _execute(self, plan: ExecutionPlan, kwargs_list: list[dict]) -> BatchResult:
+    def _resolve_resume(
+        self, plan: ExecutionPlan, resume_from: str | bool | None
+    ) -> str | None:
+        """Turn a ``resume_from`` argument into a snapshot path (or None).
+
+        A directory resumes from its latest snapshot — or starts fresh
+        when it has none (restore-latest-or-cold, like the train loop);
+        ``True`` uses the plan's own checkpoint directory; an explicit
+        file path must exist.
+        """
+        if not resume_from:
+            return None
+        if resume_from is True:
+            if plan.checkpoint is None:
+                raise ValueError(
+                    "resume_from=True needs plan.checkpoint to name the "
+                    "snapshot directory"
+                )
+            resume_from = plan.checkpoint.directory
+        if os.path.isdir(resume_from):
+            return latest_snapshot(resume_from)
+        if not os.path.exists(resume_from):
+            raise SnapshotError(f"{resume_from}: no such snapshot")
+        return resume_from
+
+    def _save_sweep_snapshot(
+        self, spec, plan, attrs, active, converged_at, sweeps,
+        activity_log, meters, wall_seconds,
+    ) -> None:
+        """Atomically snapshot the full iteration state after one sweep."""
+        g = self.graph
+        mdict = {
+            f.name: getattr(meters, f.name) for f in dataclasses.fields(meters)
+        }
+        # The live meter keeps accumulating; the snapshot records the real
+        # elapsed time as of the save without mutating it.
+        mdict["wall_seconds"] = wall_seconds
+        meta = {
+            "sweeps": sweeps,
+            "meters": mdict,
+            "program": plan.program.name,
+            "K": len(converged_at),
+            "P": int(g.P),
+            "interval_size": int(g.interval_size),
+            "n": int(g.n),
+            "m": int(g.m),
+        }
+        arrays = {
+            "attrs": np.asarray(attrs),
+            "active": np.asarray(active),
+            "activity_log": (
+                np.stack(activity_log)
+                if activity_log
+                else np.zeros((0, g.P), dtype=bool)
+            ),
+            "converged_at": np.asarray(
+                [-1 if c is None else c for c in converged_at], np.int64
+            ),
+        }
+        save_snapshot(spec.directory, sweeps, arrays, meta, keep=spec.keep)
+
+    def _restore_sweep_snapshot(
+        self, path: str, plan: ExecutionPlan, K: int, meters: Meters
+    ):
+        """Load one snapshot back into live loop state (validated)."""
+        arrays, meta = load_snapshot(path)
+        g = self.graph
+        expect = {
+            "program": plan.program.name,
+            "K": K,
+            "P": int(g.P),
+            "interval_size": int(g.interval_size),
+            "n": int(g.n),
+            "m": int(g.m),
+        }
+        for key, want in expect.items():
+            got = meta.get(key)
+            if got != want:
+                raise SnapshotError(
+                    f"{path}: snapshot has {key}={got!r} but the resuming "
+                    f"plan/session needs {key}={want!r}"
+                )
+        # Restore the cumulative meters wholesale: the snapshot was taken
+        # past this run's setup charges (pins/fused peak), so the restored
+        # values already include them — resumed totals match the
+        # uninterrupted run field for field.
+        for name, value in meta["meters"].items():
+            setattr(meters, name, value)
+        attrs = jnp.asarray(arrays["attrs"])
+        active = np.asarray(arrays["active"])
+        converged_at = [
+            None if c < 0 else int(c) for c in arrays["converged_at"]
+        ]
+        activity_log = [np.asarray(row) for row in arrays["activity_log"]]
+        return attrs, active, converged_at, int(meta["sweeps"]), activity_log
+
+    def _execute(
+        self,
+        plan: ExecutionPlan,
+        kwargs_list: list[dict],
+        *,
+        resume_from: str | bool | None = None,
+        cancel: Callable[[int], None] | None = None,
+    ) -> BatchResult:
         g = self.graph
         prog = plan.program
         compiled = self.compile(plan)
+        if compiled.residency == "disk":
+            # Self-healing reads: checksum-verify (once, with bounded
+            # re-read under the store's ReadPolicy) every segment this
+            # run's data path — pins and streams alike — will mmap, so a
+            # bad segment surfaces as a structured DegradedReadError
+            # here, before any garbage bytes reach the device.
+            self._heal_store_segments(
+                "blk_" if compiled.execution == "per_block" else "p_"
+            )
         isz = g.interval_size
         K = len(kwargs_list)
         attrs = jnp.stack(
@@ -2559,10 +2795,26 @@ class GraphSession:
         ]
         sweeps = 0
         activity_log: list[np.ndarray] = []
+        wall0 = 0.0
+        snap_path = self._resolve_resume(plan, resume_from)
+        if snap_path is not None:
+            attrs, active, converged_at, sweeps, activity_log = (
+                self._restore_sweep_snapshot(snap_path, plan, K, meters)
+            )
+            wall0 = meters.wall_seconds
+        ckpt = plan.checkpoint
+        inj = self._injector
         start = time.perf_counter()
-        for _ in range(plan.max_iters):
+        for _ in range(sweeps, plan.max_iters):
             if not active.any():
                 break
+            # Cooperative cancellation (serving deadlines) and injected
+            # crashes both land here, on the sweep boundary — never
+            # mid-sweep, so checkpointed state is always consistent.
+            if cancel is not None:
+                cancel(sweeps)
+            if inj is not None:
+                inj.check("sweep", sweeps)
             # Record the sweep's processed-interval bitmap (the union
             # _rows_to_process acts on) before the sweep mutates `active`
             # — this is the trace the iomodel activity terms consume.
@@ -2576,7 +2828,13 @@ class GraphSession:
             for m in range(K):
                 if converged_at[m] is None and not active[m].any():
                     converged_at[m] = sweeps
-        meters.wall_seconds = time.perf_counter() - start
+            if ckpt is not None and sweeps % ckpt.every == 0:
+                self._save_sweep_snapshot(
+                    ckpt, plan, attrs, active, converged_at, sweeps,
+                    activity_log, meters,
+                    wall0 + (time.perf_counter() - start),
+                )
+        meters.wall_seconds = wall0 + (time.perf_counter() - start)
         results = []
         for m in range(K):
             flat = attrs[m].reshape(-1)

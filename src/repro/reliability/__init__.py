@@ -1,0 +1,54 @@
+"""repro.reliability — fault injection, checkpoint/resume, degraded reads.
+
+The reliability layer for the NXgraph engine: deterministic fault plans
+injected at every real I/O boundary (:mod:`.faults`), atomic sweep-level
+snapshot/resume for iterative runs (:mod:`.checkpoint`), and quarantined-
+segment repair for the `.dsss` disk tier (:mod:`.repair` — imported
+lazily, since it pulls in the storage build pipeline).
+
+This package's eager imports are stdlib+numpy only, so ``core.plan`` and
+``storage.format`` can depend on it without cycles.
+"""
+from repro.reliability.checkpoint import (
+    CheckpointSpec,
+    SnapshotError,
+    latest_snapshot,
+    list_snapshots,
+    load_snapshot,
+    save_snapshot,
+)
+from repro.reliability.faults import (
+    DeadlineExceeded,
+    FailureInjector,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedCrash,
+    SimulatedFailure,
+    StepTimer,
+    StragglerWatchdog,
+    TransientFault,
+    elastic_device_count,
+    with_transient_retries,
+)
+
+__all__ = [
+    "CheckpointSpec",
+    "DeadlineExceeded",
+    "FailureInjector",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedCrash",
+    "SimulatedFailure",
+    "SnapshotError",
+    "StepTimer",
+    "StragglerWatchdog",
+    "TransientFault",
+    "elastic_device_count",
+    "latest_snapshot",
+    "list_snapshots",
+    "load_snapshot",
+    "save_snapshot",
+    "with_transient_retries",
+]

@@ -1,100 +1,21 @@
-"""Fault tolerance: failure injection, straggler watchdog, elastic policy.
+"""Compatibility shim — these primitives moved to :mod:`repro.reliability`.
 
-Large-scale runnability pieces that can be exercised on this container:
-
-* :class:`FailureInjector` — deterministic chaos: raises at configured
-  steps, standing in for preemptions/XLA aborts. The train loop's recovery
-  path (restore-latest + resume) is tested against it.
-* :class:`StragglerWatchdog` — EWMA step-time monitor; flags outlier steps
-  (on a real pod, per-host step times feed this and the runbook response
-  is checkpoint + evict + elastic re-mesh).
-* :func:`elastic_device_count` — largest usable device count after
-  excluding failed hosts, keeping the mesh factorization valid: the policy
-  half of elastic scaling (the mechanism — reshard-on-load — lives in
-  checkpoint/manager.py).
+The train-loop fault-tolerance pieces (:class:`FailureInjector`,
+:class:`StragglerWatchdog`, :func:`elastic_device_count`,
+:class:`StepTimer`) now live in ``repro.reliability.faults`` alongside the
+engine-level :class:`~repro.reliability.faults.FaultPlan` injection API,
+so one module owns every injected failure. Import from
+``repro.reliability`` in new code; this module re-exports the old names
+so existing imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+from repro.reliability.faults import (
+    FailureInjector,
+    SimulatedFailure,
+    StepTimer,
+    StragglerWatchdog,
+    elastic_device_count,
+)
 
 __all__ = ["FailureInjector", "SimulatedFailure", "StragglerWatchdog", "elastic_device_count"]
-
-
-class SimulatedFailure(RuntimeError):
-    pass
-
-
-@dataclasses.dataclass
-class FailureInjector:
-    """Raise SimulatedFailure at the given steps (each fires once)."""
-
-    fail_at_steps: tuple[int, ...] = ()
-    fired: set = dataclasses.field(default_factory=set)
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at_steps and step not in self.fired:
-            self.fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
-
-
-@dataclasses.dataclass
-class StragglerWatchdog:
-    """EWMA step-time outlier detector.
-
-    ``update`` returns True when the step took more than ``threshold`` ×
-    the smoothed time — the signal a production controller uses to start
-    the mitigation runbook (snapshot, evict host, re-mesh).
-    """
-
-    alpha: float = 0.1
-    threshold: float = 3.0
-    warmup: int = 5
-    _ewma: float = 0.0
-    _count: int = 0
-    flagged: list = dataclasses.field(default_factory=list)
-
-    def update(self, step: int, step_seconds: float) -> bool:
-        self._count += 1
-        if self._count <= self.warmup:
-            # establish a baseline before flagging
-            self._ewma = (
-                step_seconds
-                if self._ewma == 0.0
-                else (1 - self.alpha) * self._ewma + self.alpha * step_seconds
-            )
-            return False
-        is_straggler = step_seconds > self.threshold * self._ewma
-        if is_straggler:
-            self.flagged.append((step, step_seconds, self._ewma))
-        else:
-            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * step_seconds
-        return is_straggler
-
-
-def elastic_device_count(
-    available: int, *, model_parallel: int = 1, minimum: int = 1
-) -> int:
-    """Largest device count ≤ available that keeps the mesh valid.
-
-    The model axis is fixed (parameter shardings must divide it); the data
-    axis absorbs the loss — so usable = model_parallel × floor(available /
-    model_parallel). Checkpoint reshard-on-load does the rest.
-    """
-    usable = (available // model_parallel) * model_parallel
-    if usable < minimum:
-        raise RuntimeError(
-            f"only {available} devices available; need >= {minimum}"
-        )
-    return usable
-
-
-class StepTimer:
-    def __init__(self):
-        self._t = None
-
-    def tick(self) -> float:
-        now = time.perf_counter()
-        dt = 0.0 if self._t is None else now - self._t
-        self._t = now
-        return dt

@@ -21,10 +21,18 @@ Quickstart::
 Every delivered result is bit-identical to a solo ``session.run(plan)``
 and carries this request's exact share of the fused batch's meters.
 
+Degradation knobs: ``QueryRequest(deadline_s=..., max_retries=...)``
+sheds/cancels past-deadline requests at sweep boundaries
+(:class:`~repro.reliability.faults.DeadlineExceeded` to the waiter,
+``ServerStats.timeouts``) and re-runs transiently faulted batches with
+backoff; ``SessionPool(breaker_threshold=...)`` sheds persistently
+failing graphs via :class:`CircuitOpenError` until a cooldown expires.
+
 The seed repo's LLM token-generation demo lives in
 :mod:`repro.serving.llm_demo` (import it explicitly); this package's
 public API is graph serving only.
 """
+from repro.reliability.faults import DeadlineExceeded, TransientFault
 from repro.serving.api import (
     AdmissionError,
     QueryRequest,
@@ -33,11 +41,13 @@ from repro.serving.api import (
     ServerStats,
     split_meters,
 )
-from repro.serving.pool import PoolStats, SessionPool
+from repro.serving.pool import CircuitOpenError, PoolStats, SessionPool
 from repro.serving.server import GraphServer, estimate_inflight_bytes
 
 __all__ = [
     "AdmissionError",
+    "CircuitOpenError",
+    "DeadlineExceeded",
     "GraphServer",
     "PoolStats",
     "QueryRequest",
@@ -45,6 +55,7 @@ __all__ = [
     "RequestTiming",
     "ServerStats",
     "SessionPool",
+    "TransientFault",
     "estimate_inflight_bytes",
     "split_meters",
 ]

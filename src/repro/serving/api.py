@@ -54,10 +54,28 @@ class QueryRequest:
     ``(graph, plan.batch_key())`` agree are candidates for fusion into one
     ``run_batch`` pass (they may differ only in Initialize kwargs, e.g.
     BFS roots).
+
+    ``deadline_s`` is a soft per-request budget measured from enqueue:
+    once exceeded the server sheds the request from the queue, or — if it
+    is already riding a batch — cancels the batch cooperatively at the
+    next sweep boundary and re-runs the surviving members. The waiter
+    receives :class:`~repro.reliability.faults.DeadlineExceeded`;
+    ``ServerStats.timeouts`` counts it. ``max_retries`` bounds how many
+    times the server re-runs this request's batch after a
+    :class:`~repro.reliability.faults.TransientFault` (a fused batch
+    retries under the *smallest* member budget).
     """
 
     graph: Any
     plan: ExecutionPlan
+    deadline_s: float | None = None
+    max_retries: int = 0
+
+    def __post_init__(self):
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be positive (or None)")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be ≥ 0")
 
 
 @dataclasses.dataclass
@@ -124,6 +142,10 @@ class ServerStats:
     completed: int = 0
     rejected: int = 0
     failed: int = 0
+    timeouts: int = 0  # requests shed/cancelled past their deadline_s
+    retries: int = 0  # batch re-runs after a TransientFault
+    breaker_sheds: int = 0  # requests shed by an open circuit breaker
+    slow_batches: int = 0  # batches the straggler watchdog flagged
     batches: int = 0
     fused_batches: int = 0
     batched_requests: int = 0

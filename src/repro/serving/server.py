@@ -33,6 +33,20 @@ The serving loop that feeds :meth:`GraphSession.run_batch`:
   (``GraphSession`` run state is not reentrant) while different graphs
   run concurrently, up to ``max_concurrent`` executor threads.
 
+* **Graceful degradation**: requests may carry a ``deadline_s`` budget
+  (measured from enqueue) and a ``max_retries`` transient-fault budget.
+  Expired requests are shed from the queue before dispatch; a request
+  that expires *mid-run* cancels its batch cooperatively at the next
+  sweep boundary (``session.run`` checks a ``cancel`` callback between
+  sweeps — no partial sweep is ever observable) and the surviving
+  members re-run. :class:`~repro.reliability.faults.TransientFault`
+  escalating out of the fetch layer's own bounded retries triggers a
+  batch re-run with backoff, up to the smallest member budget. Failures
+  feed the pool's per-graph circuit breaker
+  (:class:`~repro.serving.pool.CircuitOpenError` sheds instantly while
+  open), and a :class:`~repro.reliability.faults.StragglerWatchdog`
+  flags anomalously slow batches into ``ServerStats.slow_batches``.
+
 ``serve(requests)`` is the synchronous convenience wrapper (start →
 submit all → gather → drain → stop); long-running callers use
 ``async with GraphServer(...) as srv: await srv.submit(...)``.
@@ -42,12 +56,18 @@ from __future__ import annotations
 import asyncio
 import concurrent.futures
 import dataclasses
+import functools
 import time
 from collections import OrderedDict
 from typing import Sequence
 
 from repro.core.plan import ExecutionPlan
 from repro.core.session import BatchResult, GraphSession, Meters
+from repro.reliability.faults import (
+    DeadlineExceeded,
+    StragglerWatchdog,
+    TransientFault,
+)
 from repro.serving.api import (
     AdmissionError,
     QueryRequest,
@@ -56,7 +76,7 @@ from repro.serving.api import (
     ServerStats,
     split_meters,
 )
-from repro.serving.pool import SessionPool
+from repro.serving.pool import CircuitOpenError, SessionPool
 
 __all__ = ["GraphServer", "estimate_inflight_bytes", "estimate_inflight_parts"]
 
@@ -137,6 +157,7 @@ class _Pending:
     graph_key: str
     future: asyncio.Future
     timing: RequestTiming
+    deadline_at: float | None = None  # perf_counter deadline, None = no budget
 
 
 class GraphServer:
@@ -152,6 +173,8 @@ class GraphServer:
         queue_policy: str = "reject",
         inflight_capacity: float | None = None,
         max_concurrent: int = 2,
+        retry_backoff_s: float = 0.005,
+        watchdog: StragglerWatchdog | None = None,
     ):
         if queue_policy not in ("reject", "wait"):
             raise ValueError(
@@ -159,6 +182,8 @@ class GraphServer:
             )
         if max_batch < 1 or max_queue < 1 or max_concurrent < 1:
             raise ValueError("max_batch, max_queue, max_concurrent must be ≥ 1")
+        if retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be ≥ 0")
         self.pool = pool if pool is not None else SessionPool()
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
@@ -166,6 +191,8 @@ class GraphServer:
         self.queue_policy = queue_policy
         self.inflight_capacity = inflight_capacity
         self.max_concurrent = max_concurrent
+        self.retry_backoff_s = retry_backoff_s
+        self.watchdog = watchdog if watchdog is not None else StragglerWatchdog()
         # Buckets: compatibility key -> FIFO of pending requests. Insertion
         # order of the OrderedDict breaks largest-bucket ties (oldest wins).
         self._buckets: "OrderedDict[tuple, list[_Pending]]" = OrderedDict()
@@ -259,6 +286,11 @@ class GraphServer:
             graph_key=graph_key,
             future=asyncio.get_running_loop().create_future(),
             timing=RequestTiming(enqueued=now),
+            deadline_at=(
+                now + request.deadline_s
+                if request.deadline_s is not None
+                else None
+            ),
         )
         key = (graph_key, request.plan.batch_key())
         self._buckets.setdefault(key, []).append(pending)
@@ -401,6 +433,47 @@ class GraphServer:
             lock = self._locks[graph_key] = asyncio.Lock()
         return lock
 
+    def _shed_expired(self, batch: list[_Pending]) -> list[_Pending]:
+        """Resolve every past-deadline member with ``DeadlineExceeded``;
+        return the still-live remainder."""
+        now = time.perf_counter()
+        alive = []
+        for p in batch:
+            if p.deadline_at is not None and now >= p.deadline_at:
+                self._stats.timeouts += 1
+                if not p.future.done():
+                    p.future.set_exception(
+                        DeadlineExceeded(
+                            f"request on {p.graph_key!r} exceeded its "
+                            f"{p.request.deadline_s}s deadline"
+                        )
+                    )
+            else:
+                alive.append(p)
+        return alive
+
+    @staticmethod
+    def _deadline_cancel(batch: list[_Pending]):
+        """A between-sweeps ``cancel`` callback for the batch's soonest
+        deadline (None when no member carries one).
+
+        ``session.run`` invokes it on every sweep boundary — vertex state
+        is always a whole number of sweeps, so a cancelled batch leaves
+        nothing torn and its surviving members re-run bit-identically.
+        """
+        deadlines = [p.deadline_at for p in batch if p.deadline_at is not None]
+        if not deadlines:
+            return None
+        soonest = min(deadlines)
+
+        def cancel(sweep: int) -> None:
+            if time.perf_counter() >= soonest:
+                raise DeadlineExceeded(
+                    f"deadline reached at sweep boundary {sweep}"
+                )
+
+        return cancel
+
     async def _run_one_batch(self, graph_key: str, batch: list[_Pending]) -> None:
         loop = asyncio.get_running_loop()
         estimate = 0.0
@@ -408,12 +481,22 @@ class GraphServer:
         locked = False
         lock = self._session_lock(graph_key)
         try:
+            batch = self._shed_expired(batch)
+            if not batch:
+                return  # everything expired while queued — no work to run
             async with self._exec_sem:
                 # Open (or page in) the session off-loop: staging a cold
                 # graph is real work. Pin it against pool eviction.
-                session = await loop.run_in_executor(
-                    self._executor, self.pool.acquire, graph_key
-                )
+                try:
+                    session = await loop.run_in_executor(
+                        self._executor, self.pool.acquire, graph_key
+                    )
+                except CircuitOpenError as exc:
+                    self._stats.breaker_sheds += len(batch)
+                    for p in batch:
+                        if not p.future.done():
+                            p.future.set_exception(exc)
+                    return
                 try:
                     plans = [p.request.plan for p in batch]
                     topo, attr = estimate_inflight_parts(
@@ -423,15 +506,48 @@ class GraphServer:
                     admitted = True
                     await lock.acquire()
                     locked = True
-                    t_dispatch = time.perf_counter()
-                    for p in batch:
-                        p.timing.dispatched = t_dispatch
-                    bres = await loop.run_in_executor(
-                        self._executor, session.run_batch, plans
-                    )
+                    attempt = 0
+                    while True:
+                        batch = self._shed_expired(batch)
+                        if not batch:
+                            return  # every member expired while retrying
+                        plans = [p.request.plan for p in batch]
+                        t_dispatch = time.perf_counter()
+                        for p in batch:
+                            if p.timing.dispatched == 0.0:
+                                p.timing.dispatched = t_dispatch
+                        try:
+                            bres = await loop.run_in_executor(
+                                self._executor,
+                                functools.partial(
+                                    session.run_batch,
+                                    plans,
+                                    cancel=self._deadline_cancel(batch),
+                                ),
+                            )
+                            break
+                        except DeadlineExceeded:
+                            # The soonest-deadline member expired mid-run;
+                            # the sweep-boundary cancel threw the whole
+                            # batch away cleanly. Loop: shed it, re-run
+                            # the survivors from scratch.
+                            continue
+                        except TransientFault:
+                            self.pool.record_failure(graph_key)
+                            budget = min(
+                                p.request.max_retries for p in batch
+                            )
+                            if attempt >= budget:
+                                raise
+                            attempt += 1
+                            self._stats.retries += 1
+                            await asyncio.sleep(self.retry_backoff_s * attempt)
                 finally:
                     self.pool.release(graph_key)
             t_done = time.perf_counter()
+            self.pool.record_success(graph_key)
+            if self.watchdog.update(self._stats.batches, t_done - t_dispatch):
+                self._stats.slow_batches += 1
             self._t_last = t_done
             if bres.fused:
                 shares = split_meters(bres.meters, len(batch))
@@ -466,6 +582,9 @@ class GraphServer:
                 if not p.future.done():
                     p.future.set_result(result)
         except Exception as exc:  # propagate to every waiter, keep serving
+            if not isinstance(exc, TransientFault):
+                # Transient faults already fed the breaker per attempt.
+                self.pool.record_failure(graph_key)
             self._stats.failed += len(batch)
             for p in batch:
                 if not p.future.done():

@@ -12,8 +12,10 @@ double-buffered prefetch machinery.
 from repro.storage.build import BuildStats, build_dsss_file, build_from_text
 from repro.storage.format import (
     ChecksumError,
+    DegradedReadError,
     DSSSStore,
     FormatError,
+    ReadPolicy,
     open_dsss,
     store_info,
     verify_dsss,
@@ -25,8 +27,10 @@ __all__ = [
     "build_dsss_file",
     "build_from_text",
     "ChecksumError",
+    "DegradedReadError",
     "DSSSStore",
     "FormatError",
+    "ReadPolicy",
     "open_dsss",
     "store_info",
     "verify_dsss",

@@ -3,11 +3,16 @@
     python -m repro.storage build edges.txt graph.dsss --P 16
     python -m repro.storage info graph.dsss
     python -m repro.storage verify graph.dsss
+    python -m repro.storage verify graph.dsss --repair --source edges.txt
 
 ``build`` streams a SNAP-style text edge list (``src dst [weight]`` per
 line, ``#`` comments) through the bounded-RAM external-memory pipeline;
 ``info`` prints the header and segment directory; ``verify`` recomputes
 every segment checksum and exits non-zero on mismatch or truncation.
+``verify --repair`` instead scans all segments, reports every damaged
+one, and — given ``--source`` — rebuilds the container from the raw edge
+list and atomically swaps the verified replacement in
+(:func:`repro.reliability.repair.repair_dsss`).
 """
 from __future__ import annotations
 
@@ -74,6 +79,8 @@ def _cmd_info(args) -> int:
 
 
 def _cmd_verify(args) -> int:
+    if args.repair:
+        return _cmd_repair(args)
     try:
         store = verify_dsss(args.path)
     except (FormatError, OSError) as e:
@@ -82,6 +89,28 @@ def _cmd_verify(args) -> int:
     print(
         f"OK: {args.path} ({len(store.segments)} segments, "
         f"n={store.meta['n']} m={store.meta['m']})"
+    )
+    return 0
+
+
+def _cmd_repair(args) -> int:
+    from repro.reliability.repair import repair_dsss
+
+    try:
+        report = repair_dsss(
+            args.path,
+            args.source,
+            chunk_budget=args.chunk_budget,
+        )
+    except (FormatError, OSError, ValueError) as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    if not report["damaged"]:
+        print(f"OK: {args.path} (all segments clean, nothing to repair)")
+        return 0
+    print(
+        f"repaired {args.path}: damaged segments "
+        f"{', '.join(report['damaged'])} rebuilt from {report['source']}"
     )
     return 0
 
@@ -114,6 +143,19 @@ def main(argv: list[str] | None = None) -> int:
 
     v = sub.add_parser("verify", help="recompute all segment checksums")
     v.add_argument("path")
+    v.add_argument(
+        "--repair", action="store_true",
+        help="scan all segments and rebuild the container from --source "
+        "if any are damaged (atomic swap after the rebuild verifies)",
+    )
+    v.add_argument(
+        "--source", default=None,
+        help="raw text edge list to rebuild damaged containers from",
+    )
+    v.add_argument(
+        "--chunk-budget", type=int, default=64 << 20,
+        help="rebuild chunk budget (see `build`)",
+    )
     v.set_defaults(fn=_cmd_verify)
 
     args = ap.parse_args(argv)

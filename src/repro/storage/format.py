@@ -39,6 +39,7 @@ import dataclasses
 import json
 import os
 import struct
+import time
 import zlib
 from typing import Any, BinaryIO
 
@@ -51,7 +52,9 @@ __all__ = [
     "MAGIC",
     "FORMAT_VERSION",
     "ChecksumError",
+    "DegradedReadError",
     "FormatError",
+    "ReadPolicy",
     "Segment",
     "StoreWriter",
     "DSSSStore",
@@ -74,6 +77,69 @@ class FormatError(Exception):
 
 class ChecksumError(FormatError):
     """A segment's stored checksum does not match its bytes."""
+
+
+class DegradedReadError(FormatError):
+    """A segment stayed corrupt through the retry budget and is quarantined.
+
+    Structured: names the exact segment, its byte extent, its tile span
+    (packed ``p_*`` segments), and how many read attempts were spent — the
+    report an operator (or ``repro.storage verify --repair``) acts on. The
+    fetch layer raises this instead of ever returning garbage.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        segment: str,
+        *,
+        offset: int,
+        nbytes: int,
+        shape: tuple[int, ...],
+        attempts: int,
+        tile_range: tuple[int, int] | None = None,
+    ):
+        self.segment = segment
+        self.offset = offset
+        self.nbytes = nbytes
+        self.shape = shape
+        self.attempts = attempts
+        self.tile_range = tile_range
+        span = (
+            f", tiles [{tile_range[0]}, {tile_range[1]})"
+            if tile_range is not None
+            else ""
+        )
+        super().__init__(
+            f"{path}: segment {segment!r} quarantined after {attempts} read "
+            f"attempts (bytes [{offset}, {offset + nbytes}){span}); rebuild "
+            "it from the raw edge source with "
+            "`python -m repro.storage verify --repair --source <edges>`"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPolicy:
+    """Self-healing read discipline for segment verification.
+
+    A segment whose checksum read fails is re-read up to ``max_retries``
+    times with exponential backoff (torn reads heal); a segment still bad
+    after the budget is quarantined behind a :class:`DegradedReadError`.
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.001
+    backoff_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+        if self.backoff_factor < 1.0:
+            raise ValueError(
+                f"backoff_factor must be >= 1, got {self.backoff_factor}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,8 +336,23 @@ class DSSSStore:
     edge-scale is resident in host RAM until a page is actually touched.
     """
 
-    def __init__(self, path: str, *, verify: bool = False):
+    def __init__(
+        self,
+        path: str,
+        *,
+        verify: bool = False,
+        read_policy: ReadPolicy | None = None,
+    ):
         self.path = path
+        # Self-healing read state: ``read_policy`` turns on
+        # verify-on-first-touch (ensure_segment) with bounded re-read;
+        # ``quarantined`` remembers segments that stayed bad so every
+        # later fetch re-raises the same structured error instantly.
+        self.read_policy = read_policy
+        self.quarantined: dict[str, DegradedReadError] = {}
+        self.healed_reads = 0
+        self._verified: set[str] = set()
+        self._injector = None
         size = os.path.getsize(path)
         if size < _PREAMBLE.size:
             raise FormatError(f"{path}: too small to be a .dsss file")
@@ -338,29 +419,132 @@ class DSSSStore:
             self._arrays[name] = arr
         return arr
 
+    def attach_faults(self, injector) -> None:
+        """Attach (or clear) a :class:`repro.reliability.FaultInjector`.
+
+        The injector's ``storage_read(segment, attempt)`` decisions make
+        checksum reads observe corrupt / short bytes — the deterministic
+        stand-in for torn reads and bad media the self-healing path is
+        tested against. Clearing resets the verified-segment memo so a
+        new plan re-exercises the reads.
+        """
+        self._injector = injector
+        self._verified.clear()
+
+    def _checksum_segment(self, seg: Segment, *, attempt: int = 0) -> None:
+        """Recompute one segment's checksum — one bounded-chunk read attempt.
+
+        This is the storage fault-injection boundary: an attached injector
+        can make this attempt observe a short (truncated) or corrupt
+        (crc-perturbed) read. Raises :class:`ChecksumError` on any
+        mismatch; never returns bad bytes to a caller.
+        """
+        decision = (
+            self._injector.storage_read(seg.name, attempt)
+            if self._injector is not None
+            else None
+        )
+        if decision == "short":
+            raise ChecksumError(
+                f"{self.path}: segment {seg.name!r} truncated "
+                "(injected short read)"
+            )
+        with open(self.path, "rb") as f:
+            f.seek(seg.offset)
+            remaining, crc = seg.nbytes, 0
+            while remaining:
+                buf = f.read(min(_IO_CHUNK, remaining))
+                if not buf:
+                    raise ChecksumError(
+                        f"{self.path}: segment {seg.name!r} truncated"
+                    )
+                crc = zlib.crc32(buf, crc)
+                remaining -= len(buf)
+        if decision == "corrupt":
+            crc ^= 0xDEADBEEF  # the injected bit flip
+        if crc != seg.crc32:
+            raise ChecksumError(
+                f"{self.path}: segment {seg.name!r} checksum mismatch "
+                f"(stored {seg.crc32:#010x}, computed {crc:#010x})"
+            )
+
     def verify(self) -> None:
         """Recompute every segment checksum; raise :class:`ChecksumError`.
 
         Reads the file sequentially in bounded chunks — verification of an
         out-of-core graph never materializes it.
         """
-        with open(self.path, "rb") as f:
-            for seg in self.segments.values():
-                f.seek(seg.offset)
-                remaining, crc = seg.nbytes, 0
-                while remaining:
-                    buf = f.read(min(_IO_CHUNK, remaining))
-                    if not buf:
-                        raise ChecksumError(
-                            f"{self.path}: segment {seg.name!r} truncated"
-                        )
-                    crc = zlib.crc32(buf, crc)
-                    remaining -= len(buf)
-                if crc != seg.crc32:
-                    raise ChecksumError(
-                        f"{self.path}: segment {seg.name!r} checksum mismatch "
-                        f"(stored {seg.crc32:#010x}, computed {crc:#010x})"
+        for seg in self.segments.values():
+            self._checksum_segment(seg)
+
+    def scan(self) -> list[str]:
+        """Names of segments whose checksum currently fails (no retries).
+
+        The repair tool's damage report: unlike :meth:`verify` it keeps
+        going past the first failure, and unlike :meth:`ensure_segment`
+        it neither retries nor quarantines.
+        """
+        bad = []
+        for seg in self.segments.values():
+            try:
+                self._checksum_segment(seg)
+            except ChecksumError:
+                bad.append(seg.name)
+        return bad
+
+    def ensure_segment(self, name: str) -> None:
+        """Verify one segment on first touch, healing torn reads.
+
+        No-op without a :class:`ReadPolicy` (the opt-in) or when the
+        segment already verified. A failing checksum read is retried up
+        to ``max_retries`` times with exponential backoff —
+        ``healed_reads`` counts recoveries; exhaustion quarantines the
+        segment and raises the structured :class:`DegradedReadError`
+        (re-raised instantly on every later touch).
+        """
+        policy = self.read_policy
+        if policy is None or name in self._verified:
+            return
+        err = self.quarantined.get(name)
+        if err is not None:
+            raise err
+        seg = self.segments[name]
+        attempt = 0
+        delay = policy.backoff_s
+        while True:
+            try:
+                self._checksum_segment(seg, attempt=attempt)
+            except ChecksumError as exc:
+                if attempt >= policy.max_retries:
+                    tile_range = (
+                        (0, int(seg.shape[0]))
+                        if name.startswith("p_") and seg.shape
+                        else None
                     )
+                    err = DegradedReadError(
+                        self.path,
+                        name,
+                        offset=seg.offset,
+                        nbytes=seg.nbytes,
+                        shape=seg.shape,
+                        attempts=attempt + 1,
+                        tile_range=tile_range,
+                    )
+                    self.quarantined[name] = err
+                    raise err from exc
+                time.sleep(delay)
+                delay *= policy.backoff_factor
+                attempt += 1
+            else:
+                if attempt:
+                    self.healed_reads += 1
+                self._verified.add(name)
+                return
+
+    def ensure_segments(self, names) -> None:
+        """:meth:`ensure_segment` over an iterable of segment names."""
+        for name in names:
+            self.ensure_segment(name)
 
     # -- engine-facing assembly ---------------------------------------------
     def graph(self) -> DSSSGraph:
@@ -464,9 +648,20 @@ class DSSSStore:
         return self._packed
 
 
-def open_dsss(path: str, *, verify: bool = False) -> DSSSStore:
-    """Open a .dsss container (``verify=True`` checks every segment crc)."""
-    return DSSSStore(path, verify=verify)
+def open_dsss(
+    path: str,
+    *,
+    verify: bool = False,
+    read_policy: ReadPolicy | None = None,
+) -> DSSSStore:
+    """Open a .dsss container (``verify=True`` checks every segment crc).
+
+    ``read_policy`` opts in to self-healing reads: segments verify on
+    first touch with bounded re-read + backoff and quarantine behind
+    :class:`DegradedReadError` when they stay bad (see
+    :meth:`DSSSStore.ensure_segment`).
+    """
+    return DSSSStore(path, verify=verify, read_policy=read_policy)
 
 
 def verify_dsss(path: str) -> DSSSStore:

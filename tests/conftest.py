@@ -8,7 +8,9 @@ Two jobs:
    ``requirements-dev.txt`` to run them; CI runs them all in a dedicated
    property lane, see .github/workflows/ci.yml).
 2. Register the ``slow`` marker used by the long-running training/serving
-   smoke tests, so CI can run ``-m "not slow"`` under a wall-clock budget.
+   smoke tests, so CI can run ``-m "not slow"`` under a wall-clock budget,
+   and the ``chaos`` marker for the fault-injection/recovery matrix
+   (``pytest -m chaos`` is CI's dedicated reliability lane).
 """
 import importlib.util
 
@@ -21,6 +23,7 @@ PROPERTY_TEST_MODULES = [
     "test_kernels_flash_attention.py",
     "test_packed_kernel_property.py",
     "test_packed_tiling_property.py",
+    "test_reliability_property.py",
     "test_residency_property.py",
     "test_selective_property.py",
     "test_storage_property.py",
@@ -36,4 +39,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "slow: long-running training/serving smoke tests (deselect with -m 'not slow')",
+    )
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection / crash-resume / degraded-read recovery matrix "
+        "(select with -m chaos)",
     )

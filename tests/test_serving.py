@@ -439,8 +439,11 @@ class TestSessionPool:
         pool.session("b")  # over capacity, but a is pinned
         assert pool.stats().open_sessions == 2  # a survived
         assert not pool.evict("a")
+        # the unpin re-enforces the capacity bound: a's stale staged
+        # bytes are dropped immediately, not parked until the next open
         pool.release("a")
-        assert pool.evict("a")
+        assert pool._entries["a"].session is None
+        assert not pool.evict("a")  # already cold
 
     def test_max_open_bound(self):
         graphs = [_graph(n=40, m=150, seed=s, P=2, weighted=False) for s in range(3)]
