@@ -1,10 +1,52 @@
 """Shared benchmark helpers."""
+import datetime
+import platform
+import subprocess
 import time
 
 import numpy as np
 
 from repro.graph.generators import paper_dataset, rmat
 from repro.graph.preprocess import degree_and_densify
+
+#: Version of the BENCH_*.json payload shape. Bump when a field is
+#: renamed/removed so downstream comparisons across commits can refuse
+#: to diff incompatible payloads instead of silently misreading them.
+BENCH_SCHEMA_VERSION = 1
+
+
+def git_sha(short: bool = True) -> str:
+    """The repo's HEAD commit, or "unknown" outside a git checkout."""
+    cmd = ["git", "rev-parse", *(["--short"] if short else []), "HEAD"]
+    try:
+        return subprocess.run(
+            cmd, capture_output=True, text=True, timeout=10, check=True
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def stamp(payload: dict, **extra) -> dict:
+    """Attach provenance metadata to a benchmark payload (in place).
+
+    Every BENCH_*.json carries the same ``meta`` block — schema version,
+    git SHA, jax backend, wall-clock — so a results file is
+    self-describing: which code produced it, on what accelerator, when.
+    """
+    import jax  # deferred: keep _util importable without staging a device
+
+    now = datetime.datetime.now(datetime.timezone.utc)
+    payload["meta"] = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "created_utc": now.isoformat(timespec="seconds"),
+        "created_unix": now.timestamp(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        **extra,
+    }
+    return payload
 
 
 def timeit(fn, *, warmup=1, iters=3):

@@ -58,7 +58,7 @@ from repro.core import (
 from repro.core.session import _host_block_nbytes
 from repro.storage import build_dsss_file
 
-from benchmarks._util import row, small_rmat
+from benchmarks._util import row, small_rmat, stamp
 
 ITERS = 2
 
@@ -270,6 +270,7 @@ def main():
     lines = run(smoke=args.smoke, payload=payload)
     print("\n".join(lines))
     if args.out:
+        stamp(payload, bench="memory", smoke=args.smoke)
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.out}")

@@ -36,7 +36,9 @@ import argparse
 import json
 import pathlib
 import sys
+import tempfile
 import time
+import urllib.request
 
 import numpy as np
 
@@ -49,12 +51,15 @@ from repro.core import (  # noqa: E402
     ExecutionPlan,
     GraphSession,
     PageRank,
+    TraceSpec,
     build_dsss,
 )
+from repro.obs import parse_prometheus  # noqa: E402
 from repro.reliability import FaultPlan  # noqa: E402
 from repro.serving import GraphServer, QueryRequest, SessionPool  # noqa: E402
+from repro.storage import write_dsss  # noqa: E402
 
-from benchmarks._util import small_rmat  # noqa: E402
+from benchmarks._util import small_rmat, stamp  # noqa: E402
 
 KS = (1, 4, 16)
 
@@ -128,12 +133,17 @@ def run(smoke: bool = False, payload: dict | None = None):
                     "batches": st.batches,
                     "mean_queue_s": st.mean_queue_s,
                     "mean_run_s": st.mean_run_s,
+                    "p50_total_s": st.p50_total_s,
+                    "p95_total_s": st.p95_total_s,
+                    "p99_total_s": st.p99_total_s,
                 }
             )
             lines.append(
                 f"{name}_k{k},seq={seq_s*1e3:.1f}ms,batch={batch_s*1e3:.1f}ms,"
                 f"speedup={speedup:.2f}x,qps={k/batch_s:.1f},"
-                f"occupancy={st.mean_occupancy:.1f}"
+                f"occupancy={st.mean_occupancy:.1f},"
+                f"p50={st.p50_total_s*1e3:.1f}ms,p95={st.p95_total_s*1e3:.1f}ms,"
+                f"p99={st.p99_total_s*1e3:.1f}ms"
             )
     if payload is not None:
         payload["graph"] = {
@@ -168,11 +178,22 @@ def run_fault_injection(smoke: bool = False, payload: dict | None = None):
             FaultPlan.h2d_transient(rate=0.02, times=None, seed=11)
         )
     )
-    server = GraphServer(pool, max_batch=4, max_wait_ms=2.0)
-    served = server.serve(
-        [QueryRequest("g", p, max_retries=4) for p in plans]
-    )
-    st = server.stats()
+    server = GraphServer(pool, max_batch=4, max_wait_ms=2.0, telemetry_port=0)
+    try:
+        served = server.serve(
+            [QueryRequest("g", p, max_retries=4) for p in plans]
+        )
+        st = server.stats()
+        # Scrape the live endpoint *after* the wave: the CI consistency
+        # gate checks the scraped Prometheus counters against the
+        # ServerStats snapshot (they are equal by construction — each
+        # scrape publishes a fresh snapshot first).
+        text = urllib.request.urlopen(
+            server.telemetry.url("/metrics"), timeout=10
+        ).read().decode()
+    finally:
+        server.shutdown_telemetry()
+    scraped = parse_prometheus(text)
     inj = pool.session("g").fault_injector
     for s, q in zip(solo, served):
         np.testing.assert_array_equal(s.attrs, q.result.attrs)
@@ -182,8 +203,17 @@ def run_fault_injection(smoke: bool = False, payload: dict | None = None):
         "failed": st.failed,
         "timeouts": st.timeouts,
         "server_retries": st.retries,
+        "breaker_sheds": st.breaker_sheds,
         "faults_fired": inj.fired(),
         "max_total_s": st.max_total_s,
+        "scrape": {
+            f: scraped.get((f"repro_serving_{f}_total", ()))
+            for f in ("completed", "retries", "timeouts", "breaker_sheds",
+                      "failed")
+        },
+        "scrape_transient_retries": scraped.get(
+            ("repro_transient_retries_total", (("site", "h2d"),))
+        ),
     }
     if payload is not None:
         payload["fault_injection"] = row
@@ -194,6 +224,60 @@ def run_fault_injection(smoke: bool = False, payload: dict | None = None):
         f"p_max={row['max_total_s']*1e3:.1f}ms"
     )
     return [line], row
+
+
+def run_traced_disk(trace_out: str, smoke: bool = False,
+                    payload: dict | None = None):
+    """Trace one disk-tier PageRank; verify the trace's byte exactness.
+
+    Streams the graph out of a ``.dsss`` container under a constrained
+    budget with ``ExecutionPlan(trace=TraceSpec(path=...))``, then reads
+    the exported Perfetto trace back and asserts the per-sweep
+    ``bytes_h2d``/``bytes_disk_read`` span attributes sum *exactly* to
+    the run's ``Result.meters`` fields — the observability layer's core
+    contract, checked on the real artifact CI uploads.
+    """
+    from repro.runtime.trace_analysis import load_events, run_summaries
+
+    el = small_rmat(9 if smoke else 12, 16)
+    g = build_dsss(el, 8)
+    budget = int(g.total_edge_bytes(8) * 0.25)
+    with tempfile.TemporaryDirectory() as td:
+        store_path = str(pathlib.Path(td) / "g.dsss")
+        write_dsss(g, store_path)
+        sess = GraphSession.open(
+            store_path, memory_budget=budget, host_memory_budget=2 * budget
+        )
+        assert sess.resolved_residency() == "disk"
+        plan = ExecutionPlan(
+            PageRank(), max_iters=5, tol=0.0,
+            trace=TraceSpec(path=trace_out),
+        )
+        res = sess.run(plan)
+    summary = run_summaries(load_events(trace_out))[-1]
+    assert summary["bytes_h2d"] == res.meters.bytes_h2d, (
+        f"trace sweep h2d sum {summary['bytes_h2d']} != "
+        f"meters {res.meters.bytes_h2d}"
+    )
+    assert summary["bytes_disk_read"] == res.meters.bytes_disk_read, (
+        f"trace sweep disk sum {summary['bytes_disk_read']} != "
+        f"meters {res.meters.bytes_disk_read}"
+    )
+    assert res.meters.bytes_disk_read > 0, "disk tier never touched disk"
+    row = {
+        "trace": trace_out,
+        "sweeps": summary["sweeps"],
+        "bytes_h2d": summary["bytes_h2d"],
+        "bytes_disk_read": summary["bytes_disk_read"],
+        "mean_sweep_s": summary["mean_sweep_s"],
+    }
+    if payload is not None:
+        payload["traced_disk"] = row
+    return [
+        f"trace,{trace_out},sweeps={row['sweeps']},"
+        f"h2d={row['bytes_h2d']/1e6:.2f}MB,"
+        f"disk={row['bytes_disk_read']/1e6:.2f}MB (sums == meters)"
+    ], row
 
 
 def main():
@@ -210,6 +294,14 @@ def main():
                     help="fail unless the faulted wave completes fully, "
                     "bit-identical, with zero failures (implies "
                     "--inject-faults)")
+    ap.add_argument("--assert-scrape", action="store_true",
+                    help="scrape the faulted wave's /metrics endpoint and "
+                    "fail unless the Prometheus counters equal the "
+                    "ServerStats snapshot (implies --inject-faults)")
+    ap.add_argument("--trace-out", default=None,
+                    help="also run one traced disk-tier PageRank, write the "
+                    "Perfetto trace here and assert its per-sweep byte "
+                    "attrs sum exactly to Result.meters")
     args = ap.parse_args()
     payload: dict = {}
     lines = run(smoke=args.smoke, payload=payload)
@@ -223,9 +315,27 @@ def main():
             "stopped amortizing the streamed topology"
         )
         print(f"speedup gate passed: {best:.2f}x >= {args.assert_speedup}x")
-    if args.inject_faults or args.assert_recovery:
+    if args.inject_faults or args.assert_recovery or args.assert_scrape:
         flines, frow = run_fault_injection(smoke=args.smoke, payload=payload)
         print("\n".join(flines))
+        if args.assert_scrape:
+            sc = frow["scrape"]
+            for f in ("completed", "retries", "timeouts", "breaker_sheds",
+                      "failed"):
+                want = frow["server_retries" if f == "retries" else f]
+                assert sc[f] == want, (
+                    f"scraped repro_serving_{f}_total={sc[f]} != "
+                    f"ServerStats value {want}"
+                )
+            assert (frow["scrape_transient_retries"] or 0) >= 1, (
+                "repro_transient_retries_total{site=h2d} missing or zero "
+                "after an injected transient burst — the fetch-layer "
+                f"retry counter is miswired: {frow}"
+            )
+            print(
+                "scrape gate passed: serving counters == ServerStats, "
+                f"transient_retries={frow['scrape_transient_retries']:.0f}"
+            )
         if args.assert_recovery:
             assert frow["failed"] == 0 and frow["timeouts"] == 0, (
                 f"faulted wave shed/failed requests: {frow}"
@@ -242,7 +352,13 @@ def main():
                 f"{frow['faults_fired']} faults absorbed, "
                 f"{frow['server_retries']} server retries, 0 failures"
             )
+    if args.trace_out:
+        tlines, _ = run_traced_disk(
+            args.trace_out, smoke=args.smoke, payload=payload
+        )
+        print("\n".join(tlines))
     if args.out:
+        stamp(payload, bench="serving", smoke=args.smoke)
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.out}")

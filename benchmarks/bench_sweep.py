@@ -48,9 +48,13 @@ import sys
 
 import numpy as np
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))  # so `benchmarks._util` resolves as a script
+sys.path.insert(0, str(_ROOT / "src"))
 
 import jax  # noqa: E402
+
+from benchmarks._util import stamp  # noqa: E402
 
 from repro.core import BFS, ExecutionPlan, GraphSession, PageRank, build_dsss  # noqa: E402
 from repro.core import session as session_mod  # noqa: E402
@@ -566,6 +570,7 @@ def main(argv=None):
             f"{len(report['powerlaw'])} power-law configurations"
         )
     out = pathlib.Path(args.out)
+    stamp(report, bench="sweep", smoke=args.smoke)
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {out}")
     return report

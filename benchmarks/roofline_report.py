@@ -96,6 +96,45 @@ def fmt_execution_table(n, m, P=32, padding_ratio=1.1, weighted=True):
     return "\n".join(lines)
 
 
+def fmt_trace_vs_roofline(trace_path, padding_ratio=1.1):
+    """Measured per-sweep time (from an exported engine trace) against the
+    analytic roofline of the backend that actually ran.
+
+    The trace's "run" spans carry graph shape and backend; their "sweep"
+    children carry measured wall time. ``measured/roofline`` is mean
+    sweep time over the model's binding time — ≫1 means the backend is
+    leaving roofline on the table (dispatch overhead, host scheduling);
+    ≈1 is as fast as the memory system allows.
+    """
+    from repro.runtime.trace_analysis import load_events, run_summaries
+
+    summaries = run_summaries(load_events(trace_path))
+    hdr = (
+        "| run | program | backend | residency | n | m | sweeps | "
+        "measured sweep (ms) | roofline (ms) | measured/roofline |"
+    )
+    lines = [hdr, "|" + "---|" * 10]
+    for r in summaries:
+        if not r["n"] or not r["m"] or not r["sweeps"]:
+            continue
+        model = sweep_execution_model(
+            r["n"], r["m"], P=r["P"] or 32, padding_ratio=padding_ratio
+        )
+        backend = (
+            r["execution"] if r["execution"] in model else "per_block"
+        )
+        mm = model[backend]
+        bound_s = max(mm["memory_s"], mm["compute_s"])
+        meas = r["mean_sweep_s"]
+        lines.append(
+            f"| {r['run']} | {r['program']} | {backend} | "
+            f"{r['residency']} | {r['n']:,} | {r['m']:,} | {r['sweeps']} | "
+            f"{meas * 1e3:.3f} | {bound_s * 1e3:.3f} | "
+            f"{meas / bound_s:.1f}x |"
+        )
+    return "\n".join(lines)
+
+
 def load_all(out_dir: str = "results/dryrun"):
     rows = []
     for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
@@ -142,7 +181,17 @@ def main(argv=None):
         help="adaptive-packing padded/raw edge ratio for the execution "
         "model (bench_sweep.py measures ~1.0–1.1 on power-law graphs)",
     )
+    ap.add_argument(
+        "--trace", default=None,
+        help="exported engine trace (Chrome JSON or .jsonl span dump); "
+        "report measured per-sweep time vs the roofline model per "
+        "execution backend instead of the dry-run tables",
+    )
     args = ap.parse_args(argv)
+    if args.trace:
+        print(f"\n### measured vs roofline ({args.trace})\n")
+        print(fmt_trace_vs_roofline(args.trace, args.padding_ratio))
+        return
     rows = load_all(args.out_dir)
     for mesh in ("single", "multi"):
         print(f"\n### mesh: {mesh}\n")

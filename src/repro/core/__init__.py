@@ -12,7 +12,7 @@
 - :mod:`repro.core.distributed` — shard_map 2-D partitioned multi-pod engine
 """
 from repro.core.dsss import DSSSGraph, PackedSweep, SubShard, build_dsss
-from repro.core.plan import CheckpointSpec, ExecutionPlan
+from repro.core.plan import CheckpointSpec, ExecutionPlan, TraceSpec
 from repro.core.session import (
     BatchResult,
     GraphSession,
@@ -65,6 +65,7 @@ __all__ = [
     "GraphSession",
     "ExecutionPlan",
     "CheckpointSpec",
+    "TraceSpec",
     "BatchResult",
     "get_session",
     "clear_session_cache",

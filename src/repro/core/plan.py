@@ -23,9 +23,10 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.vertex_programs import VertexProgram
+from repro.obs.trace import TraceSpec
 from repro.reliability.checkpoint import CheckpointSpec
 
-__all__ = ["CheckpointSpec", "ExecutionPlan", "FrozenArray"]
+__all__ = ["CheckpointSpec", "ExecutionPlan", "FrozenArray", "TraceSpec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +118,15 @@ class ExecutionPlan:
         (keep-N pruned), and ``session.run(plan, resume_from=...)``
         restores one and continues, bit-identical to an uninterrupted
         run.
+      trace: structured tracing (:class:`repro.obs.TraceSpec`) — ``None``
+        (default) records nothing beyond what a globally enabled
+        ``repro.obs.TRACER`` captures; a spec turns the span recorder on
+        for this run (staging, per-sweep byte deltas, checkpoint writes)
+        and, when ``trace.path`` is set, exports the run's spans as
+        Perfetto-loadable Chrome ``trace_event`` JSON on completion.
+        Observational only: deliberately *excluded* from
+        :meth:`batch_key`, so traced and untraced requests still fuse (a
+        fused batch traces under its first member's spec).
       program_kwargs: Initialize kwargs (e.g. ``{"root": 3}``). Arrays are
         frozen by content; pass a mapping, it is normalized to a sorted
         tuple in ``__post_init__``. Names are validated against
@@ -133,6 +143,7 @@ class ExecutionPlan:
     execution: str | None = None
     activity: str = "auto"
     checkpoint: CheckpointSpec | None = None
+    trace: TraceSpec | None = None
     program_kwargs: Any = ()
 
     def __post_init__(self):
@@ -142,6 +153,11 @@ class ExecutionPlan:
             raise TypeError(
                 "checkpoint must be a repro.reliability.CheckpointSpec or "
                 f"None, got {type(self.checkpoint).__name__}"
+            )
+        if self.trace is not None and not isinstance(self.trace, TraceSpec):
+            raise TypeError(
+                "trace must be a repro.obs.TraceSpec or None, "
+                f"got {type(self.trace).__name__}"
             )
         if self.residency not in (None, "device", "host", "disk", "auto"):
             raise ValueError(

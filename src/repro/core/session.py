@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import os
 import time
 import weakref
@@ -108,11 +109,14 @@ from repro.core.iomodel import (
     IOParams,
     PACKED_SLOT_BYTES,
     StrategyChoice,
+    modelled_io,
     mpu_q,
     select_strategy,
 )
 from repro.core.plan import ExecutionPlan
 from repro.core.vertex_programs import VertexProgram, reduce_identity
+from repro.obs.registry import REGISTRY as _REGISTRY
+from repro.obs.trace import TRACER as _TRACER
 from repro.reliability.checkpoint import (
     SnapshotError,
     latest_snapshot,
@@ -153,6 +157,49 @@ MODEL_METER_FIELDS = (
     "blocks_skipped",
     "edges_processed",
 )
+
+
+# ---------------------------------------------------------------------------
+# Observability handles (repro.obs). The byte counter is incremented on the
+# same lines that charge the corresponding Meters field — physical kinds
+# (h2d, disk_read) at the transfer/mmap boundary, model kinds per sweep —
+# so a run's registry deltas recombine field-for-field with Result.meters
+# (tests/test_obs.py). All no-ops under REPRO_OBS=0.
+# ---------------------------------------------------------------------------
+_OBS_BYTES = _REGISTRY.counter(
+    "repro_engine_bytes_total",
+    "Engine bytes moved/charged, by Meters field (bytes_<kind>)",
+    ("kind",),
+)
+_OBS_H2D = _OBS_BYTES.labels(kind="h2d")
+_OBS_DISK = _OBS_BYTES.labels(kind="disk_read")
+# Model-unit byte fields, charged as per-sweep deltas in _execute.
+_OBS_MODEL_BYTES = tuple(
+    (f, _OBS_BYTES.labels(kind=f[len("bytes_"):]))
+    for f in MODEL_METER_FIELDS
+    if f.startswith("bytes_")
+)
+_OBS_SWEEPS = _REGISTRY.counter(
+    "repro_engine_sweeps_total", "Update sweeps executed"
+)
+_OBS_RUNS = _REGISTRY.counter(
+    "repro_engine_runs_total",
+    "Engine runs completed",
+    ("program", "strategy", "residency", "execution"),
+)
+_OBS_PEAK = _REGISTRY.gauge(
+    "repro_engine_peak_device_graph_bytes",
+    "Device-held topology high-water mark of the last run (model units)",
+)
+_OBS_DRIFT = _REGISTRY.gauge(
+    "repro_iomodel_drift_ratio",
+    "Measured/modelled per-iteration slow-tier bytes of the last run with "
+    "a Table II closed form (1.0 = the exactness contract holds live)",
+    ("direction", "strategy"),
+)
+# Monotone per-process run ids, linking "sweep"/"checkpoint" trace spans
+# to their enclosing "run" span's metadata.
+_RUN_SEQ = itertools.count(1)
 
 
 @dataclasses.dataclass
@@ -1375,9 +1422,12 @@ def _packed_host_sweep(
     for idx in range(len(starts)):
         nxt = fetch(idx + 1) if idx + 1 < len(starts) else None
         host, dev, model, cached = cur
-        meters.bytes_h2d += _chunk_nbytes(host)
+        nb = _chunk_nbytes(host)
+        meters.bytes_h2d += nb
+        _OBS_H2D.inc(nb)
         if disk and not cached:
-            meters.bytes_disk_read += _chunk_nbytes(host)
+            meters.bytes_disk_read += nb
+            _OBS_DISK.inc(nb)
         live = pin_model + model + (nxt[2] if nxt is not None else 0.0)
         meters.peak_device_graph_bytes = max(
             meters.peak_device_graph_bytes, live
@@ -1560,9 +1610,14 @@ class _StagedGraph:
     def device_blocks(self) -> dict[tuple[int, int], dict]:
         """The all-on-device block dict (staged once, residency="device")."""
         if self._device_blocks is None:
-            self._device_blocks = {
-                key: _device_block(host) for key, host in self.host_blocks.items()
-            }
+            with _TRACER.span(
+                "stage_device_blocks", cat="staging",
+                blocks=len(self.host_blocks),
+            ):
+                self._device_blocks = {
+                    key: _device_block(host)
+                    for key, host in self.host_blocks.items()
+                }
         return self._device_blocks
 
     def packed_host(self, mode: str):
@@ -1582,7 +1637,10 @@ class _StagedGraph:
                 if stored is not None and stored.mode == mode:
                     packed = stored
             if packed is None:
-                packed = self.graph.packed_sweep(mode)
+                with _TRACER.span(
+                    "stage_packed_host", cat="staging", mode=mode
+                ):
+                    packed = self.graph.packed_sweep(mode)
             self._packed_host[mode] = packed
         return packed
 
@@ -1603,9 +1661,13 @@ class _StagedGraph:
             from repro.kernels.ops import prepare_packed_tiles
 
             packed = self.packed_host(mode)
-            tiles = prepare_packed_tiles(
-                packed, has_weights=packed.weights is not None
-            )
+            with _TRACER.span(
+                "stage_packed_tiles", cat="staging",
+                mode=mode, tiles=int(packed.num_tiles),
+            ):
+                tiles = prepare_packed_tiles(
+                    packed, has_weights=packed.weights is not None
+                )
             self._packed_tiles[mode] = tiles
         return tiles
 
@@ -1712,7 +1774,9 @@ class _BlockFetcher:
             if key in self._host_cached:
                 return self._session._host_cache_block(key)
             host = self._session._staged.host_blocks[key]
-            self._meters.bytes_disk_read += _host_block_nbytes(host)
+            nb = _host_block_nbytes(host)
+            self._meters.bytes_disk_read += nb
+            _OBS_DISK.inc(nb)
             return host
         return self._session._staged.host_blocks[key]
 
@@ -1729,7 +1793,9 @@ class _BlockFetcher:
         blk = with_transient_retries(
             self._inj, f"block:{key[0]},{key[1]}", lambda: _device_block(host)
         )
-        self._meters.bytes_h2d += _host_block_nbytes(host)
+        nb = _host_block_nbytes(host)
+        self._meters.bytes_h2d += nb
+        _OBS_H2D.inc(nb)
         return blk
 
     def _prefetch(self, key: tuple[int, int]) -> None:
@@ -2263,8 +2329,11 @@ class GraphSession:
             self._packed_pins = (0, None, 0.0, 0.0)
             return None, 0.0
         packed = self._staged.packed_host(self.packing)
-        host = _packed_host_chunk(packed, 0, pin_tiles, self.has_weights)
-        dev = jax.device_put(host)
+        with _TRACER.span(
+            "stage_packed_pins", cat="staging", tiles=pin_tiles
+        ):
+            host = _packed_host_chunk(packed, 0, pin_tiles, self.has_weights)
+            dev = jax.device_put(host)
         model = float(packed.e_valid[:pin_tiles].sum()) * self.Be
         actual = float(_chunk_nbytes(host))
         self._packed_pins = (pin_tiles, dev, model, actual)
@@ -2286,11 +2355,16 @@ class GraphSession:
         """Whole-graph edge arrays for the fused path, staged lazily once."""
         if self._staged.fused is None:
             g = self.graph
-            self._staged.fused = dict(
-                src=jnp.asarray(g.src, jnp.int32),
-                dst=jnp.asarray(g.dst, jnp.int32),
-                weights=None if g.weights is None else jnp.asarray(g.weights),
-            )
+            with _TRACER.span(
+                "stage_fused", cat="staging", m=int(g.m)
+            ):
+                self._staged.fused = dict(
+                    src=jnp.asarray(g.src, jnp.int32),
+                    dst=jnp.asarray(g.dst, jnp.int32),
+                    weights=(
+                        None if g.weights is None else jnp.asarray(g.weights)
+                    ),
+                )
         return self._staged.fused
 
     def kernel_operands(
@@ -2482,9 +2556,17 @@ class GraphSession:
         self._packed_pins = None
         for key in [k for k in self._pinned if k not in resident]:
             del self._pinned[key]
-        for key in sorted(resident):
-            if key in self.block_keys and key not in self._pinned:
-                self._pinned[key] = _device_block(self.host_blocks[key])
+        todo = [
+            key
+            for key in sorted(resident)
+            if key in self.block_keys and key not in self._pinned
+        ]
+        if todo:
+            with _TRACER.span(
+                "stage_pins", cat="staging", blocks=len(todo)
+            ):
+                for key in todo:
+                    self._pinned[key] = _device_block(self.host_blocks[key])
         return self._pinned
 
     def _interval_aux(self, aux: dict, k: int, batched: bool = False) -> dict:
@@ -2709,6 +2791,34 @@ class GraphSession:
         activity_log = [np.asarray(row) for row in arrays["activity_log"]]
         return attrs, active, converged_at, int(meta["sweeps"]), activity_log
 
+    def _publish_iomodel_drift(self, compiled, meters: Meters) -> None:
+        """Gauge the measured-vs-modelled byte ratio for this run.
+
+        Per direction: (measured model-unit bytes per sweep) / (Table II
+        closed-form bytes per sweep). 1.0 means the engine moved exactly
+        what the paper's model predicts; activity-selective runs drift
+        below 1.0 as the frontier shrinks. Strategies without a closed
+        form (custom registrations) publish nothing.
+        """
+        iters = meters.iterations
+        if not iters:
+            return
+        strategy = compiled.choice.strategy
+        try:
+            read, write = modelled_io(
+                compiled.params, self.memory_budget, strategy
+            )
+        except ValueError:
+            return
+        if read > 0:
+            _OBS_DRIFT.labels(direction="read", strategy=strategy).set(
+                meters.bytes_read / iters / read
+            )
+        if write > 0:
+            _OBS_DRIFT.labels(direction="write", strategy=strategy).set(
+                meters.bytes_written / iters / write
+            )
+
     def _execute(
         self,
         plan: ExecutionPlan,
@@ -2745,96 +2855,179 @@ class GraphSession:
                 "the batched-aux vmap); run them individually"
             )
         meters = Meters()
-        # Per-block host/disk runs pin the resident set here; packed
-        # host/disk runs pin a tile prefix lazily inside the sweep (the
-        # block pins would double-book the device). Device runs leave
-        # pins untouched.
-        streamed = compiled.residency in ("host", "disk")
-        pinned = (
-            self._ensure_pinned(compiled.resident)
-            if streamed and compiled.execution == "per_block"
-            else {}
-            if streamed
-            else self._pinned
-        )
-        fetcher = _BlockFetcher(self, compiled, meters, pinned)
-        if compiled.choice.strategy == "fused":
-            # The fused path holds the whole edge list on device by design
-            # (its point is HBM residency); report that honestly.
-            meters.peak_device_graph_bytes = max(
-                meters.peak_device_graph_bytes, float(g.m * self.Be)
+        # Observability: plan-scoped tracing turns the process recorder on
+        # for this run's duration — staging/pinning included, so the flip
+        # happens before the pins below. Per-sweep spans carry the sweep's
+        # *physical* byte deltas (their sum over a fresh run equals
+        # Result.meters.bytes_h2d / bytes_disk_read exactly — h2d/disk are
+        # only ever charged inside sweeps). Model-unit byte counters are
+        # published per sweep as meter deltas; the physical kinds are
+        # published at the transfer/mmap boundaries themselves.
+        tspec = plan.trace
+        obs_on = _REGISTRY.enabled
+        was_tracing = _TRACER.enabled
+        tracing = was_tracing or tspec is not None
+        trace_sweeps = tracing and (tspec is None or tspec.sweeps)
+        run_id = next(_RUN_SEQ)
+        mark = _TRACER.mark() if tracing else 0
+        if tracing and not was_tracing:
+            _TRACER.enabled = True
+        try:
+            # Per-block host/disk runs pin the resident set here; packed
+            # host/disk runs pin a tile prefix lazily inside the sweep (the
+            # block pins would double-book the device). Device runs leave
+            # pins untouched.
+            streamed = compiled.residency in ("host", "disk")
+            pinned = (
+                self._ensure_pinned(compiled.resident)
+                if streamed and compiled.execution == "per_block"
+                else {}
+                if streamed
+                else self._pinned
             )
-        ctx = _RunContext(
-            session=self,
-            program=prog,
-            choice=compiled.choice,
-            resident=compiled.resident,
-            params=compiled.params,
-            aux=aux,
-            # Hoisted: all P interval views of the (run-constant) aux are
-            # sliced once here, not per (i, j) block inside the sweeps.
-            aux_views=[
-                self._interval_aux(aux, k, batched=aux_batched)
-                for k in range(g.P)
-            ],
-            valid=(jnp.arange(g.n_pad) < g.n).reshape(g.P, isz),
-            tol=jnp.asarray(plan.tol, jnp.float32),
-            K=K,
-            residency=compiled.residency,
-            fetcher=fetcher,
-            activity=compiled.activity,
-            aux_batched=aux_batched,
-            execution=compiled.execution,
-        )
-        if compiled.execution in ("packed", "packed_kernel"):
-            iteration = _iteration_packed
-        else:
-            iteration = self._strategies[compiled.choice.strategy]
-        converged_at: list[int | None] = [
-            0 if not active[m].any() else None for m in range(K)
-        ]
-        sweeps = 0
-        activity_log: list[np.ndarray] = []
-        wall0 = 0.0
-        snap_path = self._resolve_resume(plan, resume_from)
-        if snap_path is not None:
-            attrs, active, converged_at, sweeps, activity_log = (
-                self._restore_sweep_snapshot(snap_path, plan, K, meters)
-            )
-            wall0 = meters.wall_seconds
-        ckpt = plan.checkpoint
-        inj = self._injector
-        start = time.perf_counter()
-        for _ in range(sweeps, plan.max_iters):
-            if not active.any():
-                break
-            # Cooperative cancellation (serving deadlines) and injected
-            # crashes both land here, on the sweep boundary — never
-            # mid-sweep, so checkpointed state is always consistent.
-            if cancel is not None:
-                cancel(sweeps)
-            if inj is not None:
-                inj.check("sweep", sweeps)
-            # Record the sweep's processed-interval bitmap (the union
-            # _rows_to_process acts on) before the sweep mutates `active`
-            # — this is the trace the iomodel activity terms consume.
-            if compiled.activity == "selective":
-                activity_log.append(active.any(axis=0).copy())
-            else:
-                activity_log.append(np.ones(g.P, dtype=bool))
-            attrs, active = iteration(ctx, attrs, active, meters)
-            sweeps += 1
-            meters.iterations += 1
-            for m in range(K):
-                if converged_at[m] is None and not active[m].any():
-                    converged_at[m] = sweeps
-            if ckpt is not None and sweeps % ckpt.every == 0:
-                self._save_sweep_snapshot(
-                    ckpt, plan, attrs, active, converged_at, sweeps,
-                    activity_log, meters,
-                    wall0 + (time.perf_counter() - start),
+            fetcher = _BlockFetcher(self, compiled, meters, pinned)
+            if compiled.choice.strategy == "fused":
+                # The fused path holds the whole edge list on device by
+                # design (its point is HBM residency); report that honestly.
+                meters.peak_device_graph_bytes = max(
+                    meters.peak_device_graph_bytes, float(g.m * self.Be)
                 )
-        meters.wall_seconds = wall0 + (time.perf_counter() - start)
+            ctx = _RunContext(
+                session=self,
+                program=prog,
+                choice=compiled.choice,
+                resident=compiled.resident,
+                params=compiled.params,
+                aux=aux,
+                # Hoisted: all P interval views of the (run-constant) aux
+                # are sliced once here, not per (i, j) block inside the
+                # sweeps.
+                aux_views=[
+                    self._interval_aux(aux, k, batched=aux_batched)
+                    for k in range(g.P)
+                ],
+                valid=(jnp.arange(g.n_pad) < g.n).reshape(g.P, isz),
+                tol=jnp.asarray(plan.tol, jnp.float32),
+                K=K,
+                residency=compiled.residency,
+                fetcher=fetcher,
+                activity=compiled.activity,
+                aux_batched=aux_batched,
+                execution=compiled.execution,
+            )
+            if compiled.execution in ("packed", "packed_kernel"):
+                iteration = _iteration_packed
+            else:
+                iteration = self._strategies[compiled.choice.strategy]
+            converged_at: list[int | None] = [
+                0 if not active[m].any() else None for m in range(K)
+            ]
+            sweeps = 0
+            activity_log: list[np.ndarray] = []
+            wall0 = 0.0
+            snap_path = self._resolve_resume(plan, resume_from)
+            if snap_path is not None:
+                attrs, active, converged_at, sweeps, activity_log = (
+                    self._restore_sweep_snapshot(snap_path, plan, K, meters)
+                )
+                wall0 = meters.wall_seconds
+            ckpt = plan.checkpoint
+            inj = self._injector
+            start = time.perf_counter()
+            for _ in range(sweeps, plan.max_iters):
+                if not active.any():
+                    break
+                # Cooperative cancellation (serving deadlines) and injected
+                # crashes both land here, on the sweep boundary — never
+                # mid-sweep, so checkpointed state is always consistent.
+                if cancel is not None:
+                    cancel(sweeps)
+                if inj is not None:
+                    inj.check("sweep", sweeps)
+                # Record the sweep's processed-interval bitmap (the union
+                # _rows_to_process acts on) before the sweep mutates `active`
+                # — this is the trace the iomodel activity terms consume.
+                if compiled.activity == "selective":
+                    activity_log.append(active.any(axis=0).copy())
+                else:
+                    activity_log.append(np.ones(g.P, dtype=bool))
+                if obs_on or trace_sweeps:
+                    s_h2d = meters.bytes_h2d
+                    s_disk = meters.bytes_disk_read
+                    s_model = [getattr(meters, f) for f, _ in _OBS_MODEL_BYTES]
+                    t_sweep = time.perf_counter()
+                attrs, active = iteration(ctx, attrs, active, meters)
+                sweeps += 1
+                meters.iterations += 1
+                if obs_on:
+                    _OBS_SWEEPS.inc()
+                    for (f, child), before in zip(_OBS_MODEL_BYTES, s_model):
+                        delta = getattr(meters, f) - before
+                        if delta:
+                            child.inc(delta)
+                if trace_sweeps:
+                    _TRACER.record(
+                        "sweep", t_sweep, time.perf_counter(), cat="engine",
+                        args={
+                            "run": run_id,
+                            "sweep": sweeps - 1,
+                            "bytes_h2d": meters.bytes_h2d - s_h2d,
+                            "bytes_disk_read": meters.bytes_disk_read - s_disk,
+                            "active_intervals": int(activity_log[-1].sum()),
+                            "intervals": int(g.P),
+                        },
+                    )
+                for m in range(K):
+                    if converged_at[m] is None and not active[m].any():
+                        converged_at[m] = sweeps
+                if ckpt is not None and sweeps % ckpt.every == 0:
+                    t_ck = time.perf_counter()
+                    self._save_sweep_snapshot(
+                        ckpt, plan, attrs, active, converged_at, sweeps,
+                        activity_log, meters,
+                        wall0 + (t_ck - start),
+                    )
+                    if tracing:
+                        _TRACER.record(
+                            "checkpoint", t_ck, time.perf_counter(),
+                            cat="engine",
+                            args={"run": run_id, "sweep": sweeps},
+                        )
+            end = time.perf_counter()
+            meters.wall_seconds = wall0 + (end - start)
+            if tracing:
+                _TRACER.record(
+                    "run", start, end, cat="engine",
+                    args={
+                        "run": run_id,
+                        "program": prog.name,
+                        "strategy": compiled.choice.strategy,
+                        "residency": compiled.residency,
+                        "execution": compiled.execution,
+                        "K": K,
+                        "n": int(g.n),
+                        "m": int(g.m),
+                        "P": int(g.P),
+                        "sweeps": sweeps,
+                        "bytes_h2d": meters.bytes_h2d,
+                        "bytes_disk_read": meters.bytes_disk_read,
+                        "converged": bool(not active.any()),
+                    },
+                )
+                if tspec is not None and tspec.path:
+                    _TRACER.export(tspec.path, since=mark)
+        finally:
+            if tracing and not was_tracing:
+                _TRACER.enabled = was_tracing
+        if obs_on:
+            _OBS_RUNS.labels(
+                program=prog.name,
+                strategy=compiled.choice.strategy,
+                residency=compiled.residency,
+                execution=compiled.execution,
+            ).inc()
+            _OBS_PEAK.set(meters.peak_device_graph_bytes)
+            self._publish_iomodel_drift(compiled, meters)
         results = []
         for m in range(K):
             flat = attrs[m].reshape(-1)

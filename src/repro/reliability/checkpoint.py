@@ -28,6 +28,15 @@ import os
 
 import numpy as np
 
+from repro.obs.registry import REGISTRY as _REGISTRY
+
+_OBS_SAVES = _REGISTRY.counter(
+    "repro_checkpoint_saves_total", "Checkpoint snapshots published"
+)
+_OBS_SAVE_BYTES = _REGISTRY.counter(
+    "repro_checkpoint_bytes_total", "Bytes of published checkpoint snapshots"
+)
+
 __all__ = [
     "CheckpointSpec",
     "SnapshotError",
@@ -123,6 +132,8 @@ def save_snapshot(
         os.fsync(dirfd)
     finally:
         os.close(dirfd)
+    _OBS_SAVES.inc()
+    _OBS_SAVE_BYTES.inc(os.path.getsize(final))
     # Prune after publish: the new snapshot is durable before any old one
     # dies, so a crash anywhere in here leaves >= keep restorable states.
     snaps = list_snapshots(directory)

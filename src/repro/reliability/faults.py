@@ -41,6 +41,15 @@ import dataclasses
 import time
 import zlib
 
+from repro.obs.registry import REGISTRY as _REGISTRY
+
+_OBS_RETRIES = _REGISTRY.counter(
+    "repro_transient_retries_total",
+    "Transient-fault retries at transfer boundaries",
+    ("site",),
+)
+_OBS_RETRIES_H2D = _OBS_RETRIES.labels(site="h2d")
+
 __all__ = [
     "DeadlineExceeded",
     "FailureInjector",
@@ -337,6 +346,7 @@ def with_transient_retries(
         except TransientFault:
             if attempt >= retries:
                 raise
+            _OBS_RETRIES_H2D.inc()
             time.sleep(backoff_s * (2.0**attempt))
             attempt += 1
 

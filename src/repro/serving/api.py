@@ -159,12 +159,72 @@ class ServerStats:
     mean_run_s: float = 0.0
     mean_total_s: float = 0.0
     max_total_s: float = 0.0
+    # Estimated from the server's fixed-bucket latency histogram
+    # (repro.obs.DEFAULT_LATENCY_BUCKETS) — exact at bucket edges.
+    p50_total_s: float = 0.0
+    p95_total_s: float = 0.0
+    p99_total_s: float = 0.0
     meters: Meters = dataclasses.field(default_factory=Meters)
     pool: Any = None  # PoolStats of the backing SessionPool
+
+    #: Monotone request/batch tallies — published as ``repro_serving_
+    #: <field>_total`` counters.
+    COUNTER_FIELDS = (
+        "submitted", "completed", "rejected", "failed", "timeouts",
+        "retries", "breaker_sheds", "slow_batches", "batches",
+        "fused_batches", "batched_requests", "admission_overflows",
+    )
+    #: Point-in-time levels/derived rates — published as ``repro_serving_
+    #: <field>`` gauges.
+    GAUGE_FIELDS = (
+        "max_occupancy", "queue_depth", "inflight_bytes",
+        "peak_inflight_bytes", "qps", "mean_queue_s", "mean_run_s",
+        "mean_total_s", "max_total_s", "p50_total_s", "p95_total_s",
+        "p99_total_s",
+    )
 
     @property
     def mean_occupancy(self) -> float:
         return self.batched_requests / self.batches if self.batches else 0.0
+
+    def to_metrics(self, registry=None) -> None:
+        """Publish this snapshot into ``registry`` (default: process-wide).
+
+        Snapshot-set semantics: every serving series is *set* to the
+        snapshot's value rather than incremented, so a ``/metrics``
+        scrape taken right after ``to_metrics`` reads numbers equal to
+        this object field-for-field (``GraphServer`` wires this as the
+        telemetry endpoint's ``on_scrape`` hook — the CI consistency
+        gate relies on the equality). The accumulated serving ``meters``
+        go out as ``repro_serving_meters_total{field=...}``, one series
+        per :class:`~repro.core.session.Meters` field, so per-request
+        ``split_meters`` shares provably re-sum to the scraped totals.
+        """
+        from repro.obs.registry import REGISTRY
+
+        reg = registry if registry is not None else REGISTRY
+        for f in self.COUNTER_FIELDS:
+            reg.counter(
+                f"repro_serving_{f}_total", f"ServerStats.{f} snapshot"
+            ).set(getattr(self, f))
+        for f in self.GAUGE_FIELDS:
+            reg.gauge(
+                f"repro_serving_{f}", f"ServerStats.{f} snapshot"
+            ).set(getattr(self, f))
+        reg.gauge(
+            "repro_serving_mean_occupancy", "Requests per dispatched batch"
+        ).set(self.mean_occupancy)
+        meters_fam = reg.counter(
+            "repro_serving_meters_total",
+            "Accumulated serving Meters, by field",
+            ("field",),
+        )
+        for f in dataclasses.fields(Meters):
+            meters_fam.labels(field=f.name).set(
+                float(getattr(self.meters, f.name))
+            )
+        if self.pool is not None and hasattr(self.pool, "to_metrics"):
+            self.pool.to_metrics(reg)
 
 
 def _split_integral(total: int, k: int) -> list[int]:

@@ -38,6 +38,12 @@ from typing import Any
 
 from repro.core.dsss import DSSSGraph
 from repro.core.session import GraphSession
+from repro.obs.registry import REGISTRY as _REGISTRY
+
+_OBS_BREAKER_TRIPS = _REGISTRY.counter(
+    "repro_pool_breaker_trips_total",
+    "Circuit breakers (re-)tripped by consecutive failures",
+)
 
 __all__ = ["CircuitOpenError", "PoolStats", "SessionPool"]
 
@@ -58,6 +64,21 @@ class PoolStats:
     evictions: int = 0
     hits: int = 0  # session() calls served by an already-open session
     breakers_open: int = 0  # graphs currently shedding via CircuitOpenError
+
+    def to_metrics(self, registry=None) -> None:
+        """Publish this snapshot (snapshot-set, like ``ServerStats``)."""
+        from repro.obs.registry import REGISTRY
+
+        reg = registry if registry is not None else REGISTRY
+        for f in ("registered", "open_sessions", "staged_bytes",
+                  "breakers_open"):
+            reg.gauge(f"repro_pool_{f}", f"PoolStats.{f} snapshot").set(
+                getattr(self, f)
+            )
+        for f in ("opens", "evictions", "hits"):
+            reg.counter(
+                f"repro_pool_{f}_total", f"PoolStats.{f} snapshot"
+            ).set(getattr(self, f))
 
 
 @dataclasses.dataclass
@@ -241,6 +262,7 @@ class SessionPool:
                 and entry.failures >= self.breaker_threshold
             ):
                 entry.open_until = time.monotonic() + self.breaker_cooldown_s
+                _OBS_BREAKER_TRIPS.inc()
                 return True
             return False
 

@@ -63,6 +63,13 @@ from typing import Sequence
 
 from repro.core.plan import ExecutionPlan
 from repro.core.session import BatchResult, GraphSession, Meters
+from repro.obs.http import TelemetryServer
+from repro.obs.registry import (
+    DEFAULT_LATENCY_BUCKETS,
+    HistogramValue,
+    REGISTRY as _REGISTRY,
+)
+from repro.obs.trace import TRACER as _TRACER
 from repro.reliability.faults import (
     DeadlineExceeded,
     StragglerWatchdog,
@@ -79,6 +86,14 @@ from repro.serving.api import (
 from repro.serving.pool import CircuitOpenError, SessionPool
 
 __all__ = ["GraphServer", "estimate_inflight_bytes", "estimate_inflight_parts"]
+
+# Process-wide end-to-end request latency (enqueue → completion); each
+# GraphServer additionally owns an ungated per-server HistogramValue for
+# its own p50/p95/p99 so stats are not polluted across servers.
+_OBS_LATENCY = _REGISTRY.histogram(
+    "repro_serving_request_latency_seconds",
+    "End-to-end serving request latency (enqueue to completion)",
+)
 
 
 def estimate_inflight_parts(
@@ -161,7 +176,15 @@ class _Pending:
 
 
 class GraphServer:
-    """Async graph-query server over a :class:`SessionPool`."""
+    """Async graph-query server over a :class:`SessionPool`.
+
+    ``telemetry_port`` (e.g. ``0`` for an ephemeral port) attaches a
+    scrapeable :class:`repro.obs.TelemetryServer` for the server's
+    lifetime: ``GET /metrics`` publishes a fresh :class:`ServerStats`/
+    ``PoolStats`` snapshot and renders the process registry as Prometheus
+    text; ``GET /healthz`` reports breaker state and queue depth (HTTP
+    503 when degraded). ``None`` (default) starts no endpoint.
+    """
 
     def __init__(
         self,
@@ -175,6 +198,8 @@ class GraphServer:
         max_concurrent: int = 2,
         retry_backoff_s: float = 0.005,
         watchdog: StragglerWatchdog | None = None,
+        telemetry_port: int | None = None,
+        telemetry_host: str = "127.0.0.1",
     ):
         if queue_policy not in ("reject", "wait"):
             raise ValueError(
@@ -223,6 +248,23 @@ class GraphServer:
         self._lat_run = 0.0
         self._lat_total = 0.0
         self._lat_max = 0.0
+        # Per-server latency histogram (ungated standalone — always
+        # records) backing stats().p50/p95/p99_total_s.
+        self._lat_hist = HistogramValue(DEFAULT_LATENCY_BUCKETS)
+        # Scrape endpoint: created here, not in start(), so /metrics and
+        # /healthz survive serve() start/stop waves — CI curls counters
+        # after a fault-injection wave has completed. Each scrape runs
+        # publish_metrics first, so scraped serving series equal the
+        # ServerStats snapshot by construction. telemetry_port=0 binds an
+        # ephemeral port (read it back from server.telemetry.address).
+        self.telemetry: TelemetryServer | None = None
+        if telemetry_port is not None:
+            self.telemetry = TelemetryServer(
+                health_fn=self._health,
+                on_scrape=self.publish_metrics,
+                host=telemetry_host,
+                port=telemetry_port,
+            ).start()
 
     # -- lifecycle -----------------------------------------------------------
     async def start(self) -> "GraphServer":
@@ -332,9 +374,46 @@ class GraphServer:
             mean_run_s=self._lat_run / done if done else 0.0,
             mean_total_s=self._lat_total / done if done else 0.0,
             max_total_s=self._lat_max,
+            p50_total_s=self._lat_hist.quantile(0.50),
+            p95_total_s=self._lat_hist.quantile(0.95),
+            p99_total_s=self._lat_hist.quantile(0.99),
             meters=dataclasses.replace(s.meters),
             pool=self.pool.stats(),
         )
+
+    def publish_metrics(self, registry=None) -> ServerStats:
+        """Snapshot-set this server's stats into the metrics registry.
+
+        Wired as the telemetry endpoint's ``on_scrape`` hook, so every
+        ``/metrics`` scrape reads serving counters equal to
+        :meth:`stats` field-for-field. Returns the published snapshot.
+        """
+        snap = self.stats()
+        snap.to_metrics(registry)
+        return snap
+
+    def _health(self) -> dict:
+        """The ``/healthz`` document: degraded on open breakers or a
+        saturated queue, ok otherwise."""
+        pool = self.pool.stats()
+        saturated = self._pending >= self.max_queue
+        status = (
+            "degraded" if (pool.breakers_open or saturated) else "ok"
+        )
+        return {
+            "status": status,
+            "running": self._running,
+            "queue_depth": self._pending,
+            "max_queue": self.max_queue,
+            "breakers_open": pool.breakers_open,
+            "inflight_bytes": self._inflight_bytes,
+        }
+
+    def shutdown_telemetry(self) -> None:
+        """Stop the scrape endpoint (if one was started)."""
+        if self.telemetry is not None:
+            self.telemetry.stop()
+            self.telemetry = None
 
     # -- dispatcher ----------------------------------------------------------
     def _largest_bucket_key(self) -> tuple | None:
@@ -375,6 +454,16 @@ class GraphServer:
             if not bucket:
                 del self._buckets[key]
             self._pending -= len(batch)
+            if _TRACER.enabled:
+                _TRACER.instant(
+                    "batch_cut",
+                    cat="serving",
+                    args={
+                        "graph": key[0],
+                        "size": len(batch),
+                        "pending": self._pending,
+                    },
+                )
             async with self._space:
                 self._space.notify_all()
             task = asyncio.create_task(self._run_one_batch(key[0], batch))
@@ -545,6 +634,18 @@ class GraphServer:
                 finally:
                     self.pool.release(graph_key)
             t_done = time.perf_counter()
+            if _TRACER.enabled:
+                _TRACER.record(
+                    "serve_batch",
+                    t_dispatch,
+                    t_done,
+                    cat="serving",
+                    args={
+                        "graph": graph_key,
+                        "size": len(batch),
+                        "fused": bres.fused,
+                    },
+                )
             self.pool.record_success(graph_key)
             if self.watchdog.update(self._stats.batches, t_done - t_dispatch):
                 self._stats.slow_batches += 1
@@ -569,6 +670,8 @@ class GraphServer:
                 self._lat_run += p.timing.run_s
                 self._lat_total += p.timing.total_s
                 self._lat_max = max(self._lat_max, p.timing.total_s)
+                self._lat_hist.observe(p.timing.total_s)
+                _OBS_LATENCY.observe(p.timing.total_s)
                 self._next_id += 1
                 result = QueryResult(
                     request_id=self._next_id,

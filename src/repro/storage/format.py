@@ -46,6 +46,20 @@ from typing import Any, BinaryIO
 import numpy as np
 
 from repro.core.dsss import DSSSGraph, PackedSweep, next_bucket
+from repro.obs.registry import REGISTRY as _REGISTRY
+
+_OBS_READ_RETRIES = _REGISTRY.counter(
+    "repro_storage_read_retries_total",
+    "Checksum-failed segment reads that were retried",
+)
+_OBS_HEALS = _REGISTRY.counter(
+    "repro_storage_heals_total",
+    "Segments that verified after at least one failed read",
+)
+_OBS_QUARANTINES = _REGISTRY.counter(
+    "repro_storage_quarantines_total",
+    "Segments quarantined after retry exhaustion",
+)
 from repro.graph.preprocess import EdgeList
 
 __all__ = [
@@ -531,13 +545,16 @@ class DSSSStore:
                         tile_range=tile_range,
                     )
                     self.quarantined[name] = err
+                    _OBS_QUARANTINES.inc()
                     raise err from exc
+                _OBS_READ_RETRIES.inc()
                 time.sleep(delay)
                 delay *= policy.backoff_factor
                 attempt += 1
             else:
                 if attempt:
                     self.healed_reads += 1
+                    _OBS_HEALS.inc()
                 self._verified.add(name)
                 return
 
